@@ -1,0 +1,97 @@
+"""Paper Fig. 5/6 analogue: aggregation throughput vs compressed size.
+
+The paper measures end-to-end aggregation Gbps on 100 Gbps / 10 Gbps
+clusters. Without that hardware we measure the two halves we *can*:
+
+  - codec throughput: wall-time of jit'd compress / recover on this host
+    (the CPU stand-in for the paper's GPU codec of §3.4), and
+  - wire model: bytes on the link for [sketch + index] vs dense bf16,
+    turned into aggregation throughput at a given link bandwidth.
+
+Aggregation throughput (paper definition: aggregated gradient volume /
+wall time, counting each worker's gradient once) is then
+    throughput = orig_bytes / max(t_codec, t_wire)
+reported for both the dense baseline and the compressed pipeline.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import CompressionConfig, HomomorphicCompressor, CompressedLeaf
+
+N = 1 << 22                  # 4M f32 gradient (16 MiB) per measurement
+SPARSITY = 0.945             # LSTM profile
+LINK_GBPS = {"nccl_100g": 100.0, "ici_v5e": 400.0}
+
+
+def _grad(seed=0):
+    r = np.random.default_rng(seed)
+    x = np.zeros(N, np.float32)
+    k = int(N * (1 - SPARSITY))
+    x[r.choice(N, size=k, replace=False)] = r.standard_normal(k).astype(np.float32)
+    return jnp.asarray(x)
+
+
+def measure(frac: float, workers: int = 4, iters: int = 3) -> Dict:
+    rows = 6 if frac <= 0.4 else 90
+    cfg = CompressionConfig(ratio=frac, lanes=512, rows=rows, rounds=16,
+                            chunk_blocks=256)
+    comp = HomomorphicCompressor(cfg)
+    x = _grad()
+    compress = jax.jit(comp.compress)
+    recover = jax.jit(lambda c: comp.recover(c, N))
+    c = compress(x)
+    jax.block_until_ready(c)
+    xs = [compress(_grad(s)) for s in range(workers)]
+    agg = CompressedLeaf(sketch=sum(cc.sketch for cc in xs),
+                         index_words=xs[0].index_words)
+    for cc in xs[1:]:
+        agg = CompressedLeaf(agg.sketch, agg.index_words | cc.index_words)
+    jax.block_until_ready(recover(agg))
+
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(compress(x))
+    t_comp = (time.perf_counter() - t0) / iters
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(recover(agg))
+    t_rec = (time.perf_counter() - t0) / iters
+
+    wire = comp.wire_bytes(N, grad_bytes_per_elem=4)
+    orig_bytes = N * 4
+    out = {"size_frac": frac, "t_compress_s": t_comp, "t_recover_s": t_rec,
+           "codec_gbps": orig_bytes * 8 / (t_comp + t_rec) / 1e9,
+           "wire_fraction": wire["total_bytes"] / orig_bytes}
+    for name, gbps in LINK_GBPS.items():
+        bw = gbps * 1e9 / 8
+        # ring allreduce: 2 (W-1)/W x bytes on the slowest link
+        ring = 2 * (workers - 1) / workers
+        t_wire_dense = orig_bytes * ring / bw
+        t_wire_comp = wire["total_bytes"] * ring / bw
+        thr_dense = orig_bytes * 8 / t_wire_dense / 1e9
+        thr_comp = orig_bytes * 8 / max(t_wire_comp, t_comp + t_rec) / 1e9
+        out[f"{name}_dense_gbps"] = thr_dense
+        out[f"{name}_ours_gbps"] = thr_comp
+        out[f"{name}_speedup"] = thr_comp / thr_dense
+    return out
+
+
+def main(fracs=(0.02, 0.05, 0.10, 0.25, 0.60, 1.0)):
+    keys = None
+    for frac in fracs:
+        r = measure(frac)
+        if keys is None:
+            keys = list(r)
+            print(",".join(keys))
+        print(",".join(f"{r[k]:.4g}" for k in keys))
+
+
+if __name__ == "__main__":
+    main()

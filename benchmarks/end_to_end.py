@@ -1,0 +1,75 @@
+"""Paper Fig. 7 analogue: per-iteration speedup model for the four
+evaluation models, at the paper's fixed 10% compressed size.
+
+We cannot re-run their A100/2080 clusters, so we model one iteration as
+
+    t_iter = t_compute + max(t_codec, t_wire)
+
+with t_wire from the ring-allreduce byte model at the paper's link
+bandwidths (100 Gbps NCCL cluster, 10 Gbps ATP cluster), t_codec from the
+measured CPU codec scaled per-element, and t_compute chosen such that the
+*dense baseline* matches the paper's stated compute/communication balance
+(e.g. "aggregation takes almost half the time" for BERT on 8 workers).
+The derived speedups are then compared against the paper's reported
+2.01x / 1.31x / 3.45x / 1.17x (NCCL) numbers.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.core import CompressionConfig
+
+MODELS = {  # params, sparsity(zeros frac), paper speedup (NCCL, ATP)
+    "NCF": (29.7e6, 0.989, 2.01, 3.33),
+    "LSTM": (426e6, 0.945, 1.31, 3.37),
+    "VGG19": (140e6, 0.304, 3.45, 3.74),
+    "BERT-base": (109e6, 0.208, 1.17, 1.17),
+}
+# compute:comm ratio of the dense baseline per model (BERT ~ 50/50 per the
+# paper's intro; comm share grows with gradient size / compute density)
+DENSE_COMM_SHARE = {"NCF": 0.65, "LSTM": 0.55, "VGG19": 0.75,
+                    "BERT-base": 0.5}
+CODEC_GBPS = 80.0        # measured-on-CPU order; TPU/GPU codecs are >5x
+
+
+def model_iteration(model: str, link_gbps: float, size_frac: float = 0.10
+                    ) -> Dict:
+    n_params, sparsity, paper_nccl, paper_atp = MODELS[model]
+    cfg = CompressionConfig(ratio=size_frac)
+    wire = cfg.wire_bytes(int(n_params), grad_bytes_per_elem=4)
+    orig_bytes = n_params * 4
+    bw = link_gbps * 1e9 / 8
+    t_wire_dense = orig_bytes * 2 * 7 / 8 / bw        # 8-worker ring
+    comm_share = DENSE_COMM_SHARE[model]
+    t_compute = t_wire_dense * (1 - comm_share) / comm_share
+    t_dense = t_compute + t_wire_dense
+
+    t_codec = orig_bytes * 8 / (CODEC_GBPS * 1e9)
+    # above the lossless threshold? otherwise extra iterations hurt —
+    # the paper observes this for VGG/BERT; model as recovery-rate loss
+    threshold = 1.23 * (1 - sparsity)
+    lossless = size_frac >= threshold
+    t_wire_comp = wire["total_bytes"] * 2 * 7 / 8 / bw
+    t_ours = t_compute + max(t_codec, t_wire_comp)
+    return {
+        "model": model,
+        "lossless_at_10pct": lossless,
+        "t_dense_ms": t_dense * 1e3,
+        "t_ours_ms": t_ours * 1e3,
+        "modeled_speedup": t_dense / t_ours,
+        "paper_speedup": paper_nccl if link_gbps >= 50 else paper_atp,
+    }
+
+
+def main():
+    print("cluster,model,lossless,modeled_speedup,paper_speedup")
+    for name, gbps in (("nccl_100g", 100.0), ("atp_10g", 10.0)):
+        for model in MODELS:
+            r = model_iteration(model, gbps)
+            print(f"{name},{r['model']},{int(r['lossless_at_10pct'])},"
+                  f"{r['modeled_speedup']:.2f},{r['paper_speedup']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

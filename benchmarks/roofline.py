@@ -1,0 +1,131 @@
+"""Roofline report from the dry-run artifacts (paper deliverable g).
+
+Three terms per (arch x shape x mesh), all in seconds per step:
+
+  compute    = corrected_dot_flops_per_device / PEAK_FLOPS
+  memory     = corrected_output_bytes_per_device / HBM_BW
+  collective = corrected_wire_bytes_per_device / ICI_BW
+
+FLOPs/bytes come from :mod:`benchmarks.hlo_analysis` (trip-count
+corrected — see its docstring for why raw cost_analysis undercounts
+scanned layers). Hardware constants per the brief (TPU v5e):
+197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link ICI.
+
+MODEL_FLOPS uses 6*N*D for training (N = active params, D = tokens) and
+2*N*D for decode; the ratio MODEL_FLOPS / corrected-HLO-FLOPs shows how
+much compiled compute is "useful".
+"""
+
+from __future__ import annotations
+
+import glob
+import gzip
+import json
+import os
+from typing import Dict, List, Optional
+
+from . import hlo_analysis as ha
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+MESH_CHIPS = {"single": 256, "multi": 512}
+
+
+def model_flops(rec: dict) -> float:
+    """Analytic MODEL_FLOPS for the whole cluster step."""
+    n = rec["params_active"]
+    if rec["kind"] == "train":
+        tokens = rec["global_batch"] * rec["seq_len"]
+        return 6.0 * n * tokens
+    if rec["kind"] == "prefill":
+        tokens = rec["global_batch"] * rec["seq_len"]
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * rec["global_batch"]
+
+
+def analyze_cell(path: str) -> Optional[dict]:
+    with open(path) as f:
+        rec = json.load(f)
+    if rec.get("status") != "ok":
+        return rec
+    hlo_path = path.replace(".json", ".hlo.gz")
+    if not os.path.exists(hlo_path):
+        rec["roofline"] = None
+        return rec
+    with gzip.open(hlo_path, "rt") as f:
+        summ = ha.analyze(f.read())
+    chips = MESH_CHIPS[rec["mesh"]]
+    compute_s = summ.dot_flops / PEAK_FLOPS
+    memory_s = summ.output_bytes / HBM_BW
+    coll_s = summ.collective_wire_bytes() / ICI_BW
+    mf = model_flops(rec)
+    total_hlo = summ.dot_flops * chips
+    dominant = max((("compute", compute_s), ("memory", memory_s),
+                    ("collective", coll_s)), key=lambda kv: kv[1])[0]
+    bound = max(compute_s, memory_s, coll_s)
+    rec["roofline"] = {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": coll_s,
+        "dominant": dominant,
+        "bound_s": bound,
+        # fraction of the roofline the useful work achieves if the step
+        # ran exactly at the binding term
+        "useful_fraction": (mf / chips / PEAK_FLOPS) / bound if bound else 0.0,
+        "model_flops": mf,
+        "hlo_flops_total": total_hlo,
+        "model_over_hlo": mf / total_hlo if total_hlo else 0.0,
+        "hlo_dot_flops_per_device": summ.dot_flops,
+        "hlo_output_bytes_per_device": summ.output_bytes,
+        "collectives_corrected": summ.collectives,
+    }
+    return rec
+
+
+def report(mesh: str = "single", write: bool = True) -> List[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ART, mesh, "*.json"))):
+        rec = analyze_cell(path)
+        if rec is None:
+            continue
+        rows.append(rec)
+        if write and rec.get("roofline"):
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+    return rows
+
+
+def table(mesh: str = "single") -> str:
+    rows = report(mesh, write=True)
+    out = [f"# Roofline — mesh={mesh} ({MESH_CHIPS[mesh]} chips)",
+           "| arch | shape | status | compute_s | memory_s | collective_s |"
+           " dominant | MODEL/HLO | useful_frac |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['status'].upper()}"
+                       f" | - | - | - | - | - | - |")
+            continue
+        rf = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | ok "
+            f"| {rf['compute_s']:.3e} | {rf['memory_s']:.3e} "
+            f"| {rf['collective_s']:.3e} | {rf['dominant']} "
+            f"| {rf['model_over_hlo']:.2f} | {rf['useful_fraction']:.2f} |")
+    return "\n".join(out)
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    args = ap.parse_args()
+    print(table(args.mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Benchmark driver — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV summary lines at the end, plus
+each suite's own CSV. Roofline sections require dry-run artifacts
+(python -m repro.launch.dryrun --all); they are skipped gracefully when
+absent so this runs on a fresh checkout.
+"""
+
+from __future__ import annotations
+
+import glob
+import os
+import time
+
+
+def _timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def main() -> None:
+    summary = []
+
+    # Fig. 3 / Fig. 4 — recovery accuracy & Topk comparison
+    from . import accuracy
+    print("== accuracy (paper Fig. 3 / Fig. 4) ==")
+    _, us = _timed(accuracy.main)
+    summary.append(("accuracy_sweep", us, "fig3+fig4"))
+
+    # Fig. 5/6 — aggregation throughput
+    from . import aggregation
+    print("\n== aggregation throughput (paper Fig. 5/6) ==")
+    _, us = _timed(aggregation.main)
+    summary.append(("aggregation_throughput", us, "fig5+fig6"))
+
+    # Fig. 7 — per-iteration speedup model
+    from . import end_to_end
+    print("\n== per-iteration speedup (paper Fig. 7) ==")
+    _, us = _timed(end_to_end.main)
+    summary.append(("end_to_end_speedup", us, "fig7"))
+
+    # Roofline (deliverable g) from dry-run artifacts
+    art = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+    from . import roofline
+    for mesh in ("single", "multi"):
+        if glob.glob(os.path.join(art, mesh, "*.json")):
+            print(f"\n== roofline ({mesh}-pod) ==")
+            out, us = _timed(roofline.table, mesh)
+            print(out)
+            summary.append((f"roofline_{mesh}", us, "deliverable_g"))
+        else:
+            print(f"\n== roofline ({mesh}-pod): no artifacts, run "
+                  f"`python -m repro.launch.dryrun --all --mesh {mesh}` ==")
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in summary:
+        print(f"{name},{us:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Distributed demo: the paper's pipeline on a multi-device mesh —
+8 simulated devices, TP-sharded gradients, sketch psum + OR-AllReduce
+ring, lossless recovery. (Runs the same code path the production
+train_step uses.)
+
+    PYTHONPATH=src python examples/compressed_allreduce_demo.py
+"""
+import os
+os.environ.setdefault(
+    "XLA_FLAGS",
+    "--xla_force_host_platform_device_count=8 "
+    "--xla_disable_hlo_passes=all-reduce-promotion")
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, NamedSharding
+
+from repro.core import CompressionConfig
+from repro.core.collectives import (compressed_all_reduce,
+                                    init_aggregation_state)
+
+mesh = jax.make_mesh((4, 2), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+D, F, W = 512, 1024, 4
+cfg = CompressionConfig(ratio=0.15)
+
+rng = np.random.default_rng(0)
+def grad(seed):
+    g = np.zeros(D * F, np.float32)
+    idx = rng.choice(g.size, size=int(g.size * 0.01), replace=False)
+    g[idx] = rng.standard_normal(idx.size).astype(np.float32)
+    return g.reshape(D, F)
+
+per_worker = np.stack([grad(s) for s in range(W)])
+mean_ref = per_worker.mean(0)
+specs = {"w": P(None, "model")}
+
+def step(stacked):
+    g = {"w": stacked[0]}
+    st = init_aggregation_state(g, cfg)
+    agg, _ = compressed_all_reduce(g, st, specs, mesh, cfg,
+                                   dp_axes=("data",), tp_axes=("model",))
+    return agg
+
+put = jax.device_put(jnp.asarray(per_worker),
+                     NamedSharding(mesh, P("data", None, "model")))
+got = jax.jit(jax.shard_map(step, mesh=mesh, in_specs=P("data", None, None),
+                            out_specs={"w": P()}, axis_names={"data"},
+                            check_vma=False))(put)
+err = np.abs(np.asarray(got["w"]) - mean_ref).max()
+wire = cfg.wire_bytes(D * F)
+print(f"4-worker compressed mean-allreduce max|err| = {err:.2e}")
+print(f"wire: {wire['wire_fraction']*100:.1f}% of dense bf16")
+assert err < 1e-5
+print("OK")

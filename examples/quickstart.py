@@ -1,0 +1,45 @@
+"""Quickstart: the paper's algorithm in six lines.
+
+Compress two workers' sparse gradients, aggregate the *compressed* forms
+(sum the sketches, OR the index words — no decompression in the middle),
+and recover the exact aggregated gradient.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import CompressionConfig, HomomorphicCompressor, CompressedLeaf
+
+rng = np.random.default_rng(0)
+N = 1_000_000
+
+
+def sparse_grad(seed, density=0.01):
+    r = np.random.default_rng(seed)
+    g = np.zeros(N, np.float32)
+    idx = r.choice(N, size=int(N * density), replace=False)
+    g[idx] = r.standard_normal(idx.size).astype(np.float32)
+    return g
+
+
+g1, g2 = sparse_grad(1), sparse_grad(2)
+
+comp = HomomorphicCompressor(CompressionConfig(ratio=0.10))
+s1, s2 = comp.compress(jnp.asarray(g1)), comp.compress(jnp.asarray(g2))
+
+# --- the aggregation API sees only compressed data -------------------
+agg = CompressedLeaf(sketch=s1.sketch + s2.sketch,              # psum
+                     index_words=s1.index_words | s2.index_words)  # OR
+
+recovered, stats = comp.recover(agg, N, with_stats=True)
+
+err = np.abs(np.asarray(recovered) - (g1 + g2)).max()
+wire = comp.wire_bytes(N)
+print(f"non-zeros:       {int(stats.nnz):,}")
+print(f"peeled exactly:  {int(stats.peeled):,} "
+      f"(residual {int(stats.residual)})")
+print(f"max |error|:     {err:.2e}")
+print(f"wire size:       {wire['wire_fraction']*100:.1f}% of dense bf16")
+assert err < 1e-5
+print("lossless homomorphic aggregation OK")

@@ -1,0 +1,53 @@
+"""End-to-end driver (deliverable b): train a ~100M-param decoder LM for a
+few hundred steps with the paper's compressed gradient aggregation, with
+checkpointing and an injected failure + recovery along the way.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+On this CPU container it uses a single device; the same script runs
+unchanged on a pod (the mesh helper picks up all devices).
+"""
+import argparse
+import tempfile
+
+import jax
+
+from repro.core import CompressionConfig
+from repro.ft import FailureSimulator
+from repro.launch.mesh import make_host_mesh
+from repro.models import ModelConfig, model_api
+from repro.parallel.sharding import ShardingProfile
+from repro.train import TrainConfig, OptimizerConfig
+from repro.train.loop import run_training
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--aggregator", default="compressed",
+                choices=["dense", "compressed"])
+args = ap.parse_args()
+
+# ~100M params: 8 layers x d512 x ff2048, 32k vocab
+cfg = ModelConfig(name="lm100m", family="dense", n_layers=8, d_model=512,
+                  n_heads=8, n_kv_heads=4, d_ff=2048, vocab=32_768,
+                  dtype="float32", q_block=128)
+api = model_api(cfg)
+print(f"params: {cfg.param_count()/1e6:.1f}M")
+
+tc = TrainConfig(
+    aggregator=args.aggregator,
+    compression=CompressionConfig(ratio=0.1, topk_ratio=0.02),
+    optimizer=OptimizerConfig(lr=1e-3, warmup_steps=20,
+                              total_steps=args.steps),
+    sharding=ShardingProfile(zero1=False),
+    remat="none")
+
+with tempfile.TemporaryDirectory() as ckpt_dir:
+    res = run_training(
+        api, tc, make_host_mesh(), global_batch=8, seq_len=128,
+        steps=args.steps, ckpt_dir=ckpt_dir, ckpt_every=50,
+        failure_sim=FailureSimulator(fail_at_steps=(args.steps // 2,)),
+        log_every=20)
+
+print(f"\nloss {res.losses[0]:.3f} -> {res.losses[-1]:.3f} over "
+      f"{res.final_step} steps with {res.restarts} recovered failure(s)")
+assert res.losses[-1] < res.losses[0]

@@ -1,0 +1,3 @@
+"""Atomic, hashed, reshardable checkpoints (+ async saver)."""
+from .checkpoint import save, restore, latest_step, AsyncCheckpointer
+__all__ = ["save", "restore", "latest_step", "AsyncCheckpointer"]

@@ -1,0 +1,30 @@
+"""Assigned architecture registry: ``get_arch(id)`` / ``ARCHS``."""
+
+from .base import ArchSpec, ShapeConfig, SHAPES, make_batch_struct
+
+from . import (qwen2_7b, qwen2_5_3b, qwen1_5_32b, granite_3_2b,
+               mamba2_1_3b, internvl2_2b, jamba_v0_1_52b,
+               deepseek_moe_16b, kimi_k2_1t_a32b, whisper_tiny)
+
+ARCHS = {
+    "qwen2-7b": qwen2_7b.ARCH,
+    "qwen2.5-3b": qwen2_5_3b.ARCH,
+    "qwen1.5-32b": qwen1_5_32b.ARCH,
+    "granite-3-2b": granite_3_2b.ARCH,
+    "mamba2-1.3b": mamba2_1_3b.ARCH,
+    "internvl2-2b": internvl2_2b.ARCH,
+    "jamba-v0.1-52b": jamba_v0_1_52b.ARCH,
+    "deepseek-moe-16b": deepseek_moe_16b.ARCH,
+    "kimi-k2-1t-a32b": kimi_k2_1t_a32b.ARCH,
+    "whisper-tiny": whisper_tiny.ARCH,
+}
+
+
+def get_arch(name: str) -> ArchSpec:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+__all__ = ["ArchSpec", "ShapeConfig", "SHAPES", "ARCHS", "get_arch",
+           "make_batch_struct"]

@@ -1,0 +1,78 @@
+"""Architecture + shape registry machinery.
+
+Each ``configs/<arch>.py`` exposes ``ARCH: ArchSpec`` with
+  - ``model``:    the exact published configuration,
+  - ``smoke``:    a reduced same-family config for CPU tests,
+  - ``profile``:  the ShardingProfile (TP/EP/DP/ZeRO choices),
+  - ``train``:    per-arch TrainConfig overrides (optimizer, compression).
+
+``SHAPES`` defines the four assigned input-shape cells; ``cells_for``
+applies the applicability rules from the brief (long_500k only for
+sub-quadratic archs; decode only for archs with a decoder — all ten).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import ShardingProfile
+from repro.train.config import TrainConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    kind: str            # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeConfig("long_500k", "decode", 524_288, 1),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    model: ModelConfig
+    smoke: ModelConfig
+    profile: ShardingProfile
+    train: TrainConfig
+    source: str = ""      # citation tag from the assignment
+
+    def __post_init__(self):
+        # the profile is authoritative: thread it into the TrainConfig so
+        # train/serve builders see one consistent ShardingProfile
+        if self.train.sharding is not self.profile:
+            object.__setattr__(
+                self, "train",
+                dataclasses.replace(self.train, sharding=self.profile))
+
+    def shape_supported(self, shape: ShapeConfig) -> Tuple[bool, str]:
+        if shape.name == "long_500k" and not self.model.supports_long_context:
+            return False, ("SKIP: full quadratic attention at 524k context "
+                           "(sub-quadratic archs only, per brief)")
+        return True, ""
+
+
+def make_batch_struct(cfg: ModelConfig, global_batch: int, seq_len: int):
+    """ShapeDtypeStruct stand-ins for one training batch (no allocation)."""
+    import jax
+    d: Dict[str, jax.ShapeDtypeStruct] = {
+        "tokens": jax.ShapeDtypeStruct((global_batch, seq_len), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((global_batch, seq_len), jnp.int32),
+    }
+    if cfg.family == "encdec":
+        d["frames"] = jax.ShapeDtypeStruct(
+            (global_batch, cfg.enc_seq, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        d["vis_embed"] = jax.ShapeDtypeStruct(
+            (global_batch, cfg.vis_tokens, cfg.d_model), jnp.float32)
+    return d

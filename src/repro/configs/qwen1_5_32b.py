@@ -1,0 +1,30 @@
+"""qwen1.5-32b — dense MHA decoder [hf:Qwen/Qwen1.5 family].
+
+64L d_model=5120 40H (kv=40, i.e. MHA) d_ff=27392 vocab=152064, QKV bias.
+"""
+import dataclasses
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import ShardingProfile
+from repro.train.config import TrainConfig
+from repro.core.config import CompressionConfig
+from repro.train.optimizer import OptimizerConfig
+from .base import ArchSpec
+
+_MODEL = ModelConfig(
+    name="qwen1.5-32b", family="dense", n_layers=64, d_model=5120,
+    n_heads=40, n_kv_heads=40, d_ff=27392, vocab=152064, qkv_bias=True,
+    rope_theta=1e6, supports_long_context=False)
+
+_SMOKE = dataclasses.replace(
+    _MODEL, n_layers=2, d_model=128, n_heads=4, n_kv_heads=4, d_ff=256,
+    vocab=512, dtype="float32", q_block=64)
+
+ARCH = ArchSpec(
+    model=_MODEL, smoke=_SMOKE,
+    profile=ShardingProfile(),
+    train=TrainConfig(
+        aggregator="compressed",
+        accum_steps=8,
+        compression=CompressionConfig(ratio=0.1, topk_ratio=0.04),
+        optimizer=OptimizerConfig(kind="adamw", state_dtype="bfloat16")),
+    source="hf:Qwen/Qwen1.5-0.5B; hf")

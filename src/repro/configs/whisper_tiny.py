@@ -1,0 +1,33 @@
+"""whisper-tiny — encoder-decoder, conv/audio frontend stubbed
+[arXiv:2212.04356].
+
+4L enc + 4L dec, d_model=384 6H d_ff=1536 vocab=51865, enc_seq=1500.
+The 32k decode cells exercise the *shape* far beyond Whisper's real
+448-token context (noted in DESIGN.md §4); decoder positions use RoPE.
+"""
+import dataclasses
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import ShardingProfile
+from repro.train.config import TrainConfig
+from repro.core.config import CompressionConfig
+from repro.train.optimizer import OptimizerConfig
+from .base import ArchSpec
+
+_MODEL = ModelConfig(
+    name="whisper-tiny", family="encdec", n_layers=4, enc_layers=4,
+    d_model=384, n_heads=6, n_kv_heads=6, d_ff=1536, vocab=51865,
+    enc_seq=1500, tie_embeddings=True, supports_long_context=False)
+
+_SMOKE = dataclasses.replace(
+    _MODEL, n_layers=2, enc_layers=2, d_model=128, n_heads=4, n_kv_heads=4,
+    d_ff=256, vocab=512, enc_seq=64, dtype="float32", q_block=64)
+
+ARCH = ArchSpec(
+    model=_MODEL, smoke=_SMOKE,
+    profile=ShardingProfile(),
+    train=TrainConfig(
+        aggregator="compressed",
+        accum_steps=8,
+        compression=CompressionConfig(ratio=0.1, topk_ratio=0.04),
+        optimizer=OptimizerConfig(kind="adamw")),
+    source="arXiv:2212.04356")

@@ -1,0 +1,20 @@
+"""The paper's primary contribution: lossless homomorphic gradient
+compression (Count Sketch + OR-aggregable non-zero index + parallel
+peeling recovery), plus the collectives that aggregate the compressed
+form across a TPU mesh."""
+
+from .config import CompressionConfig, GAMMA
+from .blocks import LeafPlan, make_plan, to_blocks, from_blocks
+from .compressor import HomomorphicCompressor, CompressedLeaf, RecoveryStats
+from .sketch import encode_blocks, estimate_blocks
+from .peeling import peel_blocks, PeelResult
+from . import index
+from . import hashing
+from . import topk
+
+__all__ = [
+    "CompressionConfig", "GAMMA", "LeafPlan", "make_plan", "to_blocks",
+    "from_blocks", "HomomorphicCompressor", "CompressedLeaf", "RecoveryStats",
+    "encode_blocks", "estimate_blocks", "peel_blocks", "PeelResult",
+    "index", "hashing", "topk",
+]

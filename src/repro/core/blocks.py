@@ -1,0 +1,52 @@
+"""Flat-vector <-> block layout used by the compressor.
+
+A leaf of ``n`` elements is padded to ``nb * G * c`` and viewed as
+``(nb, G, c)``: ``nb`` independent sketch blocks (the paper's fixed-size
+block splitting, §3.2), each covering ``G`` locality batches of ``c``
+consecutive elements (§3.4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from .config import CompressionConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafPlan:
+    """Static geometry for one gradient leaf."""
+
+    n: int           # true element count
+    nb: int          # number of blocks
+    group: int       # G
+    lanes: int       # c
+
+    @property
+    def padded(self) -> int:
+        return self.nb * self.group * self.lanes
+
+    @property
+    def pad(self) -> int:
+        return self.padded - self.n
+
+
+def make_plan(n: int, cfg: CompressionConfig) -> LeafPlan:
+    return LeafPlan(n=n, nb=cfg.num_blocks(n), group=cfg.group, lanes=cfg.lanes)
+
+
+def to_blocks(x: jnp.ndarray, plan: LeafPlan) -> jnp.ndarray:
+    """Flatten, zero-pad, and reshape to (nb, G, c)."""
+    flat = x.reshape(-1)
+    if flat.shape[0] != plan.n:
+        raise ValueError(f"leaf has {flat.shape[0]} elements, plan expects {plan.n}")
+    flat = jnp.pad(flat, (0, plan.pad))
+    return flat.reshape(plan.nb, plan.group, plan.lanes)
+
+
+def from_blocks(xb: jnp.ndarray, plan: LeafPlan, shape=None) -> jnp.ndarray:
+    """Inverse of :func:`to_blocks` (drops padding)."""
+    flat = xb.reshape(-1)[: plan.n]
+    return flat.reshape(shape) if shape is not None else flat

@@ -1,0 +1,318 @@
+"""Aggregation collectives for the compressed wire format.
+
+The paper aggregates ``S(X) = [Y, B]`` through "the existing aggregation
+API" — NCCL sum for ``Y`` and switch/NCCL OR for ``B``. On a TPU mesh the
+sum is ``jax.lax.psum``; OR is *not* a native ICI reduction, so we build an
+OR-AllReduce out of ``jax.lax.ppermute``:
+
+- ``or_allreduce_ring``     — reduce-scatter + all-gather ring with a
+  bitwise-OR combiner; bandwidth-optimal (2·(W−1)/W · |B| per link), the
+  analogue of NCCL's ring AllReduce.
+- ``or_allreduce_doubling`` — recursive doubling (log2 W full-size steps);
+  latency-optimal for small bitmaps, used when |B|/W would be tiny.
+- ``or_allreduce``          — hierarchical driver: ring within a pod (ICI),
+  then doubling across pods (DCN has few, fat hops), then a broadcast-free
+  second ring phase. This mirrors production hierarchical collectives.
+
+All functions must run inside ``shard_map`` where ``axis_name`` is manual.
+
+``compressed_all_reduce`` is the full paper pipeline over a gradient
+pytree. It runs inside the *outer* train-step ``shard_map`` (manual DP
+axes) and opens a *nested* ``shard_map`` that takes the tensor-parallel
+axis manual too, so each device compresses only its local parameter shard
+— no GSPMD resharding of gradients ever happens, and the block structure
+stays aligned with the TP shards (which is what lets the same compressed
+stream feed a reduce-scatter for ZeRO-style sharded optimizers).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .config import CompressionConfig
+from .compressor import HomomorphicCompressor, CompressedLeaf
+from . import topk as topk_lib
+
+
+# ----------------------------------------------------------------------
+# OR-AllReduce primitives (manual collectives)
+# ----------------------------------------------------------------------
+
+def _ring_perm(n: int):
+    return [(i, (i + 1) % n) for i in range(n)]
+
+
+def or_allreduce_ring(x: jnp.ndarray, axis_name: str,
+                      idx: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Bitwise-OR AllReduce via a bandwidth-optimal ring (RS + AG).
+
+    ``x``: uint32 words, identical shape on every shard of ``axis_name``.
+    ``idx``: this shard's index on ``axis_name``. Pass it in when calling
+    from a *nested* shard_map — ``axis_index`` on an axis bound by an
+    outer shard_map trips the Shardy verifier (re-binding), while plain
+    ppermute/psum on outer axes are fine.
+    """
+    n = jax.lax.axis_size(axis_name)
+    if n == 1:
+        return x
+    if idx is None:
+        idx = jax.lax.axis_index(axis_name)
+    size = x.shape[0]
+    pad = (-size) % n
+    chunks = jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+                     ).reshape((n, (size + pad) // n) + x.shape[1:])
+    perm = _ring_perm(n)
+
+    # Phase 1 — reduce-scatter: after n-1 steps, shard i owns the fully
+    # OR-reduced chunk (i+1) mod n.
+    for t in range(n - 1):
+        send = jax.lax.dynamic_index_in_dim(chunks, (idx - t) % n, 0, keepdims=False)
+        recv = jax.lax.ppermute(send, axis_name, perm)
+        tgt = (idx - t - 1) % n
+        upd = jax.lax.dynamic_index_in_dim(chunks, tgt, 0, keepdims=False) | recv
+        chunks = jax.lax.dynamic_update_index_in_dim(chunks, upd, tgt, 0)
+
+    # Phase 2 — all-gather of the reduced chunks around the same ring.
+    for t in range(n - 1):
+        send = jax.lax.dynamic_index_in_dim(chunks, (idx + 1 - t) % n, 0, keepdims=False)
+        recv = jax.lax.ppermute(send, axis_name, perm)
+        tgt = (idx - t) % n
+        chunks = jax.lax.dynamic_update_index_in_dim(chunks, recv, tgt, 0)
+
+    out = chunks.reshape((size + pad,) + x.shape[1:])
+    return out[:size] if pad else out
+
+
+def or_allreduce_doubling(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """Bitwise-OR AllReduce via recursive doubling (requires power-of-2)."""
+    n = jax.lax.axis_size(axis_name)
+    if n == 1:
+        return x
+    if n & (n - 1):
+        raise ValueError(f"recursive doubling needs power-of-2 size, got {n}")
+    d = 1
+    while d < n:
+        perm = [(i, i ^ d) for i in range(n)]
+        x = x | jax.lax.ppermute(x, axis_name, perm)
+        d *= 2
+    return x
+
+
+def or_allreduce(x: jnp.ndarray, axis_names: Sequence[str],
+                 ring_threshold: int = 65536,
+                 axis_indices: Optional[dict] = None) -> jnp.ndarray:
+    """Hierarchical OR-AllReduce over several (manual) mesh axes.
+
+    Axes are reduced innermost-first (e.g. ``("pod", "data")`` rings over
+    ``data`` within each pod, then combines across pods). Small payloads
+    use recursive doubling to dodge ring latency.
+
+    ``axis_indices``: {axis: this shard's index} — required when calling
+    from a nested shard_map (see or_allreduce_ring).
+    """
+    if isinstance(axis_names, str):
+        axis_names = (axis_names,)
+    for ax in reversed(tuple(axis_names)):
+        if x.shape[0] >= ring_threshold:
+            idx = axis_indices.get(ax) if axis_indices else None
+            x = or_allreduce_ring(x, ax, idx=idx)
+        else:
+            x = or_allreduce_doubling(x, ax)
+    return x
+
+
+# ----------------------------------------------------------------------
+# Dense baseline (the "NCCL AllReduce" arm of the paper's evaluation)
+# ----------------------------------------------------------------------
+
+def dense_all_reduce(grads: Any, axis_names: Sequence[str],
+                     acc_dtype=jnp.float32, mean: bool = True) -> Any:
+    """Plain psum of raw gradients over the DP axes."""
+    if isinstance(axis_names, str):
+        axis_names = (axis_names,)
+    w = 1
+    for ax in axis_names:
+        w *= jax.lax.axis_size(ax)
+
+    def red(g):
+        s = jax.lax.psum(g.astype(acc_dtype), tuple(axis_names))
+        if mean:
+            s = s / w
+        return s.astype(g.dtype)
+
+    return jax.tree.map(red, grads)
+
+
+# ----------------------------------------------------------------------
+# The paper's pipeline over a gradient pytree
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AggregationState:
+    """Per-leaf error-feedback residuals (empty pytree when disabled)."""
+    residual: Any
+
+
+def init_aggregation_state(params: Any, cfg: CompressionConfig) -> AggregationState:
+    """Residuals live with the parameters (same shape & sharding)."""
+    if cfg.topk_ratio is not None and cfg.error_feedback:
+        res = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    else:
+        res = jax.tree.map(lambda p: jnp.zeros((0,), jnp.float32), params)
+    return AggregationState(residual=res)
+
+
+def _compress_leaf(g_local: jnp.ndarray, res: jnp.ndarray,
+                   comp: HomomorphicCompressor):
+    """Phase I on one leaf shard: sparsify -> encode."""
+    cfg = comp.cfg
+    flat = g_local.reshape(-1).astype(jnp.float32)
+    new_res = res
+    if cfg.topk_ratio is not None:
+        k = max(1, int(flat.shape[0] * cfg.topk_ratio))
+        if cfg.error_feedback:
+            flat, new_res_flat = topk_lib.apply_error_feedback(
+                flat, res.reshape(-1), k, exact=cfg.topk_exact)
+            new_res = new_res_flat.reshape(res.shape)
+        elif cfg.topk_exact:
+            flat = topk_lib.sparsify_topk(flat, k)
+        else:
+            flat = topk_lib.sparsify_threshold(flat, k)
+    c = comp.compress(flat)
+    return c.sketch, c.index_words, new_res
+
+
+def _recover_leaf(sk: jnp.ndarray, words: jnp.ndarray, shape, dtype,
+                  comp: HomomorphicCompressor, n_workers: int):
+    """Phase II on one leaf shard: peel -> mean."""
+    n = 1
+    for d in shape:
+        n *= d
+    rec = comp.recover(CompressedLeaf(sketch=sk, index_words=words), n)
+    return (rec / n_workers).astype(dtype).reshape(shape)
+
+
+def compressed_all_reduce(grads: Any, agg_state: AggregationState,
+                          param_specs: Any, mesh,
+                          cfg: CompressionConfig,
+                          dp_axes: Sequence[str] = ("data",),
+                          tp_axes: Sequence[str] = ("model",),
+                          mean: bool = True):
+    """Aggregate a gradient pytree with the paper's compressed pipeline.
+
+    Must be called *inside* a ``shard_map`` where ``dp_axes`` are already
+    manual. Opens a nested ``shard_map`` making ``tp_axes`` manual too, so
+    compression happens on local shards with no resharding.
+
+    Args:
+      grads:       pytree of (possibly TP-sharded) gradients.
+      agg_state:   error-feedback residuals (same treedef).
+      param_specs: pytree of ``PartitionSpec`` describing TP placement.
+      mesh:        the device mesh (same one the outer shard_map uses).
+      cfg:         compression config.
+
+    Returns: (aggregated grads pytree, new AggregationState)
+    """
+    comp = HomomorphicCompressor(cfg)
+    if isinstance(dp_axes, str):
+        dp_axes = (dp_axes,)
+    n_workers = 1
+    for ax in dp_axes:
+        n_workers *= mesh.shape[ax]
+    if not mean:
+        n_workers = 1
+
+    # Strip any DP-axis references from the specs (those axes are manual
+    # in the outer shard_map; the nested one only partitions TP axes).
+    dp_set = set(dp_axes)
+
+    def tp_only(spec):
+        if spec is None:
+            return P()
+        parts = []
+        for s in spec:
+            if s is None:
+                parts.append(None)
+            elif isinstance(s, (tuple, list)):
+                kept = tuple(a for a in s if a not in dp_set)
+                parts.append(kept if kept else None)
+            else:
+                parts.append(None if s in dp_set else s)
+        return P(*parts)
+
+    specs = jax.tree.map(tp_only, param_specs,
+                         is_leaf=lambda s: isinstance(s, P) or s is None)
+
+    leaves, treedef = jax.tree.flatten(grads)
+    spec_leaves = treedef.flatten_up_to(specs)
+    res_leaves = treedef.flatten_up_to(agg_state.residual)
+
+    # Shard indices on the (outer-manual) DP axes, computed *here* where
+    # those axes are directly bound; threaded into OR-rings because
+    # axis_index inside nested regions would re-bind the axis (Shardy).
+    dp_idx = dict(zip(dp_axes, (jax.lax.axis_index(ax) for ax in dp_axes)))
+
+    ef_on = cfg.topk_ratio is not None and cfg.error_feedback
+    out_leaves = []
+    new_res_leaves = []
+    for g, spec, res in zip(leaves, spec_leaves, res_leaves):
+        res_spec = spec if ef_on else P()
+        # manual axes = the TP axis plus any axis this leaf's spec
+        # references (e.g. kimi's experts are sharded over the EP axis
+        # "data" — the nested shard_map must bind it to slice locally)
+        tp_set = {a for a in tp_axes if a}
+        for part in spec:
+            if part is None:
+                continue
+            tp_set |= set(part) if isinstance(part, (tuple, list)) else {part}
+        # sketch/index shapes per shard (for the nested out_specs)
+        if tp_set:
+            # Two nested regions with the DP collectives *between* them
+            # at the outer level: running psum/ppermute over the outer
+            # manual axis inside a doubly-nested manual region check-
+            # crashes XLA's SPMD partitioner (AllReduceAlongShardingDims)
+            # on 3-axis meshes. Phase boundaries cost nothing — sketch
+            # and words stay shard-local either way.
+            enc = jax.shard_map(
+                functools.partial(_compress_leaf, comp=comp),
+                in_specs=(spec, res_spec),
+                out_specs=(P(), P(), res_spec),
+                axis_names=tp_set, check_vma=False)
+            sk, words, new_res = enc(g, res)
+            sk = jax.lax.psum(sk, tuple(dp_axes))
+            words = or_allreduce(words, dp_axes, axis_indices=dp_idx)
+            # local (per-shard) leaf shape for the recovery region
+            def _div(i):
+                part = spec[i] if i < len(spec) else None
+                if part is None:
+                    return 1
+                names = part if isinstance(part, (tuple, list)) else (part,)
+                d = 1
+                for nm in names:
+                    d *= mesh.shape[nm]
+                return d
+            local_shape = tuple(sz // _div(i) for i, sz in enumerate(g.shape))
+            dec = jax.shard_map(
+                functools.partial(_recover_leaf, comp=comp,
+                                  n_workers=n_workers,
+                                  shape=local_shape, dtype=g.dtype),
+                in_specs=(P(), P()),
+                out_specs=spec,
+                axis_names=tp_set, check_vma=False)
+            rec = dec(sk, words)
+        else:                      # pure DP: no nested manual axis needed
+            sk, words, new_res = _compress_leaf(g, res, comp)
+            sk = jax.lax.psum(sk, tuple(dp_axes))
+            words = or_allreduce(words, dp_axes, axis_indices=dp_idx)
+            rec = _recover_leaf(sk, words, g.shape, g.dtype, comp, n_workers)
+        out_leaves.append(rec)
+        new_res_leaves.append(new_res)
+
+    return (jax.tree.unflatten(treedef, out_leaves),
+            AggregationState(residual=jax.tree.unflatten(treedef, new_res_leaves)))

@@ -1,0 +1,143 @@
+"""Top-level homomorphic compressor (paper Algorithm 1).
+
+``HomomorphicCompressor`` turns a gradient leaf (any shape) into the wire
+format ``CompressedLeaf(sketch, index_words)`` and back:
+
+    compress:  X -> S(X) = [Y, B]          (phase I)
+    recover :  S(sum X) -> sum X           (phase II, peeling + estimate)
+
+Both directions are pure jittable functions of statically-planned shape.
+Aggregation happens *between* the two calls and is someone else's job —
+``psum`` for the sketch, OR-AllReduce for the index words (see
+:mod:`repro.core.collectives`) — which is exactly the homomorphic contract
+of the paper: the aggregation API never decompresses.
+
+Large leaves are processed in chunks of ``cfg.chunk_blocks`` blocks via
+``lax.map`` to bound peak memory (the (nb, G, 3, c) rotation intermediates
+would otherwise dwarf the gradient itself).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import CompressionConfig
+from .blocks import LeafPlan, make_plan, to_blocks, from_blocks
+from . import index as index_lib
+from .sketch import encode_blocks, estimate_blocks
+from .peeling import peel_blocks
+
+
+class CompressedLeaf(NamedTuple):
+    """Wire format for one leaf. Sketch aggregates by +, words by |."""
+    sketch: jnp.ndarray       # (nb, rows, lanes) f32
+    index_words: jnp.ndarray  # (w,) uint32 — packed bitmap or Bloom filter
+
+
+class RecoveryStats(NamedTuple):
+    nnz: jnp.ndarray          # indexed coordinates (candidates)
+    peeled: jnp.ndarray       # exactly recovered
+    residual: jnp.ndarray     # fell back to median estimate
+    rounds: jnp.ndarray       # peeling rounds used
+
+
+def _chunked_map(fn, nb: int, chunk: int, *arrays):
+    """lax.map ``fn`` over blocks in chunks; pads nb to a chunk multiple.
+
+    ``arrays`` all have leading dim nb. Padding blocks are all-zero, which
+    is harmless for both encode (zero sketch) and peel (empty index).
+    """
+    if nb <= chunk:
+        return fn(*arrays)
+    nchunks = -(-nb // chunk)
+    padded = nchunks * chunk
+
+    def pad(a):
+        return jnp.pad(a, [(0, padded - nb)] + [(0, 0)] * (a.ndim - 1))
+
+    stacked = [pad(a).reshape((nchunks, chunk) + a.shape[1:]) for a in arrays]
+    out = jax.lax.map(lambda args: fn(*args), tuple(stacked))
+    return jax.tree.map(
+        lambda o: o.reshape((padded,) + o.shape[2:])[:nb], out)
+
+
+@dataclasses.dataclass(frozen=True)
+class HomomorphicCompressor:
+    cfg: CompressionConfig
+
+    # ------------------------------------------------------------------
+    # Phase I — compression
+    # ------------------------------------------------------------------
+
+    def compress(self, x: jnp.ndarray) -> CompressedLeaf:
+        plan = make_plan(x.size, self.cfg)
+        xb = to_blocks(x.astype(jnp.float32), plan)
+        ids = jnp.arange(plan.nb, dtype=jnp.int32)
+
+        def enc(ids_c, xb_c):
+            return encode_blocks(xb_c, ids_c, self.cfg)
+
+        sketch = _chunked_map(enc, plan.nb, self.cfg.chunk_blocks, ids, xb)
+        if self.cfg.index == "bitmap":
+            words = index_lib.pack_bits(index_lib.bitmap_build(xb))
+        else:
+            words = index_lib.bloom_build(xb, self.cfg)
+        return CompressedLeaf(sketch=sketch, index_words=words)
+
+    # ------------------------------------------------------------------
+    # Phase II — recovery
+    # ------------------------------------------------------------------
+
+    def recover(self, comp: CompressedLeaf, n: int, shape=None,
+                with_stats: bool = False
+                ) -> jnp.ndarray | Tuple[jnp.ndarray, RecoveryStats]:
+        plan = make_plan(n, self.cfg)
+        bshape = (plan.nb, plan.group, plan.lanes)
+        if self.cfg.index == "bitmap":
+            bits = index_lib.unpack_bits(comp.index_words, bshape)
+        else:
+            bits = index_lib.bloom_query(bshape, self.cfg, comp.index_words)
+        ids = jnp.arange(plan.nb, dtype=jnp.int32)
+
+        def rec(ids_c, sk_c, bits_c):
+            r = peel_blocks(sk_c, bits_c, ids_c, self.cfg)
+            return r.values, r.peeled, r.residual
+
+        values, peeled, residual = _chunked_map(
+            rec, plan.nb, self.cfg.chunk_blocks, ids, comp.sketch, bits)
+        x = from_blocks(values, plan, shape)
+        if not with_stats:
+            return x
+        stats = RecoveryStats(
+            nnz=jnp.sum(bits), peeled=jnp.sum(peeled),
+            residual=jnp.sum(residual), rounds=jnp.int32(self.cfg.rounds))
+        return x, stats
+
+    # ------------------------------------------------------------------
+    # Lossy sketch-only decode (Sketched-SGD style) for ablations
+    # ------------------------------------------------------------------
+
+    def estimate(self, comp: CompressedLeaf, n: int, shape=None) -> jnp.ndarray:
+        plan = make_plan(n, self.cfg)
+        ids = jnp.arange(plan.nb, dtype=jnp.int32)
+
+        def est(ids_c, sk_c):
+            return estimate_blocks(sk_c, ids_c, self.cfg)
+
+        values = _chunked_map(est, plan.nb, self.cfg.chunk_blocks, ids, comp.sketch)
+        if self.cfg.index == "bitmap":
+            bits = index_lib.unpack_bits(
+                comp.index_words, (plan.nb, plan.group, plan.lanes))
+            values = jnp.where(bits, values, 0.0)
+        return from_blocks(values, plan, shape)
+
+    # ------------------------------------------------------------------
+    # Wire accounting
+    # ------------------------------------------------------------------
+
+    def wire_bytes(self, n: int, grad_bytes_per_elem: int = 2) -> dict:
+        return self.cfg.wire_bytes(n, grad_bytes_per_elem)

@@ -1,0 +1,102 @@
+"""Configuration for the lossless homomorphic compressor.
+
+The knobs mirror the paper's design space:
+
+- ``ratio``      — compressed sketch cells / original elements (the paper
+                   sweeps 2%..200%; its end-to-end runs fix 10%).
+- ``lanes``      — the locality batch width ``c`` of §3.4. On GPU the paper
+                   uses 1024 (threads per block); on TPU we default to 512
+                   = 4 x 128 so a batch row is lane-aligned in VMEM.
+- ``rows``       — sketch rows per block, split into 3 hash partitions
+                   (3-partite hypergraph, peeling threshold gamma = 1.23).
+- ``rounds``     — peeling iterations; the paper proves log log n + O(1)
+                   and reaches O(1) by splitting the sketch into fixed-size
+                   blocks, which is structural here.
+- ``index``      — "bitmap" (exact, 1 bit/coordinate, §3.2) or "bloom"
+                   (probabilistic, §3.3, for extreme sparsity).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+GAMMA = 1.23  # 3-ary peeling threshold from the paper (§3.2)
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    """Static plan for the homomorphic compressor (hashable, jit-friendly)."""
+
+    ratio: float = 0.10          # sketch elements / original elements
+    lanes: int = 512             # batch width c (multiple of 128 on TPU)
+    rows: int = 6                # sketch rows per block; divisible by 3
+    rounds: int = 10             # peeling iteration cap (while_loop exits
+                                 # at fixpoint; log log n + O(1) expected)
+    index: str = "bitmap"        # "bitmap" | "bloom"
+    bloom_hashes: int = 3        # k for the Bloom filter variant
+    bloom_bits_ratio: float = 0.125  # bloom bits per original element
+    topk_ratio: Optional[float] = None   # optional sparsity budget
+    topk_exact: bool = False     # exact lax.top_k (O(n log n) sort buffers)
+                                 # vs sampled-quantile threshold (O(n))
+    error_feedback: bool = True  # accumulate unsent residual (DGC-style)
+    seed: int = 0x5EED
+    chunk_blocks: int = 512      # blocks per lax.map chunk (memory bound)
+    use_pallas: str = "auto"     # "never" | "always" | "auto"
+    sketch_dtype: str = "float32"
+
+    def __post_init__(self):
+        if self.rows % 3 != 0 or self.rows < 3:
+            raise ValueError(f"rows must be a positive multiple of 3, got {self.rows}")
+        if not 0.0 < self.ratio:
+            raise ValueError(f"ratio must be positive, got {self.ratio}")
+        if self.lanes < 8:
+            raise ValueError(f"lanes must be >= 8, got {self.lanes}")
+        if self.index not in ("bitmap", "bloom"):
+            raise ValueError(f"index must be 'bitmap' or 'bloom', got {self.index}")
+
+    # ---- derived static geometry -------------------------------------
+
+    @property
+    def group(self) -> int:
+        """G — gradient batches per sketch block (rows / ratio)."""
+        return max(1, round(self.rows / self.ratio))
+
+    @property
+    def block_elems(self) -> int:
+        """Original elements covered by one block."""
+        return self.group * self.lanes
+
+    @property
+    def sketch_elems(self) -> int:
+        """Sketch cells per block."""
+        return self.rows * self.lanes
+
+    @property
+    def peel_capacity(self) -> int:
+        """Max non-zeros per block recoverable w.h.p. (|Y| / gamma)."""
+        return int(self.sketch_elems / GAMMA)
+
+    def num_blocks(self, n: int) -> int:
+        """Blocks needed to cover ``n`` elements."""
+        return -(-n // self.block_elems)
+
+    def padded_size(self, n: int) -> int:
+        return self.num_blocks(n) * self.block_elems
+
+    def wire_bytes(self, n: int, grad_bytes_per_elem: int = 2) -> dict:
+        """Bytes on the wire for ``n`` elements vs. the dense baseline."""
+        nb = self.num_blocks(n)
+        sketch = nb * self.sketch_elems * 4  # fp32 sketch
+        if self.index == "bitmap":
+            idx = -(-self.padded_size(n) // 32) * 4  # 1 bit / elem, packed u32
+        else:
+            idx = int(n * self.bloom_bits_ratio / 32 + 1) * 4
+        dense = n * grad_bytes_per_elem
+        return {
+            "sketch_bytes": sketch,
+            "index_bytes": idx,
+            "total_bytes": sketch + idx,
+            "dense_bytes": dense,
+            "wire_fraction": (sketch + idx) / max(dense, 1),
+        }

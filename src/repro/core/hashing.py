@@ -1,0 +1,106 @@
+"""Hash family for the sketch / index structures.
+
+Two flavours of the same splitmix32-style mixer:
+
+- a **numpy** version used at *plan time* to derive the static per-batch
+  row assignments ``h_j(i)`` and signs ``g_j(i)`` (shared across blocks —
+  compile-time constants, which lets the Pallas kernel unroll its scatter
+  targets), and
+- a **jnp** version used *in-graph* for the per-(block, batch, hash)
+  rotation offsets (the §3.4 locality randomisation) and for Bloom-filter
+  bit positions, so no O(num_blocks) tables ever materialise.
+
+The mixer is the Murmur3/splitmix finalizer — 2-independent-ish, cheap on
+both scalar unit (host) and VPU (TPU): xor-shift + two odd multiplies.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+_M1 = 0x85EBCA6B
+_M2 = 0xC2B2AE35
+
+
+def mix32_np(x: np.ndarray) -> np.ndarray:
+    """splitmix/murmur3 finalizer on uint32 (numpy, plan time)."""
+    x = np.asarray(x, dtype=np.uint32)
+    x ^= x >> np.uint32(16)
+    x = (x * np.uint32(_M1)) & np.uint32(0xFFFFFFFF)
+    x ^= x >> np.uint32(13)
+    x = (x * np.uint32(_M2)) & np.uint32(0xFFFFFFFF)
+    x ^= x >> np.uint32(16)
+    return x
+
+
+def mix32(x: jnp.ndarray) -> jnp.ndarray:
+    """Same mixer, traced (uint32 in-graph)."""
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(_M1)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(_M2)
+    x = x ^ (x >> 16)
+    return x
+
+
+# ----------------------------------------------------------------------
+# Static plan-time tables (shared across blocks)
+# ----------------------------------------------------------------------
+
+def batch_rows(group: int, rows: int, seed: int) -> np.ndarray:
+    """Row assignment h_j(i) for each batch i and hash j.
+
+    3-partite: hash j lands in rows [j*rows/3, (j+1)*rows/3), which is the
+    standard construction for the gamma=1.23 peeling threshold.
+
+    Returns int32 (group, 3).
+    """
+    per = rows // 3
+    i = np.arange(group, dtype=np.uint32)
+    out = np.empty((group, 3), dtype=np.int32)
+    salt = np.uint32((seed * 0x9E3779B9) & 0xFFFFFFFF)
+    for j in range(3):
+        h = mix32_np(i * np.uint32(3) + np.uint32(j) + salt)
+        out[:, j] = (h % np.uint32(per)).astype(np.int32) + j * per
+    return out
+
+
+def batch_signs(group: int, seed: int) -> np.ndarray:
+    """Signs g_j(i) in {-1,+1}; float32 (group, 3)."""
+    i = np.arange(group, dtype=np.uint32)
+    out = np.empty((group, 3), dtype=np.float32)
+    salt = np.uint32((seed ^ 0xA5A5A5A5) & 0xFFFFFFFF)
+    for j in range(3):
+        h = mix32_np(i * np.uint32(3) + np.uint32(j) + salt)
+        out[:, j] = np.where(h & np.uint32(1), 1.0, -1.0)
+    return out
+
+
+# ----------------------------------------------------------------------
+# Traced per-block tables
+# ----------------------------------------------------------------------
+
+def block_rotations(block_ids: jnp.ndarray, group: int, lanes: int, seed: int) -> jnp.ndarray:
+    """Rotation offsets rot_j(i, blk) in [0, lanes) — int32 (nb, group, 3).
+
+    Varies per block so different blocks realise different hypergraphs even
+    though the row tables are shared (see DESIGN.md §2).
+    """
+    nb = block_ids.shape[0]
+    i = jnp.arange(group, dtype=jnp.uint32)
+    j = jnp.arange(3, dtype=jnp.uint32)
+    key = (block_ids.astype(jnp.uint32)[:, None, None] * jnp.uint32(0x01000193)
+           + i[None, :, None] * jnp.uint32(3)
+           + j[None, None, :]
+           + jnp.uint32(seed * 2654435761 & 0xFFFFFFFF))
+    return (mix32(key) % jnp.uint32(lanes)).astype(jnp.int32)
+
+
+def bloom_positions(ids: jnp.ndarray, k: int, m_bits: int, seed: int) -> jnp.ndarray:
+    """Bloom-filter bit positions for coordinate ids — int32 (..., k)."""
+    ids = ids.astype(jnp.uint32)
+    ks = jnp.arange(k, dtype=jnp.uint32)
+    h = mix32(ids[..., None] * jnp.uint32(k) + ks + jnp.uint32(seed ^ 0xB10053))
+    return (h % jnp.uint32(m_bits)).astype(jnp.int32)

@@ -1,0 +1,88 @@
+"""Homomorphic non-zero indexes (paper §3.2 bitmap, §3.3 Bloom filter).
+
+Both structures aggregate with bitwise OR; both ride the wire bit-packed in
+``uint32`` words (1 bit per coordinate for the bitmap). Packing keeps the
+index at 1/16 of a bf16 gradient — the OR-AllReduce in
+:mod:`repro.core.collectives` operates on the packed words directly.
+
+The Bloom filter trades exactness of the *index* (never of recovered
+values) for size: it may report false-positive "non-zeros", which enter the
+peeling graph as candidates and peel out with value ~0. It never misses a
+true non-zero, which is the property the lossless proof needs (§3.3).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .config import CompressionConfig
+from . import hashing
+
+
+# ----------------------------------------------------------------------
+# Bit packing
+# ----------------------------------------------------------------------
+
+def pack_bits(bits: jnp.ndarray) -> jnp.ndarray:
+    """bool (...,) with total size divisible by 32 -> packed uint32 (N/32,)."""
+    flat = bits.reshape(-1)
+    n = flat.shape[0]
+    if n % 32 != 0:
+        raise ValueError(f"bit count {n} not divisible by 32")
+    w = flat.reshape(n // 32, 32).astype(jnp.uint32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return (w << shifts[None, :]).sum(axis=1, dtype=jnp.uint32)
+
+
+def unpack_bits(words: jnp.ndarray, shape) -> jnp.ndarray:
+    """packed uint32 (N/32,) -> bool array of ``shape`` (N total elements)."""
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (words[:, None] >> shifts[None, :]) & jnp.uint32(1)
+    return bits.reshape(shape).astype(jnp.bool_)
+
+
+# ----------------------------------------------------------------------
+# Bitmap index (exact)
+# ----------------------------------------------------------------------
+
+def bitmap_build(xb: jnp.ndarray) -> jnp.ndarray:
+    """(nb, G, c) values -> (nb, G, c) bool non-zero mask."""
+    return xb != 0
+
+
+# ----------------------------------------------------------------------
+# Bloom filter index (probabilistic, asymptotically optimal size)
+# ----------------------------------------------------------------------
+
+def bloom_size_words(n_elems: int, cfg: CompressionConfig) -> int:
+    m_bits = max(64, int(n_elems * cfg.bloom_bits_ratio))
+    return -(-m_bits // 32)
+
+
+def bloom_build(xb: jnp.ndarray, cfg: CompressionConfig) -> jnp.ndarray:
+    """(nb, G, c) values -> packed uint32 Bloom filter over all coordinates.
+
+    Built as a scatter-max into an *unpacked* bit array (OR of 0/1 flags is
+    max), packed to uint32 words once at the end.
+    """
+    nz = (xb != 0).reshape(-1)
+    n = nz.shape[0]
+    m_bits = bloom_size_words(n, cfg) * 32
+    ids = jnp.arange(n, dtype=jnp.uint32)
+    pos = hashing.bloom_positions(ids, cfg.bloom_hashes, m_bits, cfg.seed)  # (n, k)
+    flags = jnp.broadcast_to(nz[:, None], pos.shape).astype(jnp.uint32)
+    bits = jnp.zeros((m_bits,), jnp.uint32).at[pos.reshape(-1)].max(flags.reshape(-1))
+    return pack_bits(bits.astype(jnp.bool_))
+
+
+def bloom_query(shape, cfg: CompressionConfig, filt: jnp.ndarray) -> jnp.ndarray:
+    """Candidate non-zero mask of ``shape`` from a packed Bloom filter."""
+    n = 1
+    for s in shape:
+        n *= s
+    m_bits = filt.shape[0] * 32
+    ids = jnp.arange(n, dtype=jnp.uint32)
+    pos = hashing.bloom_positions(ids, cfg.bloom_hashes, m_bits, cfg.seed)
+    word, bit = pos // 32, (pos % 32).astype(jnp.uint32)
+    hit = (filt[word] >> bit) & jnp.uint32(1)
+    return jnp.all(hit == 1, axis=-1).reshape(shape)

@@ -1,0 +1,98 @@
+"""Parallel peeling recovery (paper §3.2) — pure-jnp reference.
+
+Given the aggregated sketch ``Y`` and the aggregated non-zero index ``B``
+for a set of blocks, repeatedly:
+
+1. compute the *degree* ``D[r, m]`` — how many indexed coordinates hash
+   into sketch cell ``(r, m)``;
+2. every indexed coordinate owning a cell with ``D == 1`` (a singleton) is
+   recovered **exactly** as ``g_j(i) * Y[h_j(i), .]``;
+3. peel it: subtract its value from all three of its cells, clear its
+   index bit, decrement the three degrees.
+
+Each round is fully vectorised over every coordinate of every block (the
+"parallel" in parallel peeling); with block-local sketches the process
+converges in O(1) rounds (paper §3.2). Coordinates still indexed after the
+final round fall back to the unbiased median estimate (footnote 5); with
+``nnz_block <= rows*c/1.23`` that set is empty w.h.p. — the lossless case.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import CompressionConfig
+from . import hashing
+from .sketch import (plan_tables, roll_to_sketch, roll_from_sketch,
+                     scatter_rows, gather_rows)
+
+
+class PeelResult(NamedTuple):
+    values: jnp.ndarray      # (nb, G, c) f32 — recovered + estimated
+    peeled: jnp.ndarray      # (nb, G, c) bool — recovered exactly
+    residual: jnp.ndarray    # (nb, G, c) bool — indexed but unpeeled (estimate used)
+    rounds_used: jnp.ndarray # () int32 — rounds until fixpoint (<= cfg.rounds)
+
+
+def _median3(est: jnp.ndarray) -> jnp.ndarray:
+    v0, v1, v2 = est[:, :, 0], est[:, :, 1], est[:, :, 2]
+    return (v0 + v1 + v2
+            - jnp.maximum(jnp.maximum(v0, v1), v2)
+            - jnp.minimum(jnp.minimum(v0, v1), v2))
+
+
+def peel_blocks(sketch: jnp.ndarray, bits: jnp.ndarray, block_ids: jnp.ndarray,
+                cfg: CompressionConfig) -> PeelResult:
+    """Recover block values from (sketch, index-bits).
+
+    Args:
+      sketch:    (nb, rows, c) f32 — aggregated Count Sketch.
+      bits:      (nb, G, c) bool — aggregated non-zero index (bitmap or
+                 Bloom-filter candidate set; false positives peel to ~0).
+      block_ids: (nb,) int32 — global block ids (rotation seeds).
+    """
+    rows_tbl, signs_np = plan_tables(cfg)
+    signs = jnp.asarray(signs_np)[None, :, :, None]                  # (1,G,3,1)
+    rot = hashing.block_rotations(block_ids, cfg.group, cfg.lanes, cfg.seed)
+
+    # Initial degrees: scatter the (rotated) index bits.
+    ones = roll_to_sketch(bits.astype(jnp.int32), rot, cfg.lanes)    # (nb,G,3,c)
+    deg = scatter_rows(ones, rows_tbl, cfg.rows)                     # (nb,rows,c) i32
+
+    def round_body(state):
+        y, b, d, x_rec, it, _changed = state
+        d_at = roll_from_sketch(gather_rows(d, rows_tbl), rot, cfg.lanes)   # (nb,G,3,c)
+        y_at = roll_from_sketch(gather_rows(y, rows_tbl), rot, cfg.lanes)
+        val_at = y_at * signs
+        peelable = (d_at == 1) & b[:, :, None, :]
+        any_peel = jnp.any(peelable, axis=2)                               # (nb,G,c)
+        jstar = jnp.argmax(peelable, axis=2)                               # first true
+        val = jnp.take_along_axis(val_at, jstar[:, :, None, :], axis=2)[:, :, 0, :]
+        val = jnp.where(any_peel, val, 0.0)
+        # Remove peeled coordinates from sketch / degrees / index.
+        v_contrib = roll_to_sketch(val, rot, cfg.lanes) * signs
+        m_contrib = roll_to_sketch(any_peel.astype(jnp.int32), rot, cfg.lanes)
+        y = y - scatter_rows(v_contrib, rows_tbl, cfg.rows)
+        d = d - scatter_rows(m_contrib, rows_tbl, cfg.rows)
+        b = b & ~any_peel
+        x_rec = x_rec + val
+        changed = jnp.any(any_peel)
+        return y, b, d, x_rec, it + 1, changed
+
+    def round_cond(state):
+        *_, it, changed = state
+        return (it < cfg.rounds) & changed
+
+    x0 = jnp.zeros(bits.shape, jnp.float32)
+    state = (sketch.astype(jnp.float32), bits, deg, x0,
+             jnp.int32(0), jnp.bool_(True))
+    y, b, d, x_rec, it, _ = jax.lax.while_loop(round_cond, round_body, state)
+
+    # Residue: unbiased Count-Sketch estimate from what is left in the sketch.
+    est = _median3(roll_from_sketch(gather_rows(y, rows_tbl), rot, cfg.lanes) * signs)
+    values = x_rec + jnp.where(b, est, 0.0)
+    peeled_mask = bits & ~b
+    return PeelResult(values=values, peeled=peeled_mask, residual=b, rounds_used=it)

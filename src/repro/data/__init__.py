@@ -1,0 +1,3 @@
+"""Deterministic synthetic data pipeline with prefetch."""
+from .pipeline import batch_fn, Prefetcher
+__all__ = ["batch_fn", "Prefetcher"]

@@ -1,0 +1,5 @@
+"""Fault tolerance: failure injection/detection, stragglers, elastic."""
+from .failures import (FailureSimulator, InjectedFailure, RecoveryPolicy,
+                       StragglerMonitor, elastic_mesh)
+__all__ = ["FailureSimulator", "InjectedFailure", "RecoveryPolicy",
+           "StragglerMonitor", "elastic_mesh"]

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the paper's compute hot spots (§3.4):
+Count-Sketch encode and parallel-peeling decode. Validated in
+interpret mode against the pure-jnp oracles in ref.py."""
+
+from .ops import sketch_encode, sketch_peel
+from .sketch_encode import sketch_encode_pallas
+from .sketch_peel import sketch_peel_pallas
+from . import ref
+
+__all__ = ["sketch_encode", "sketch_peel", "sketch_encode_pallas",
+           "sketch_peel_pallas", "ref"]

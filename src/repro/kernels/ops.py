@@ -1,0 +1,47 @@
+"""Jitted dispatch between the Pallas kernels and the jnp reference.
+
+``use_pallas`` policy:
+  "never"  — always the jnp reference (the default on CPU: interpret-mode
+             Pallas is a Python-loop emulator, far slower than XLA:CPU).
+  "always" — Pallas, interpret=True off-TPU so the kernel body still
+             executes (correctness path used by the test suite).
+  "auto"   — Pallas on TPU backends, reference elsewhere.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import CompressionConfig
+from . import ref as ref_ops
+from .sketch_encode import sketch_encode_pallas
+from .sketch_peel import sketch_peel_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _want_pallas(cfg: CompressionConfig) -> bool:
+    if cfg.use_pallas == "never":
+        return False
+    if cfg.use_pallas == "always":
+        return True
+    return _on_tpu()
+
+
+def sketch_encode(xb: jnp.ndarray, block_ids: jnp.ndarray,
+                  cfg: CompressionConfig) -> jnp.ndarray:
+    if _want_pallas(cfg):
+        return sketch_encode_pallas(xb, block_ids, cfg,
+                                    interpret=not _on_tpu())
+    return ref_ops.sketch_encode_ref(xb, block_ids, cfg)
+
+
+def sketch_peel(sketch: jnp.ndarray, bits: jnp.ndarray,
+                block_ids: jnp.ndarray, cfg: CompressionConfig):
+    if _want_pallas(cfg):
+        return sketch_peel_pallas(sketch, bits, block_ids, cfg,
+                                  interpret=not _on_tpu())
+    return ref_ops.sketch_peel_ref(sketch, bits, block_ids, cfg)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These delegate to :mod:`repro.core` — the reference implementation the
+whole framework runs on CPU — so the kernel tests pin the Pallas bodies
+to exactly the semantics the training path uses.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.config import CompressionConfig
+from repro.core.sketch import encode_blocks
+from repro.core.peeling import peel_blocks
+
+
+def sketch_encode_ref(xb: jnp.ndarray, block_ids: jnp.ndarray,
+                      cfg: CompressionConfig) -> jnp.ndarray:
+    """(nb, G, c) -> (nb, rows, c), same contract as sketch_encode_pallas."""
+    return encode_blocks(xb, block_ids, cfg)
+
+
+def sketch_peel_ref(sketch: jnp.ndarray, bits: jnp.ndarray,
+                    block_ids: jnp.ndarray, cfg: CompressionConfig):
+    """Returns (values f32, residual int8), same contract as
+    sketch_peel_pallas.
+
+    Note the oracle's while_loop exits at the peeling fixpoint; the kernel
+    always runs ``cfg.rounds`` rounds. Both reach the same fixpoint
+    because post-fixpoint rounds peel nothing.
+    """
+    r = peel_blocks(sketch, bits != 0, block_ids, cfg)
+    return r.values, r.residual.astype(jnp.int8)

@@ -1,0 +1,282 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    # XLA:CPU crashes cloning bf16 all-reduces in its promotion pass, and
+    # its LICM hoists the bf16->f32 convert of the *entire* saved
+    # activation stack out of the backward loop (f32 copy of all
+    # residuals); neither pass runs like this on TPU. See DESIGN.md.
+    "--xla_disable_hlo_passes=all-reduce-promotion,"
+    "while-loop-invariant-code-motion "
+    + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: AOT lower + compile every (arch x shape x mesh)
+cell with ShapeDtypeStruct placeholders — no real allocation — and record
+memory analysis, cost analysis and the collective schedule for the
+roofline report.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Results land in benchmarks/artifacts/dryrun/<mesh>/<arch>__<shape>.json
+(one file per cell, re-runs skip finished cells unless --force).
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+from collections import Counter, defaultdict
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES, get_arch, make_batch_struct
+from repro.models.registry import model_api
+from repro.train.step import (init_train_state, build_train_step,
+                              batch_specs)
+from repro.serve.steps import (build_prefill_step, build_decode_step,
+                               serve_shardings)
+from repro.launch.mesh import make_production_mesh
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__),
+                            "../../../benchmarks/artifacts/dryrun")
+
+
+# ----------------------------------------------------------------------
+# Collective-schedule extraction from compiled HLO
+# ----------------------------------------------------------------------
+
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s64|s32|u64|u32|s16|u16|s8|u8|pred)"
+                       r"\[([\d,]*)\]")
+_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+          "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+          "pred": 1}
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", )
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of (possibly tuple) HLO type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Any]:
+    """Per-op-type operand-byte totals (per-device payloads; SPMD shapes)."""
+    per_op = defaultdict(lambda: {"count": 0, "bytes": 0})
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.match(line)
+        if not m:
+            continue
+        name, result_type, op = m.group(1), m.group(2), m.group(3)
+        if name.endswith(".done") or "-done(" in line:
+            continue   # async pair: count the -start only
+        # operand bytes: for all-gather the result is n_shards x operand,
+        # so use the *operand* side = payload actually contributed.
+        # operands appear after the opcode's '('
+        paren = line.split("(", 1)[1]
+        # operand types are not inline; approximate with result bytes for
+        # reduce-like ops and result/n for all-gather via replica_groups
+        res_bytes = _shape_bytes(result_type)
+        groups = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+        gsize = 1
+        if groups:
+            gsize = len(groups.group(1).split(","))
+        else:
+            g2 = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+            if g2:
+                gsize = int(g2.group(2))
+        if op == "all-gather":
+            operand_bytes = res_bytes // max(gsize, 1)
+        else:
+            operand_bytes = res_bytes
+        d = per_op[op]
+        d["count"] += 1
+        d["bytes"] += operand_bytes
+        per_op[op].setdefault("group_sizes", Counter())
+        per_op[op]["group_sizes"][gsize] += 1
+    out = {}
+    for op, d in per_op.items():
+        out[op] = {"count": d["count"], "bytes": d["bytes"],
+                   "group_sizes": dict(d.get("group_sizes", {}))}
+    return out
+
+
+# ----------------------------------------------------------------------
+# Cell builders
+# ----------------------------------------------------------------------
+
+def lower_cell(arch_name: str, shape_name: str, mesh, train_override=None):
+    """Returns jax Lowered for one cell."""
+    arch = get_arch(arch_name)
+    shape = SHAPES[shape_name]
+    cfg = arch.model
+    api = model_api(cfg)
+    tc = train_override or arch.train
+    prof = tc.sharding
+
+    if shape.kind == "train":
+        state_struct = jax.eval_shape(
+            lambda: init_train_state(api, tc, mesh, jax.random.PRNGKey(0)))
+        make = build_train_step(api, tc, mesh)
+        step_fn, specs = make(state_struct)
+        batch_struct = make_batch_struct(cfg, shape.global_batch,
+                                         shape.seq_len)
+        _, bnamed = batch_specs(batch_struct, mesh, tc)
+        jitted = jax.jit(step_fn, in_shardings=(specs["named"], bnamed),
+                         out_shardings=(specs["named"], None),
+                         donate_argnums=(0,))
+        return jitted.lower(state_struct, batch_struct)
+
+    sh = serve_shardings(api, prof, mesh, shape.global_batch, shape.seq_len)
+    if shape.kind == "prefill":
+        fn = build_prefill_step(api, prof, mesh, shape.seq_len)
+        batch_struct = {"tokens": jax.ShapeDtypeStruct(
+            (shape.global_batch, shape.seq_len), jnp.int32)}
+        bshard: Dict[str, Any] = {"tokens": sh["batch"]}
+        if cfg.family == "encdec":
+            batch_struct["frames"] = jax.ShapeDtypeStruct(
+                (shape.global_batch, cfg.enc_seq, cfg.d_model), jnp.float32)
+            bshard["frames"] = sh["batch"]
+        if cfg.family == "vlm":
+            batch_struct["vis_embed"] = jax.ShapeDtypeStruct(
+                (shape.global_batch, cfg.vis_tokens, cfg.d_model),
+                jnp.float32)
+            bshard["vis_embed"] = sh["batch"]
+        jitted = jax.jit(fn, in_shardings=(sh["params"], bshard))
+        return jitted.lower(sh["params_struct"], batch_struct)
+
+    # decode
+    fn = build_decode_step(api, prof, mesh)
+    token_struct = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+    pos_struct = jax.ShapeDtypeStruct((), jnp.int32)
+    jitted = jax.jit(fn, in_shardings=(sh["params"], sh["batch"],
+                                       sh["cache"], None),
+                     out_shardings=(None, sh["cache"]),
+                     donate_argnums=(2,))
+    return jitted.lower(sh["params_struct"], token_struct,
+                        sh["cache_struct"], pos_struct)
+
+
+def run_cell(arch_name: str, shape_name: str, mesh_name: str,
+             force: bool = False, train_override=None) -> Dict[str, Any]:
+    mesh_dir = os.path.join(ARTIFACT_DIR, mesh_name)
+    os.makedirs(mesh_dir, exist_ok=True)
+    out_path = os.path.join(mesh_dir, f"{arch_name}__{shape_name}.json")
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            prev = json.load(f)
+        if prev.get("status") in ("ok", "skip"):
+            return prev           # errored cells are always retried
+
+    arch = get_arch(arch_name)
+    shape = SHAPES[shape_name]
+    rec: Dict[str, Any] = {
+        "arch": arch_name, "shape": shape_name, "mesh": mesh_name,
+        "kind": shape.kind, "seq_len": shape.seq_len,
+        "global_batch": shape.global_batch,
+        "params_total": arch.model.param_count(),
+        "params_active": arch.model.active_param_count(),
+        "aggregator": arch.train.aggregator,
+    }
+    ok, why = arch.shape_supported(shape)
+    if not ok:
+        rec["status"] = "skip"
+        rec["reason"] = why
+        with open(out_path, "w") as f:
+            json.dump(rec, f, indent=1)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    try:
+        t0 = time.time()
+        lowered = lower_cell(arch_name, shape_name, mesh, train_override)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t0 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t0, 2)
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_per_device_gib": round(
+                (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                 + mem.output_size_in_bytes - mem.alias_size_in_bytes)
+                / 2**30, 3),
+        }
+        cost = compiled.cost_analysis()
+        rec["cost"] = {
+            "flops": cost.get("flops", 0.0),
+            "bytes_accessed": cost.get("bytes accessed", 0.0),
+        }
+        hlo = compiled.as_text()
+        rec["collectives"] = parse_collectives(hlo)
+        # persist compiled HLO for the roofline extractor (trip-count
+        # corrected FLOPs/collectives — cost_analysis counts while bodies
+        # once, so scanned layers would be undercounted by L x)
+        import gzip
+        hlo_path = out_path.replace(".json", ".hlo.gz")
+        with gzip.open(hlo_path, "wt") as f:
+            f.write(hlo)
+        rec["hlo"] = os.path.basename(hlo_path)
+        rec["status"] = "ok"
+    except Exception as e:                              # noqa: BLE001
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if not args.all and not args.arch and not args.shape:
+        ap.error("pass --arch/--shape or --all")
+
+    for mesh_name in meshes:
+        for arch in archs:
+            for shape in shapes:
+                t0 = time.time()
+                rec = run_cell(arch, shape, mesh_name, force=args.force)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    extra = (f"compile {rec.get('compile_s', '?')}s "
+                             f"mem {rec['memory']['peak_per_device_gib']}GiB "
+                             f"flops {rec['cost']['flops']:.2e}")
+                elif status == "error":
+                    extra = rec["error"][:120]
+                print(f"[{mesh_name}] {arch:18s} {shape:12s} {status:5s} "
+                      f"({time.time()-t0:.1f}s) {extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state — the dry-run must set XLA_FLAGS before the
+first jax initialisation.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 chips per pod ("data", "model"); 2 pods when multi_pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+
+
+def make_host_mesh(model_parallel: int = 1, axis_names=("data", "model")):
+    """Mesh over whatever devices this host actually has (tests, examples)."""
+    n = len(jax.devices())
+    data = max(1, n // model_parallel)
+    return jax.make_mesh((data, model_parallel), axis_names,
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

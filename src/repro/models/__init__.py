@@ -1,0 +1,8 @@
+"""Model zoo: dense GQA, MoE, Mamba2 SSD, hybrid (Jamba-style), whisper
+enc-dec, VLM-stub — all as pure-functional JAX modules with scan-stacked
+layers."""
+
+from .config import ModelConfig, MoEConfig, SSMConfig
+from .registry import model_api, ModelAPI
+
+__all__ = ["ModelConfig", "MoEConfig", "SSMConfig", "model_api", "ModelAPI"]

@@ -1,0 +1,61 @@
+"""Family -> model function dispatch.
+
+Uniform interface used by the train/serve step builders:
+
+  api = model_api(cfg)
+  params = api.init(key)
+  loss, metrics = api.loss(params, batch, remat=...)
+  logits, cache = api.prefill(params, batch, max_len)
+  logits, cache = api.decode(params, token, cache, position)
+  cache = api.init_cache(params, batch_size, max_len)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict
+
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from . import transformer as T
+from . import encdec as E
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: ModelConfig
+    init: Callable
+    loss: Callable
+    prefill: Callable
+    decode: Callable
+    init_cache: Callable
+
+
+def model_api(cfg: ModelConfig) -> ModelAPI:
+    if cfg.family == "encdec":
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda key: E.init_encdec(key, cfg),
+            loss=lambda p, batch, remat="none": E.encdec_loss(
+                p, cfg, batch, remat=remat),
+            prefill=lambda p, batch, max_len: E.encdec_prefill(
+                p, cfg, batch["frames"], batch["tokens"], max_len),
+            decode=lambda p, tok, cache, pos: E.encdec_decode(
+                p, cfg, tok, cache, pos),
+            init_cache=lambda p, b, s: E.init_encdec_cache(p, cfg, b, s),
+        )
+
+    def _prefill(p, batch, max_len):
+        return T.lm_prefill(p, cfg, batch["tokens"], max_len,
+                            vis_embed=batch.get("vis_embed"))
+
+    return ModelAPI(
+        cfg=cfg,
+        init=lambda key: T.init_lm(key, cfg),
+        loss=lambda p, batch, remat="none": T.lm_loss(p, cfg, batch,
+                                                      remat=remat),
+        prefill=_prefill,
+        decode=lambda p, tok, cache, pos: T.lm_decode(p, cfg, tok, cache, pos),
+        init_cache=lambda p, b, s: T.init_cache(p, cfg, b, s),
+    )

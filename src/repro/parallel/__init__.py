@@ -1,0 +1,5 @@
+"""Distribution: logical sharding hints, partition rules, input specs."""
+
+from .hints import logical_axis_rules, constrain
+
+__all__ = ["logical_axis_rules", "constrain"]

@@ -1,0 +1,234 @@
+"""Parameter / activation / cache partition rules.
+
+Megatron-style tensor parallelism on the ``model`` axis, expert
+parallelism on a configurable axis set, vocab-sharded embeddings, and
+shape-dependent cache sharding for serving (sequence parallelism when the
+batch cannot cover the data axis).
+
+Rules are *path-based*: the leaf's own name plus its parent module name
+select the spec, so the same table covers dense layers, MoE experts,
+Mamba blocks and the hybrid ``pos{i}`` nesting without per-model code.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P, NamedSharding
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingProfile:
+    """Per-architecture distribution choices."""
+    dp_axes: Tuple[str, ...] = ("pod", "data")   # manual grad-agg axes
+    tp_axis: Optional[str] = "model"             # None = pure DP (params
+                                                 # replicated, paper arm)
+    ep_axes: Tuple[str, ...] = ("model",)        # expert dim of MoE weights
+    ep_ff_axis: Optional[str] = None             # extra axis on expert d_ff
+    vocab_axis: Optional[str] = "model"
+    zero1: bool = True                           # shard optimizer state on dp
+    batch_auto_axes: Tuple[str, ...] = ()        # batch sharded on *auto*
+                                                 # axes (e.g. kimi: data is
+                                                 # an EP axis, dp is pod)
+
+    def logical_rules(self, inside_manual_dp: bool) -> dict:
+        """Mapping for activation hints (repro.parallel.hints)."""
+        if inside_manual_dp:
+            dp = (self.batch_auto_axes if len(self.batch_auto_axes) > 1 else
+                  (self.batch_auto_axes[0] if self.batch_auto_axes else None))
+        else:
+            all_dp = tuple(self.dp_axes) + tuple(self.batch_auto_axes)
+            dp = all_dp if len(all_dp) > 1 else (all_dp[0] if all_dp else None)
+        return {
+            "dp": dp,
+            "tp": self.tp_axis,
+            "ep": self.ep_axes if len(self.ep_axes) > 1 else self.ep_axes[0],
+            "sp": self.tp_axis or "model",
+        }
+
+
+# ----------------------------------------------------------------------
+# Parameter rules
+# ----------------------------------------------------------------------
+
+def _leaf_spec(path: Tuple[str, ...], leaf, prof: ShardingProfile,
+               stacked: bool) -> P:
+    """Spec for one parameter leaf. ``stacked`` = has leading layer dim."""
+    name = path[-1]
+    parent = path[-2] if len(path) >= 2 else ""
+    tp = prof.tp_axis
+    lead: Tuple = (None,) if stacked else ()
+
+    def spec(*parts):
+        return P(*(lead + parts))
+
+    # --- embeddings / head (never layer-stacked) ---
+    if name == "embed":
+        return P(prof.vocab_axis, None)
+    if name == "lm_head":
+        return P(None, prof.vocab_axis)
+
+    # --- attention ---
+    if parent in ("attn", "xattn"):
+        if name in ("wq", "wk", "wv"):
+            return spec(None, tp)
+        if name == "wo":
+            return spec(tp, None)
+        if name in ("bq", "bk", "bv"):
+            return spec(tp)
+
+    # --- dense FFN (incl. MoE shared expert) ---
+    if parent in ("ffn", "mlp", "shared"):
+        if name in ("w_gate", "w_up"):
+            return spec(None, tp)
+        if name == "w_down":
+            return spec(tp, None)
+
+    # --- MoE experts ---
+    if name == "router":
+        return spec(None, None)
+    if name in ("we_gate", "we_up"):
+        ep = prof.ep_axes if len(prof.ep_axes) > 1 else prof.ep_axes[0]
+        return spec(ep, None, prof.ep_ff_axis)
+    if name == "we_down":
+        ep = prof.ep_axes if len(prof.ep_axes) > 1 else prof.ep_axes[0]
+        return spec(ep, prof.ep_ff_axis, None)
+
+    # --- Mamba ---
+    if parent == "mamba":
+        if name in ("wx", "wz", "wdt"):
+            return spec(None, tp)
+        if name == "wo":
+            return spec(tp, None)
+        if name in ("A_log", "D_skip", "dt_bias"):
+            return spec(tp)
+        if name in ("wB", "wC", "conv_w", "conv_b"):
+            return spec(*(None,) * (leaf.ndim - len(lead)))
+
+    # --- norms / scalars: replicated ---
+    return spec(*(None,) * (leaf.ndim - len(lead)))
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    out = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            out.append(str(k.key))
+        elif isinstance(k, jax.tree_util.GetAttrKey):
+            out.append(k.name)
+        else:
+            out.append(str(k))
+    return tuple(out)
+
+
+_STACKED_ROOTS = ("layers", "superblocks", "enc_layers", "dec_layers")
+
+
+def param_pspecs(params: Any, prof: ShardingProfile) -> Any:
+    """PartitionSpec pytree matching ``params``."""
+    def fn(path, leaf):
+        names = _path_names(path)
+        stacked = any(n in _STACKED_ROOTS for n in names)
+        return _leaf_spec(names, leaf, prof, stacked)
+    return jax.tree_util.tree_map_with_path(fn, params)
+
+
+def param_shardings(params: Any, prof: ShardingProfile, mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_pspecs(params, prof),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def filter_rules_for_mesh(rules: dict, mesh) -> dict:
+    """Drop logical-rule axes the mesh doesn't have (e.g. 'pod' on a
+    single-pod mesh)."""
+    def keep(v):
+        if v is None:
+            return None
+        if isinstance(v, (tuple, list)):
+            kept = tuple(a for a in v if a in mesh.shape)
+            return kept if kept else None
+        return v if v in mesh.shape else None
+    return {k: keep(v) for k, v in rules.items()}
+
+
+def strip_axes(spec: P, axes: Sequence[str]) -> P:
+    """Remove references to ``axes`` from a spec (for nested shard_map)."""
+    drop = set(axes)
+    parts = []
+    for s in spec:
+        if s is None:
+            parts.append(None)
+        elif isinstance(s, (tuple, list)):
+            kept = tuple(a for a in s if a not in drop)
+            parts.append(kept if kept else None)
+        else:
+            parts.append(None if s in drop else s)
+    return P(*parts)
+
+
+# ----------------------------------------------------------------------
+# Batch / cache specs per serving shape
+# ----------------------------------------------------------------------
+
+def batch_pspec(global_batch: int, mesh, prof: ShardingProfile) -> P:
+    """Batch-dim sharding: all DP axes the batch can cover."""
+    axes = [a for a in ("pod", "data") if a in mesh.shape]
+    covered = []
+    size = 1
+    for a in axes:
+        if global_batch % (size * mesh.shape[a]) == 0:
+            covered.append(a)
+            size *= mesh.shape[a]
+    return P(tuple(covered)) if covered else P()
+
+
+def cache_pspecs(cfg: ModelConfig, global_batch: int, mesh,
+                 prof: ShardingProfile) -> Any:
+    """Specs for the decode cache pytree (see models init_cache layout).
+
+    Large batch: shard batch over DP axes, sequence over the TP axis
+    (sequence-parallel KV — every model shard holds a sequence slice and
+    GSPMD's softmax/contract reductions realise flash-decoding combines).
+    batch == 1 (long-context): shard the sequence over *all* axes.
+    """
+    dp = batch_pspec(global_batch, mesh, prof)
+    dp_names = dp[0] if len(dp) else None
+    if global_batch >= _dp_size(mesh):
+        b_ax, s_ax = dp_names, prof.tp_axis
+    else:
+        b_ax, s_ax = None, tuple(mesh.axis_names)   # everything on seq
+
+    def kv_spec(ndim_hint=None):
+        # (L, B, S, KV, hd)
+        return P(None, b_ax, s_ax, None, None)
+
+    def mamba_state_spec(extra_lead: int):
+        lead = (None,) * extra_lead
+        return {
+            "ssm": P(*lead, b_ax, prof.tp_axis, None, None),
+            "conv": P(*lead, b_ax, None, None),
+        }
+
+    if cfg.family == "ssm":
+        return {"ssm": mamba_state_spec(1)}
+    if cfg.family == "hybrid":
+        return {"mamba": mamba_state_spec(2),
+                "kv": {"k": kv_spec(), "v": kv_spec()}}
+    if cfg.family == "encdec":
+        return {"k": kv_spec(), "v": kv_spec(),
+                "xk": P(None, b_ax, None, None, None),
+                "xv": P(None, b_ax, None, None, None)}
+    return {"k": kv_spec(), "v": kv_spec()}
+
+
+def _dp_size(mesh) -> int:
+    n = 1
+    for a in ("pod", "data"):
+        if a in mesh.shape:
+            n *= mesh.shape[a]
+    return n

@@ -1,0 +1,79 @@
+"""Serving step builders — pure jit + GSPMD auto-sharding.
+
+These produce the (function, in_shardings, out_shardings, placeholder
+inputs) tuples the multi-pod dry-run lowers and compiles for the
+``prefill_*`` / ``decode_*`` / ``long_*`` shape cells.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.registry import ModelAPI
+from repro.parallel import sharding as shd
+from repro.parallel.hints import logical_axis_rules
+
+
+def serve_batch_pspec(global_batch: int, mesh, prof) -> P:
+    return shd.batch_pspec(global_batch, mesh, prof)
+
+
+def build_prefill_step(api: ModelAPI, prof: shd.ShardingProfile, mesh,
+                       max_len: int):
+    rules = shd.filter_rules_for_mesh(
+        prof.logical_rules(inside_manual_dp=False), mesh)
+
+    def prefill_fn(params, batch):
+        with logical_axis_rules(rules, mesh=mesh):
+            return api.prefill(params, batch, max_len)
+
+    return prefill_fn
+
+
+def build_decode_step(api: ModelAPI, prof: shd.ShardingProfile, mesh):
+    rules = shd.filter_rules_for_mesh(
+        prof.logical_rules(inside_manual_dp=False), mesh)
+
+    def decode_fn(params, token, cache, position):
+        with logical_axis_rules(rules, mesh=mesh):
+            return api.decode(params, token, cache, position)
+
+    return decode_fn
+
+
+def serve_shardings(api: ModelAPI, prof: shd.ShardingProfile, mesh,
+                    global_batch: int, seq_len: int):
+    """NamedShardings for (params, batch/token, cache) of serve steps."""
+    cfg = api.cfg
+    params_struct = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    pspecs = shd.param_pspecs(params_struct, prof)
+    p_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+    bspec = shd.batch_pspec(global_batch, mesh, prof)
+    b_sh = NamedSharding(mesh, bspec)
+    cache_struct = jax.eval_shape(
+        lambda: api.init_cache(params_struct, global_batch, seq_len))
+    cspecs = shd.cache_pspecs(cfg, global_batch, mesh, prof)
+
+    def _apply(spec_tree, struct_tree):
+        return jax.tree.map(
+            lambda s, _: NamedSharding(mesh, s), spec_tree, struct_tree,
+            is_leaf=lambda x: isinstance(x, P))
+
+    # cache spec tree is coarser than the struct tree (one spec per group
+    # for mamba states); broadcast specs over matching subtrees
+    def broadcast(spec, struct):
+        if isinstance(spec, P):
+            return jax.tree.map(lambda _: NamedSharding(mesh, spec), struct)
+        if isinstance(spec, dict):
+            return {k: broadcast(spec[k], struct[k]) for k in struct}
+        raise TypeError(type(spec))
+
+    c_sh = broadcast(cspecs, cache_struct)
+    return {"params_struct": params_struct, "params": p_sh,
+            "batch": b_sh, "cache_struct": cache_struct, "cache": c_sh,
+            "pspecs": pspecs}

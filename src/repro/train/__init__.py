@@ -1,0 +1,9 @@
+"""Training substrate: optimizer, step builder (manual-DP shard_map +
+compressed aggregation + ZeRO-1), loop with fault tolerance."""
+
+from .config import TrainConfig
+from .optimizer import OptimizerConfig
+from .step import TrainState, init_train_state, build_train_step
+
+__all__ = ["TrainConfig", "OptimizerConfig", "TrainState",
+           "init_train_state", "build_train_step"]

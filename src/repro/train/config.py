@@ -1,0 +1,30 @@
+"""Top-level training configuration: aggregation mode (the paper's knob),
+parallelism profile, optimizer, memory policy."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from repro.core.config import CompressionConfig
+from repro.parallel.sharding import ShardingProfile
+from .optimizer import OptimizerConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    aggregator: str = "compressed"       # "dense" (NCCL-baseline analogue)
+                                         # | "compressed" (the paper)
+    compression: CompressionConfig = dataclasses.field(
+        default_factory=CompressionConfig)
+    optimizer: OptimizerConfig = dataclasses.field(
+        default_factory=OptimizerConfig)
+    sharding: ShardingProfile = dataclasses.field(
+        default_factory=ShardingProfile)
+    remat: str = "block"                 # "none" | "block" | "dots"
+    accum_steps: int = 1                 # microbatch gradient accumulation
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.aggregator not in ("dense", "compressed"):
+            raise ValueError(self.aggregator)

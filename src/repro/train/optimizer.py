@@ -1,0 +1,89 @@
+"""Optimizers in plain JAX (AdamW, SGD-momentum) with dtype-configurable
+moments, plus the warmup-cosine schedule.
+
+The update functions are strictly elementwise so they can be applied to
+full leaves (replicated optimizer) or to ZeRO-1 shard slices — the caller
+decides the granularity.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    kind: str = "adamw"           # "adamw" | "momentum"
+    lr: float = 3e-4
+    min_lr_frac: float = 0.1
+    warmup_steps: int = 200
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    momentum: float = 0.9
+    grad_clip: float = 1.0
+    state_dtype: str = "float32"  # moments dtype ("bfloat16" for 1T-scale)
+
+    @property
+    def _sdt(self):
+        return jnp.bfloat16 if self.state_dtype == "bfloat16" else jnp.float32
+
+
+def lr_schedule(step: jnp.ndarray, cfg: OptimizerConfig) -> jnp.ndarray:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def init_opt_state(params: Any, cfg: OptimizerConfig) -> Dict[str, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, cfg._sdt)
+    if cfg.kind == "adamw":
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+    if cfg.kind == "momentum":
+        return {"m": jax.tree.map(zeros, params)}
+    raise ValueError(cfg.kind)
+
+
+def opt_leaf_update(p: jnp.ndarray, g: jnp.ndarray, state: Dict[str, jnp.ndarray],
+                    lr: jnp.ndarray, step: jnp.ndarray, cfg: OptimizerConfig
+                    ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Elementwise update of one leaf (or one ZeRO slice of a leaf)."""
+    g = g.astype(jnp.float32)
+    pf = p.astype(jnp.float32)
+    if cfg.kind == "adamw":
+        m = state["m"].astype(jnp.float32) * cfg.b1 + g * (1 - cfg.b1)
+        v = state["v"].astype(jnp.float32) * cfg.b2 + jnp.square(g) * (1 - cfg.b2)
+        t = step.astype(jnp.float32) + 1.0
+        mh = m / (1 - cfg.b1 ** t)
+        vh = v / (1 - cfg.b2 ** t)
+        upd = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * pf
+        new_p = (pf - lr * upd).astype(p.dtype)
+        return new_p, {"m": m.astype(state["m"].dtype),
+                       "v": v.astype(state["v"].dtype)}
+    # momentum
+    m = state["m"].astype(jnp.float32) * cfg.momentum + g
+    new_p = (pf - lr * m).astype(p.dtype)
+    return new_p, {"m": m.astype(state["m"].dtype)}
+
+
+def global_grad_norm(grads: Any) -> jnp.ndarray:
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(grads))
+    return jnp.sqrt(sq)
+
+
+def clip_grads(grads: Any, norm: jnp.ndarray, max_norm: float) -> Any:
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads)

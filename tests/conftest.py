@@ -1,0 +1,20 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests must see the
+single real CPU device; multi-device tests run subprocess drivers that
+set their own flags (tests/drivers/)."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_sparse(n, frac, seed=0, dtype=np.float32):
+    r = np.random.default_rng(seed)
+    x = np.zeros(n, dtype)
+    k = int(n * frac)
+    if k:
+        idx = r.choice(n, size=k, replace=False)
+        x[idx] = r.normal(size=k).astype(dtype)
+    return x

@@ -1,0 +1,83 @@
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (CompressionConfig, HomomorphicCompressor,
+                        CompressedLeaf)
+from conftest import make_sparse
+
+CFG = CompressionConfig(ratio=0.1, lanes=512, rows=6, rounds=10,
+                        chunk_blocks=16)
+
+
+@pytest.mark.parametrize("n", [5_000, 61_440, 200_000])
+@pytest.mark.parametrize("frac", [0.0, 0.005, 0.03])
+def test_roundtrip_lossless(n, frac):
+    x = make_sparse(n, frac, seed=n + int(frac * 1000))
+    comp = HomomorphicCompressor(CFG)
+    c = comp.compress(jnp.asarray(x))
+    xr, st = comp.recover(c, n, with_stats=True)
+    assert int(st.residual) == 0
+    np.testing.assert_allclose(np.asarray(xr), x, atol=1e-6)
+
+
+def test_multiworker_aggregation_lossless():
+    n, W = 150_000, 8
+    comp = HomomorphicCompressor(CFG)
+    xs = [make_sparse(n, 0.004, s) for s in range(W)]
+    comps = [comp.compress(jnp.asarray(x)) for x in xs]
+    agg = CompressedLeaf(
+        sketch=sum(c.sketch for c in comps),
+        index_words=jnp.asarray(np.bitwise_or.reduce(
+            [np.asarray(c.index_words) for c in comps])))
+    xr, st = comp.recover(agg, n, with_stats=True)
+    assert int(st.residual) == 0
+    np.testing.assert_allclose(np.asarray(xr), np.sum(xs, 0), atol=1e-5)
+
+
+def test_matrix_shaped_leaf():
+    comp = HomomorphicCompressor(CFG)
+    x = make_sparse(64 * 384, 0.02, 7).reshape(64, 384)
+    c = comp.compress(jnp.asarray(x))
+    xr = comp.recover(c, x.size, shape=x.shape)
+    assert xr.shape == x.shape
+    np.testing.assert_allclose(np.asarray(xr), x, atol=1e-6)
+
+
+def test_wire_accounting():
+    comp = HomomorphicCompressor(CFG)
+    wb = comp.wire_bytes(1_000_000)
+    # fp32 sketch at ratio 0.1 of elements = 0.2 of bf16 bytes, + bitmap
+    assert 0.2 < wb["wire_fraction"] < 0.35
+    assert wb["index_bytes"] * 8 >= 1_000_000  # >= 1 bit per element
+
+
+def test_bloom_index_mode():
+    cfg = CompressionConfig(ratio=0.2, lanes=512, rows=6, rounds=10,
+                            index="bloom", bloom_bits_ratio=0.25,
+                            chunk_blocks=16)
+    comp = HomomorphicCompressor(cfg)
+    x = make_sparse(100_000, 0.005, 9)
+    c = comp.compress(jnp.asarray(x))
+    # bloom index is smaller than the bitmap would be
+    assert c.index_words.size * 32 < 1.05 * cfg.bloom_bits_ratio * 130_000
+    xr = comp.recover(c, x.size)
+    np.testing.assert_allclose(np.asarray(xr), x, atol=1e-5)
+
+
+def test_estimate_mode_is_lossy_but_unbiased():
+    comp = HomomorphicCompressor(CFG)
+    x = make_sparse(100_000, 0.02, 11)
+    c = comp.compress(jnp.asarray(x))
+    est = np.asarray(comp.estimate(c, x.size))
+    # exact on zeros (bitmap gate), approximate elsewhere
+    assert np.all(est[x == 0] == 0)
+
+
+def test_jit_compatible():
+    comp = HomomorphicCompressor(CFG)
+    x = jnp.asarray(make_sparse(60_000, 0.01, 13))
+    c = jax.jit(comp.compress)(x)
+    xr = jax.jit(lambda c: comp.recover(c, 60_000))(c)
+    np.testing.assert_allclose(np.asarray(xr), np.asarray(x), atol=1e-6)

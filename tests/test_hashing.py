@@ -1,0 +1,50 @@
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import hashing
+from repro.core.config import CompressionConfig
+
+
+def test_mix32_deterministic_and_spread():
+    x = np.arange(10000, dtype=np.uint32)
+    h1, h2 = hashing.mix32_np(x), hashing.mix32_np(x)
+    assert np.array_equal(h1, h2)
+    # decent spread: all byte values hit
+    assert len(np.unique(h1 & 0xFF)) == 256
+
+
+def test_mix32_jnp_matches_np():
+    x = np.arange(4096, dtype=np.uint32)
+    a = hashing.mix32_np(x)
+    b = np.asarray(hashing.mix32(jnp.asarray(x)))
+    assert np.array_equal(a, b)
+
+
+def test_batch_rows_partitioned():
+    rows = hashing.batch_rows(group=60, rows=6, seed=1)
+    assert rows.shape == (60, 3)
+    for j in range(3):
+        assert rows[:, j].min() >= j * 2
+        assert rows[:, j].max() < (j + 1) * 2
+
+
+def test_batch_signs_pm1():
+    s = hashing.batch_signs(group=128, seed=3)
+    assert set(np.unique(s)) <= {-1.0, 1.0}
+    # roughly balanced
+    assert 0.3 < (s > 0).mean() < 0.7
+
+
+def test_block_rotations_range_and_block_dependence():
+    ids = jnp.arange(8, dtype=jnp.int32)
+    rot = np.asarray(hashing.block_rotations(ids, 16, 512, seed=0))
+    assert rot.shape == (8, 16, 3)
+    assert rot.min() >= 0 and rot.max() < 512
+    assert not np.array_equal(rot[0], rot[1])  # per-block variation
+
+
+def test_bloom_positions_in_range():
+    ids = jnp.arange(1000, dtype=jnp.uint32)
+    pos = np.asarray(hashing.bloom_positions(ids, 3, 4096, seed=0))
+    assert pos.shape == (1000, 3)
+    assert pos.min() >= 0 and pos.max() < 4096

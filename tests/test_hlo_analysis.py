@@ -1,0 +1,63 @@
+"""Unit tests for the trip-count-corrected HLO analyzer on synthetic HLO."""
+from benchmarks import hlo_analysis as ha
+
+SYNTH = """
+HloModule test
+
+%wbody (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,16] get-tuple-element(%p), index=1
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  %ar = f32[8,16] all-reduce(%x), replica_groups={{0,1,2,3}}, to_apply=%add
+  ROOT %t = (s32[], f32[8,16]) tuple(%ni, %ar)
+}
+
+%wcond (pc: (s32[], f32[8,16])) -> pred[] {
+  %pc = (s32[], f32[8,16]) parameter(0)
+  %ic = s32[] get-tuple-element(%pc), index=0
+  %n = s32[] constant(28)
+  ROOT %lt = pred[] compare(%ic, %n), direction=LT
+}
+
+ENTRY %main (a: f32[8,16], b: f32[16,32]) -> f32[8,32] {
+  %a = f32[8,16] parameter(0)
+  %b = f32[16,32] parameter(1)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[8,16]) tuple(%zero, %a)
+  %w = (s32[], f32[8,16]) while(%init), condition=%wcond, body=%wbody
+  %aw = f32[8,16] get-tuple-element(%w), index=1
+  ROOT %d = f32[8,32] dot(%aw, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+
+
+def test_shape_parse():
+    elems, b = ha.shape_elems_bytes("f32[8,16]")
+    assert elems == 128 and b == 512
+    elems, b = ha.shape_elems_bytes("(s32[], f32[8,16])")
+    assert b == 4 + 512
+
+
+def test_trip_count_and_multipliers():
+    comps = ha.parse_computations(SYNTH)
+    assert set(comps) >= {"wbody", "wcond", "main"}
+    mult = ha.execution_multipliers(comps)
+    assert mult["wbody"] == 28
+    assert mult["main"] == 1
+
+
+def test_collective_trip_correction():
+    s = ha.analyze(SYNTH)
+    ar = s.collectives["all-reduce"]
+    assert ar["count"] == 28                      # 1 op x 28 trips
+    assert ar["bytes"] == 28 * 512
+    # ring wire bytes: 2 * (g-1)/g * operand
+    assert abs(ar["wire_bytes"] - 28 * 512 * 2 * 3 / 4) < 1e-6
+
+
+def test_dot_flops():
+    s = ha.analyze(SYNTH)
+    # dot: (8,16) x (16,32): 2*8*32*16 = 8192 flops, outside the loop
+    assert s.dot_flops == 8192

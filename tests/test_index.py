@@ -1,0 +1,55 @@
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import CompressionConfig
+from repro.core import index as idx
+from conftest import make_sparse
+
+
+def test_pack_unpack_roundtrip():
+    r = np.random.default_rng(0)
+    bits = r.random((4, 8, 64)) < 0.3
+    words = idx.pack_bits(jnp.asarray(bits))
+    assert words.dtype == jnp.uint32
+    assert words.shape[0] == bits.size // 32
+    back = idx.unpack_bits(words, bits.shape)
+    assert np.array_equal(np.asarray(back), bits)
+
+
+def test_pack_rejects_unaligned():
+    with pytest.raises(ValueError):
+        idx.pack_bits(jnp.ones((33,), bool))
+
+
+def test_packed_or_equals_mask_or():
+    r = np.random.default_rng(1)
+    a = r.random(2048) < 0.2
+    b = r.random(2048) < 0.2
+    wa, wb = idx.pack_bits(jnp.asarray(a)), idx.pack_bits(jnp.asarray(b))
+    both = idx.unpack_bits(wa | wb, (2048,))
+    assert np.array_equal(np.asarray(both), a | b)
+
+
+def test_bloom_no_false_negatives():
+    cfg = CompressionConfig(bloom_bits_ratio=0.5, bloom_hashes=3)
+    x = make_sparse(32_768, 0.01, 2).reshape(4, 16, 512)
+    filt = idx.bloom_build(jnp.asarray(x), cfg)
+    cand = np.asarray(idx.bloom_query(x.shape, cfg, filt))
+    nz = x != 0
+    assert np.all(cand[nz]), "bloom filter must never miss a non-zero"
+    # and some compression: false-positive rate bounded
+    fpr = cand[~nz].mean()
+    assert fpr < 0.2
+
+
+def test_bloom_or_homomorphic():
+    cfg = CompressionConfig(bloom_bits_ratio=0.5)
+    x1 = make_sparse(16_384, 0.01, 3).reshape(2, 16, 512)
+    x2 = make_sparse(16_384, 0.01, 4).reshape(2, 16, 512)
+    f1 = idx.bloom_build(jnp.asarray(x1), cfg)
+    f2 = idx.bloom_build(jnp.asarray(x2), cfg)
+    fs = idx.bloom_build(jnp.asarray(np.where(x1 != 0, x1, x2)), cfg)
+    # union of filters covers the union of supports
+    cand = np.asarray(idx.bloom_query(x1.shape, cfg, f1 | f2))
+    assert np.all(cand[(x1 != 0) | (x2 != 0)])

@@ -1,0 +1,81 @@
+"""Pallas kernels (interpret mode) vs the pure-jnp oracle: shape/dtype
+sweeps per the brief."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import CompressionConfig
+from repro.kernels import (sketch_encode_pallas, sketch_peel_pallas, ref)
+from repro.kernels.ops import sketch_encode, sketch_peel
+from conftest import make_sparse
+
+
+CFGS = [
+    CompressionConfig(ratio=0.2, lanes=128, rows=6, rounds=8),
+    CompressionConfig(ratio=0.2, lanes=256, rows=6, rounds=8),
+    CompressionConfig(ratio=0.1, lanes=256, rows=12, rounds=8),
+    CompressionConfig(ratio=0.5, lanes=512, rows=6, rounds=8),
+]
+
+
+def _blocks(cfg, nb, frac, seed, dtype=np.float32):
+    x = make_sparse(nb * cfg.block_elems, frac, seed, np.float32)
+    return x.astype(dtype).reshape(nb, cfg.group, cfg.lanes)
+
+
+@pytest.mark.parametrize("cfg", CFGS, ids=[f"l{c.lanes}r{c.rows}g{c.group}"
+                                           for c in CFGS])
+@pytest.mark.parametrize("nb", [1, 3])
+def test_encode_matches_oracle(cfg, nb):
+    xb = jnp.asarray(_blocks(cfg, nb, 0.04, seed=nb))
+    ids = jnp.arange(nb, dtype=jnp.int32)
+    got = sketch_encode_pallas(xb, ids, cfg, interpret=True)
+    want = ref.sketch_encode_ref(xb, ids, cfg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=0, atol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_encode_dtypes(dtype):
+    cfg = CFGS[1]
+    xb = jnp.asarray(_blocks(cfg, 2, 0.03, 5, dtype))
+    ids = jnp.arange(2, dtype=jnp.int32)
+    got = sketch_encode_pallas(xb, ids, cfg, interpret=True)
+    want = ref.sketch_encode_ref(xb, ids, cfg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-3)
+
+
+@pytest.mark.parametrize("cfg", CFGS[:3], ids=["a", "b", "c"])
+@pytest.mark.parametrize("frac", [0.01, 0.08])
+def test_peel_matches_oracle(cfg, frac):
+    nb = 2
+    xb = jnp.asarray(_blocks(cfg, nb, frac, seed=17))
+    ids = jnp.arange(nb, dtype=jnp.int32)
+    y = ref.sketch_encode_ref(xb, ids, cfg)
+    bits = xb != 0
+    v_p, r_p = sketch_peel_pallas(y, bits, ids, cfg, interpret=True)
+    v_r, r_r = ref.sketch_peel_ref(y, bits, ids, cfg)
+    np.testing.assert_allclose(np.asarray(v_p), np.asarray(v_r), atol=1e-5)
+    assert np.array_equal(np.asarray(r_p), np.asarray(r_r))
+
+
+def test_ops_dispatch_never_uses_pallas_on_cpu():
+    cfg = CompressionConfig(ratio=0.2, lanes=128, rows=6, use_pallas="auto")
+    xb = jnp.asarray(_blocks(cfg, 1, 0.02, 3))
+    ids = jnp.arange(1, dtype=jnp.int32)
+    got = sketch_encode(xb, ids, cfg)            # auto -> ref on CPU
+    want = ref.sketch_encode_ref(xb, ids, cfg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+def test_ops_dispatch_always():
+    cfg = CompressionConfig(ratio=0.2, lanes=128, rows=6,
+                            use_pallas="always")
+    xb = jnp.asarray(_blocks(cfg, 1, 0.02, 3))
+    ids = jnp.arange(1, dtype=jnp.int32)
+    got = sketch_encode(xb, ids, cfg)            # pallas interpret path
+    want = ref.sketch_encode_ref(xb, ids, cfg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+    v_p, r_p = sketch_peel(want, xb != 0, ids, cfg)
+    v_r, r_r = ref.sketch_peel_ref(want, xb != 0, ids, cfg)
+    np.testing.assert_allclose(np.asarray(v_p), np.asarray(v_r), atol=1e-5)

@@ -1,0 +1,76 @@
+"""Per-arch smoke tests (deliverable f): reduced same-family config, one
+forward/train step on CPU, asserting output shapes + finite values."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, get_arch
+from repro.models import model_api
+from repro.data.pipeline import batch_fn
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_smoke_forward_and_grad(name):
+    arch = get_arch(name)
+    cfg = arch.smoke
+    api = model_api(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    assert n_params > 0
+    B, S = 2, 32
+    batch = batch_fn(cfg, B, S, seed=1)(0)
+    batch = {k: jnp.asarray(v) for k, v in batch.items()}
+
+    def loss_fn(p):
+        loss, metrics = api.loss(p, batch)
+        return loss, metrics
+
+    (loss, metrics), grads = jax.jit(
+        jax.value_and_grad(loss_fn, has_aux=True))(params)
+    assert np.isfinite(float(loss)), f"{name}: non-finite loss"
+    assert float(loss) > 0
+    gn = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gn) and gn > 0, f"{name}: bad grads"
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_smoke_decode_step(name):
+    arch = get_arch(name)
+    cfg = arch.smoke
+    api = model_api(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    B, CTX = 2, 16
+    cache = api.init_cache(params, B, CTX)
+    tok = jnp.ones((B,), jnp.int32)
+    logits, cache2 = jax.jit(
+        lambda p, t, c: api.decode(p, t, c, jnp.int32(3)))(params, tok, cache)
+    assert logits.shape == (B, cfg.vocab)
+    assert np.all(np.isfinite(np.asarray(logits)))
+    assert jax.tree.structure(cache2) == jax.tree.structure(cache)
+
+
+def test_published_param_counts():
+    """Full configs match the published sizes (analytic count)."""
+    expect = {
+        "qwen2-7b": (7.0e9, 8.2e9),
+        "qwen2.5-3b": (3.0e9, 3.7e9),
+        "qwen1.5-32b": (30e9, 36e9),
+        "granite-3-2b": (2.2e9, 2.9e9),
+        "mamba2-1.3b": (1.2e9, 1.45e9),
+        "internvl2-2b": (1.7e9, 2.2e9),
+        "jamba-v0.1-52b": (49e9, 54e9),
+        "deepseek-moe-16b": (15.5e9, 17.5e9),
+        "kimi-k2-1t-a32b": (0.95e12, 1.1e12),
+        "whisper-tiny": (3.0e7, 4.5e7),
+    }
+    for name, (lo, hi) in expect.items():
+        n = get_arch(name).model.param_count()
+        assert lo <= n <= hi, f"{name}: {n/1e9:.2f}B outside [{lo},{hi}]"
+
+
+def test_moe_active_params():
+    a = get_arch("kimi-k2-1t-a32b").model
+    assert 30e9 <= a.active_param_count() <= 38e9
+    d = get_arch("deepseek-moe-16b").model
+    assert 2.0e9 <= d.active_param_count() <= 3.5e9

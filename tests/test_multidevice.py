@@ -1,0 +1,33 @@
+"""Multi-device semantics via subprocess drivers (8 fake CPU devices).
+Slow-ish (~2 min total); these validate the actual distributed pipeline:
+OR-allreduce, nested-shard_map compression, ZeRO-1 vs replicated, and
+compressed-vs-dense training equivalence in the lossless regime."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+DRIVERS = os.path.join(os.path.dirname(__file__), "drivers")
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(name):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                        "--xla_disable_hlo_passes=all-reduce-promotion")
+    r = subprocess.run([sys.executable, os.path.join(DRIVERS, name)],
+                       capture_output=True, text=True, env=env, timeout=900)
+    assert r.returncode == 0, f"{name} failed:\n{r.stdout}\n{r.stderr}"
+    assert "ALL OK" in r.stdout
+
+
+@pytest.mark.slow
+def test_collectives_driver():
+    _run("collectives_driver.py")
+
+
+@pytest.mark.slow
+def test_train_step_driver():
+    _run("train_step_driver.py")

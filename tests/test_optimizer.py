@@ -1,0 +1,58 @@
+import numpy as np
+import jax.numpy as jnp
+
+from repro.train.optimizer import (OptimizerConfig, lr_schedule,
+                                   init_opt_state, opt_leaf_update,
+                                   global_grad_norm, clip_grads)
+
+
+def test_lr_schedule_shape():
+    cfg = OptimizerConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                          min_lr_frac=0.1)
+    assert float(lr_schedule(jnp.int32(0), cfg)) == 0.0
+    assert abs(float(lr_schedule(jnp.int32(10), cfg)) - 1.0) < 1e-6
+    end = float(lr_schedule(jnp.int32(100), cfg))
+    assert abs(end - 0.1) < 1e-6
+
+
+def test_adamw_matches_reference():
+    cfg = OptimizerConfig(kind="adamw", lr=1e-2, b1=0.9, b2=0.99,
+                          eps=1e-8, weight_decay=0.1)
+    r = np.random.default_rng(0)
+    p = r.normal(size=(32,)).astype(np.float32)
+    g = r.normal(size=(32,)).astype(np.float32)
+    st = {"m": jnp.zeros(32), "v": jnp.zeros(32)}
+    new_p, st = opt_leaf_update(jnp.asarray(p), jnp.asarray(g), st,
+                                jnp.float32(1e-2), jnp.int32(0), cfg)
+    # reference numpy AdamW, step 1
+    m = 0.1 * g
+    v = 0.01 * g * g
+    mh = m / (1 - 0.9)
+    vh = v / (1 - 0.99)
+    ref = p - 1e-2 * (mh / (np.sqrt(vh) + 1e-8) + 0.1 * p)
+    np.testing.assert_allclose(np.asarray(new_p), ref, atol=1e-6)
+
+
+def test_momentum_update():
+    cfg = OptimizerConfig(kind="momentum", momentum=0.9)
+    p = jnp.ones((4,))
+    g = jnp.full((4,), 2.0)
+    st = {"m": jnp.zeros((4,))}
+    new_p, st2 = opt_leaf_update(p, g, st, jnp.float32(0.1), jnp.int32(0),
+                                 cfg)
+    np.testing.assert_allclose(np.asarray(new_p), 1 - 0.1 * 2.0)
+    np.testing.assert_allclose(np.asarray(st2["m"]), 2.0)
+
+
+def test_bf16_state_roundtrips():
+    cfg = OptimizerConfig(kind="adamw", state_dtype="bfloat16")
+    st = init_opt_state({"w": jnp.zeros((8, 8))}, cfg)
+    assert st["m"]["w"].dtype == jnp.bfloat16
+
+
+def test_clipping():
+    g = {"w": jnp.full((4,), 10.0)}
+    n = global_grad_norm(g)
+    clipped = clip_grads(g, n, 1.0)
+    np.testing.assert_allclose(float(global_grad_norm(clipped)), 1.0,
+                               rtol=1e-5)

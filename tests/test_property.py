@@ -1,0 +1,87 @@
+"""Hypothesis property tests for the system's core invariants."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CompressionConfig, HomomorphicCompressor,
+                        CompressedLeaf)
+from repro.core import index as idx
+from repro.core import topk as topk_lib
+
+
+def sparse_vec(data, n, max_frac):
+    r = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    frac = data.draw(st.floats(0.0, max_frac))
+    x = np.zeros(n, np.float32)
+    k = int(n * frac)
+    if k:
+        ii = r.choice(n, size=k, replace=False)
+        x[ii] = r.normal(size=k).astype(np.float32) * 10
+    return x
+
+
+@settings(max_examples=20, deadline=None)
+@given(data=st.data(),
+       n=st.integers(1_000, 80_000),
+       lanes=st.sampled_from([128, 256, 512]),
+       rows=st.sampled_from([6, 12]))
+def test_homomorphic_sum_recovery(data, n, lanes, rows):
+    """recover(S(x1) + S(x2)) == x1 + x2 whenever load is under gamma."""
+    cfg = CompressionConfig(ratio=0.3, lanes=lanes, rows=rows, rounds=12,
+                            chunk_blocks=8)
+    comp = HomomorphicCompressor(cfg)
+    # keep the union load safely under capacity (block size matters for
+    # the w.h.p. guarantee; small lanes need more margin)
+    margin = 0.35 if lanes >= 512 else 0.2
+    max_frac = margin * cfg.peel_capacity / cfg.block_elems
+    x1 = sparse_vec(data, n, max_frac)
+    x2 = sparse_vec(data, n, max_frac)
+    c1, c2 = comp.compress(jnp.asarray(x1)), comp.compress(jnp.asarray(x2))
+    agg = CompressedLeaf(sketch=c1.sketch + c2.sketch,
+                         index_words=c1.index_words | c2.index_words)
+    xr, stats = comp.recover(agg, n, with_stats=True)
+    assert int(stats.residual) == 0
+    np.testing.assert_allclose(np.asarray(xr), x1 + x2, atol=2e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31), nbits=st.integers(1, 256))
+def test_pack_unpack_inverse(seed, nbits):
+    r = np.random.default_rng(seed)
+    n = nbits * 32
+    bits = r.random(n) < r.random()
+    words = idx.pack_bits(jnp.asarray(bits))
+    assert np.array_equal(np.asarray(idx.unpack_bits(words, (n,))), bits)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31),
+       n=st.integers(100, 5_000),
+       ratio=st.floats(0.01, 0.5))
+def test_error_feedback_conserves_mass(seed, n, ratio):
+    """sparsified + residual == grad + old_residual (nothing is lost)."""
+    r = np.random.default_rng(seed)
+    g = r.normal(size=n).astype(np.float32)
+    res = r.normal(size=n).astype(np.float32)
+    k = max(1, int(n * ratio))
+    sent, new_res = topk_lib.apply_error_feedback(
+        jnp.asarray(g), jnp.asarray(res), k, exact=True)
+    np.testing.assert_allclose(np.asarray(sent) + np.asarray(new_res),
+                               g + res, atol=1e-5)
+    # sent is k-sparse (up to ties)
+    assert int((np.asarray(sent) != 0).sum()) <= k + 5
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31))
+def test_bloom_never_false_negative(seed):
+    cfg = CompressionConfig(bloom_bits_ratio=0.3)
+    r = np.random.default_rng(seed)
+    x = np.zeros(16_384, np.float32)
+    k = r.integers(0, 300)
+    if k:
+        x[r.choice(x.size, size=k, replace=False)] = 1.0
+    xb = x.reshape(2, 16, 512)
+    filt = idx.bloom_build(jnp.asarray(xb), cfg)
+    cand = np.asarray(idx.bloom_query(xb.shape, cfg, filt))
+    assert np.all(cand[xb != 0])

@@ -1,0 +1,80 @@
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import CompressionConfig
+from repro.core.blocks import make_plan, to_blocks
+from repro.core.sketch import encode_blocks, estimate_blocks
+from repro.core.peeling import peel_blocks
+from conftest import make_sparse
+
+CFG = CompressionConfig(ratio=0.2, lanes=256, rows=6, rounds=10)
+
+
+def _blocks(x):
+    plan = make_plan(x.size, CFG)
+    return to_blocks(jnp.asarray(x), plan), plan
+
+
+def test_encode_linearity():
+    """Homomorphism: Y(x1 + x2) == Y(x1) + Y(x2) (exactly, same hashes)."""
+    x1 = make_sparse(40_000, 0.03, 1)
+    x2 = make_sparse(40_000, 0.02, 2)
+    b1, plan = _blocks(x1)
+    b2, _ = _blocks(x2)
+    bs, _ = _blocks(x1 + x2)
+    ids = jnp.arange(plan.nb, dtype=jnp.int32)
+    y1 = encode_blocks(b1, ids, CFG)
+    y2 = encode_blocks(b2, ids, CFG)
+    ys = encode_blocks(bs, ids, CFG)
+    np.testing.assert_allclose(np.asarray(y1 + y2), np.asarray(ys),
+                               rtol=0, atol=1e-5)
+
+
+def test_peel_recovers_sparse_exactly():
+    x = make_sparse(100_000, 0.02, 3)
+    xb, plan = _blocks(x)
+    ids = jnp.arange(plan.nb, dtype=jnp.int32)
+    y = encode_blocks(xb, ids, CFG)
+    res = peel_blocks(y, xb != 0, ids, CFG)
+    assert int(jnp.sum(res.residual)) == 0
+    np.testing.assert_allclose(np.asarray(res.values), np.asarray(xb),
+                               atol=1e-6)
+
+
+def test_peel_degrades_gracefully_when_overloaded():
+    # 2x over capacity: some coordinates unpeelable, but every peeled
+    # coordinate is exact and residuals get the unbiased estimate
+    frac = 2.0 * CFG.peel_capacity / CFG.block_elems
+    x = make_sparse(60_000, frac, 4)
+    xb, plan = _blocks(x)
+    ids = jnp.arange(plan.nb, dtype=jnp.int32)
+    y = encode_blocks(xb, ids, CFG)
+    res = peel_blocks(y, xb != 0, ids, CFG)
+    assert int(jnp.sum(res.residual)) > 0
+    peeled = np.asarray(res.peeled)
+    np.testing.assert_allclose(np.asarray(res.values)[peeled],
+                               np.asarray(xb)[peeled], atol=1e-4)
+
+
+def test_estimate_unbiased_sign():
+    """Count-Sketch median estimate has the right sign/scale for large
+    coordinates even without peeling."""
+    x = make_sparse(50_000, 0.01, 5) * 10
+    xb, plan = _blocks(x)
+    ids = jnp.arange(plan.nb, dtype=jnp.int32)
+    y = encode_blocks(xb, ids, CFG)
+    est = estimate_blocks(y, ids, CFG)
+    big = np.abs(np.asarray(xb)) > 5
+    rel = np.abs(np.asarray(est)[big] - np.asarray(xb)[big]) / np.abs(np.asarray(xb)[big])
+    assert np.median(rel) < 0.05
+
+
+def test_peel_zero_input():
+    x = np.zeros(10_000, np.float32)
+    xb, plan = _blocks(x)
+    ids = jnp.arange(plan.nb, dtype=jnp.int32)
+    y = encode_blocks(xb, ids, CFG)
+    res = peel_blocks(y, xb != 0, ids, CFG)
+    assert float(jnp.abs(res.values).max()) == 0.0

@@ -1,0 +1,69 @@
+"""End-to-end single-device training: dense vs lossless-compressed must
+match; checkpoint restart must resume identically."""
+import tempfile
+import numpy as np
+import jax
+import pytest
+
+from repro.models import ModelConfig, model_api
+from repro.core import CompressionConfig
+from repro.train import TrainConfig, OptimizerConfig
+from repro.train.loop import run_training
+from repro.parallel.sharding import ShardingProfile
+from repro.ft import FailureSimulator
+
+CFG = ModelConfig(name="tiny", family="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab=128,
+                  dtype="float32")
+
+
+def _mesh():
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def _run(tc, steps=8, **kw):
+    api = model_api(CFG)
+    return run_training(api, tc, _mesh(), global_batch=4, seq_len=32,
+                        steps=steps, log_every=0, **kw)
+
+
+OPT = OptimizerConfig(lr=5e-3, warmup_steps=1, total_steps=50)
+
+
+def test_dense_loss_decreases():
+    res = _run(TrainConfig(aggregator="dense", optimizer=OPT,
+                           sharding=ShardingProfile(zero1=False),
+                           remat="none"))
+    assert res.losses[-1] < res.losses[0]
+
+
+def test_compressed_single_worker_is_identity():
+    """With one worker the compressed path still encodes+peels; training
+    must track dense to fp tolerance (lossless regime)."""
+    comp = CompressionConfig(ratio=2.0, lanes=512, rows=60, rounds=10,
+                             chunk_blocks=16)
+    r1 = _run(TrainConfig(aggregator="dense", optimizer=OPT,
+                          sharding=ShardingProfile(zero1=False),
+                          remat="none"))
+    r2 = _run(TrainConfig(aggregator="compressed", compression=comp,
+                          optimizer=OPT,
+                          sharding=ShardingProfile(zero1=False),
+                          remat="none"))
+    np.testing.assert_allclose(r1.losses, r2.losses, atol=2e-3)
+
+
+def test_restart_resumes_from_checkpoint():
+    tc = TrainConfig(aggregator="dense", optimizer=OPT,
+                     sharding=ShardingProfile(zero1=False), remat="none")
+    with tempfile.TemporaryDirectory() as d:
+        res = _run(tc, steps=12, ckpt_dir=d, ckpt_every=4,
+                   failure_sim=FailureSimulator(fail_at_steps=(6,)))
+        assert res.restarts == 1
+        assert res.final_step == 12
+        # the replayed segment re-runs steps 4..6 on the deterministic
+        # stream: the loss at a replayed step must match the first pass
+        # (loss *decrease* over so few steps is flaky; convergence is
+        # asserted by the other tests in this module)
+        assert len(res.losses) == 12 + 2   # 12 + 2 replayed steps
+        np.testing.assert_allclose(res.losses[7], res.losses[5], atol=1e-4)
