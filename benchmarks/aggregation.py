@@ -16,6 +16,7 @@ reported for both the dense baseline and the compressed pipeline.
 
 from __future__ import annotations
 
+import argparse
 import time
 from typing import Dict, List
 
@@ -38,10 +39,11 @@ def _grad(seed=0):
     return jnp.asarray(x)
 
 
-def measure(frac: float, workers: int = 4, iters: int = 3) -> Dict:
+def measure(frac: float, workers: int = 4, iters: int = 3,
+            use_pallas: str = "auto") -> Dict:
     rows = 6 if frac <= 0.4 else 90
     cfg = CompressionConfig(ratio=frac, lanes=512, rows=rows, rounds=16,
-                            chunk_blocks=256)
+                            chunk_blocks=256, use_pallas=use_pallas)
     comp = HomomorphicCompressor(cfg)
     x = _grad()
     compress = jax.jit(comp.compress)
@@ -66,7 +68,8 @@ def measure(frac: float, workers: int = 4, iters: int = 3) -> Dict:
 
     wire = comp.wire_bytes(N, grad_bytes_per_elem=4)
     orig_bytes = N * 4
-    out = {"size_frac": frac, "t_compress_s": t_comp, "t_recover_s": t_rec,
+    out = {"size_frac": frac, "backend": use_pallas,
+           "t_compress_s": t_comp, "t_recover_s": t_rec,
            "codec_gbps": orig_bytes * 8 / (t_comp + t_rec) / 1e9,
            "wire_fraction": wire["total_bytes"] / orig_bytes}
     for name, gbps in LINK_GBPS.items():
@@ -83,15 +86,35 @@ def measure(frac: float, workers: int = 4, iters: int = 3) -> Dict:
     return out
 
 
-def main(fracs=(0.02, 0.05, 0.10, 0.25, 0.60, 1.0)):
+def _fmt(v):
+    return v if isinstance(v, str) else f"{v:.4g}"
+
+
+def main(fracs=(0.02, 0.05, 0.10, 0.25, 0.60, 1.0),
+         backends=("auto",)):
+    """One CSV row per (size fraction, compute backend).
+
+    ``--backends never always`` compares the jnp reference codec against
+    the Pallas kernels (interpret-emulated off-TPU — on a TPU host
+    "always"/"auto" exercises the real kernels and this becomes the
+    paper's codec-throughput comparison).
+    """
     keys = None
     for frac in fracs:
-        r = measure(frac)
-        if keys is None:
-            keys = list(r)
-            print(",".join(keys))
-        print(",".join(f"{r[k]:.4g}" for k in keys))
+        for backend in backends:
+            r = measure(frac, use_pallas=backend)
+            if keys is None:
+                keys = list(r)
+                print(",".join(keys))
+            print(",".join(_fmt(r[k]) for k in keys))
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fracs", type=float, nargs="+",
+                    default=(0.02, 0.05, 0.10, 0.25, 0.60, 1.0))
+    ap.add_argument("--backends", nargs="+", default=("auto",),
+                    choices=("never", "always", "auto"),
+                    help="use_pallas policies to compare")
+    args = ap.parse_args()
+    main(tuple(args.fracs), tuple(args.backends))

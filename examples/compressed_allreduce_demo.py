@@ -15,12 +15,12 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P, NamedSharding
 
+from repro.compat import make_mesh, shard_map
 from repro.core import CompressionConfig
 from repro.core.collectives import (compressed_all_reduce,
                                     init_aggregation_state)
 
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((4, 2), ("data", "model"))
 D, F, W = 512, 1024, 4
 cfg = CompressionConfig(ratio=0.15)
 
@@ -44,7 +44,7 @@ def step(stacked):
 
 put = jax.device_put(jnp.asarray(per_worker),
                      NamedSharding(mesh, P("data", None, "model")))
-got = jax.jit(jax.shard_map(step, mesh=mesh, in_specs=P("data", None, None),
+got = jax.jit(shard_map(step, mesh=mesh, in_specs=P("data", None, None),
                             out_specs={"w": P()}, axis_names={"data"},
                             check_vma=False))(put)
 err = np.abs(np.asarray(got["w"]) - mean_ref).max()

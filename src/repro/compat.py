@@ -1,0 +1,156 @@
+"""JAX version compatibility shim.
+
+The repo targets two JAX API generations:
+
+- **current JAX** (>= 0.6): ``jax.shard_map`` is a public top-level API
+  taking ``axis_names`` (the *manual* axes) and ``check_vma``;
+  ``jax.make_mesh`` takes ``axis_types`` (``jax.sharding.AxisType``).
+- **JAX 0.4.x** (the pinned toolchain, 0.4.37): ``shard_map`` lives in
+  ``jax.experimental.shard_map`` and is parameterised the other way
+  round — ``auto`` names the *non-manual* axes and replication checking
+  is ``check_rep``; ``jax.make_mesh`` has no ``axis_types`` (every axis
+  is implicitly Auto, which is exactly what this repo uses).
+
+Everything in the repo that builds a mesh or opens a manual region goes
+through this module, so version differences are handled in exactly one
+place. The shim exposes the *new* parameter names and translates down
+when running on 0.4.x.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Iterable, Optional, Sequence
+
+import jax
+
+# ``AxisType`` arriving in jax.sharding is the marker for the new-style
+# sharding API (top-level jax.shard_map with axis_names/check_vma).
+HAS_AXIS_TYPES = hasattr(jax.sharding, "AxisType")
+HAS_TOP_LEVEL_SHARD_MAP = hasattr(jax, "shard_map")
+
+if not HAS_TOP_LEVEL_SHARD_MAP:  # 0.4.x
+    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+
+# Opening a *nested* partial-manual region (a shard_map over the TP axes
+# inside a shard_map that already holds the DP axes manual) compiles fine
+# on new JAX but trips an XLA SPMD-partitioner RET_CHECK
+# ("Incompatible manual sharding at %copy") on 0.4.x. Callers that nest
+# for performance (shard-local compression in
+# :func:`repro.core.collectives.compressed_all_reduce`) must consult this
+# flag and fall back to computing on the auto-sharded global view.
+SUPPORTS_NESTED_SHARD_MAP = HAS_TOP_LEVEL_SHARD_MAP
+
+# On 0.4.x, ``ppermute`` over a manual axis inside a *partial*-auto region
+# (some mesh axes left to GSPMD) hits a fatal partitioner check
+# ("target.IsManualSubgroup() == sharding().IsManualSubgroup()"); ``psum``
+# in the same region is fine, and full-manual regions support ppermute.
+# The OR-AllReduce falls back to a psum-based emulation when this is
+# False (see :func:`repro.core.collectives.or_allreduce`).
+SUPPORTS_PARTIAL_AUTO_PPERMUTE = HAS_TOP_LEVEL_SHARD_MAP
+
+# The partial-auto failures above are symptoms of a broader 0.4.x gap:
+# any value whose HLO parameter/operand carries a plain *replicated*
+# sharding annotation (hoisted scan constants, replicated param leaves
+# scanned as layer stacks, jax.checkpoint remat calls) aborts the
+# partitioner inside a manual subgroup. Regions that scan over
+# replicated-sharded operands or remat their bodies (the train step's
+# layer stack) must therefore take EVERY mesh axis manual on 0.4.x —
+# TP compute degrades to replication there, which is numerically
+# identical, merely unsharded. Full-manual regions support ppermute,
+# remat and scanned constants on every JAX.
+SUPPORTS_PARTIAL_AUTO_SHARD_MAP = HAS_TOP_LEVEL_SHARD_MAP
+
+
+def train_step_manual_axes(mesh, dp_axes) -> set:
+    """The manual axis set for the train-step region on this JAX.
+
+    New JAX: just the DP axes (TP stays auto/GSPMD inside). 0.4.x: all
+    mesh axes (see SUPPORTS_PARTIAL_AUTO_SHARD_MAP).
+    """
+    if SUPPORTS_PARTIAL_AUTO_SHARD_MAP:
+        return set(dp_axes)
+    return set(mesh.axis_names)
+
+
+def checkpoint(f, **kwargs):
+    """``jax.checkpoint``, routed through the compat seam.
+
+    Remat works everywhere the repo opens manual regions *today* (plain
+    jit, and full-manual shard_map on 0.4.x — see
+    SUPPORTS_PARTIAL_AUTO_SHARD_MAP for why partial-auto + remat is
+    fatal there and regions are full-manual instead). Model code calls
+    this seam rather than jax.checkpoint directly so a future
+    incompatibility has one switch to flip.
+    """
+    return jax.checkpoint(f, **kwargs)
+
+
+def axis_size(axis_name) -> int:
+    """Static size of a (manual) mesh axis, inside shard_map.
+
+    ``jax.lax.axis_size`` postdates 0.4.x; ``psum(1, axis)`` is the
+    classic spelling and constant-folds to a Python int on every JAX.
+    """
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str],
+              *, devices=None):
+    """``jax.make_mesh`` with every axis in Auto mode, on any JAX.
+
+    On new JAX the Auto axis type is passed explicitly (the default
+    changed to Explicit in some releases); on 0.4.x the kwarg does not
+    exist and Auto is the only behaviour.
+    """
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if HAS_AXIS_TYPES:
+        kwargs["axis_types"] = (
+            jax.sharding.AxisType.Auto,) * len(tuple(axis_shapes))
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs,
+              axis_names: Optional[Iterable[str]] = None,
+              check_vma: bool = False):
+    """``jax.shard_map`` spelled with the new-API parameter names.
+
+    Args:
+      f:          function to map.
+      mesh:       the device mesh. Required (new JAX can infer it from a
+                  surrounding manual region; 0.4.x cannot, and every call
+                  site in this repo has the mesh in hand anyway).
+      in_specs/out_specs: as in jax.shard_map.
+      axis_names: the axes to take *manual*. ``None`` means all of them.
+      check_vma:  new-API name for replication checking (0.4.x:
+                  ``check_rep``).
+    """
+    manual = set(mesh.axis_names) if axis_names is None else set(axis_names)
+    if HAS_TOP_LEVEL_SHARD_MAP:
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, axis_names=manual,
+                             check_vma=check_vma)
+    auto = frozenset(mesh.axis_names) - manual
+    return _legacy_shard_map(f, mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_rep=check_vma,
+                             auto=auto)
+
+
+def manual_region_constraint(x, spec):
+    """``with_sharding_constraint`` with a bare PartitionSpec, inside a
+    partial-auto manual region.
+
+    These constraints are performance hints (keep GSPMD from replicating
+    activations/accumulators on the auto TP axes). New JAX resolves the
+    bare spec against the context mesh; the 0.4.x partitioner cannot carry
+    a plain sharding annotation through a manual subgroup (fatal
+    "Incompatible manual sharding" RET_CHECK), so there the hint is
+    dropped — GSPMD picks its own placement, correctness unaffected.
+    """
+    if HAS_TOP_LEVEL_SHARD_MAP:
+        return jax.lax.with_sharding_constraint(x, spec)
+    return x

@@ -29,12 +29,13 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, Sequence
+from typing import Any, Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from .config import CompressionConfig
 from .compressor import HomomorphicCompressor, CompressedLeaf
 from . import topk as topk_lib
@@ -58,7 +59,7 @@ def or_allreduce_ring(x: jnp.ndarray, axis_name: str,
     outer shard_map trips the Shardy verifier (re-binding), while plain
     ppermute/psum on outer axes are fine.
     """
-    n = jax.lax.axis_size(axis_name)
+    n = compat.axis_size(axis_name)
     if n == 1:
         return x
     if idx is None:
@@ -91,7 +92,7 @@ def or_allreduce_ring(x: jnp.ndarray, axis_name: str,
 
 def or_allreduce_doubling(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
     """Bitwise-OR AllReduce via recursive doubling (requires power-of-2)."""
-    n = jax.lax.axis_size(axis_name)
+    n = compat.axis_size(axis_name)
     if n == 1:
         return x
     if n & (n - 1):
@@ -102,6 +103,22 @@ def or_allreduce_doubling(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
         x = x | jax.lax.ppermute(x, axis_name, perm)
         d *= 2
     return x
+
+
+def _or_allreduce_psum(x: jnp.ndarray, axis_names: Sequence[str]) -> jnp.ndarray:
+    """OR-AllReduce emulated with the sum collective (exact).
+
+    Unpacks each uint32 word into its 32 bits, psums the bit counts, and
+    repacks ``count > 0``. 32x the wire volume of the native OR — this is
+    the compatibility path for JAX versions whose partitioner cannot run
+    ppermute over a manual axis while other mesh axes stay auto.
+    """
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = ((x[..., None] >> shifts) & jnp.uint32(1)).astype(jnp.int32)
+    counts = jax.lax.psum(bits, tuple(axis_names))
+    return jnp.sum(
+        jnp.where(counts > 0, jnp.uint32(1) << shifts, jnp.uint32(0)),
+        axis=-1, dtype=jnp.uint32)
 
 
 def or_allreduce(x: jnp.ndarray, axis_names: Sequence[str],
@@ -118,6 +135,8 @@ def or_allreduce(x: jnp.ndarray, axis_names: Sequence[str],
     """
     if isinstance(axis_names, str):
         axis_names = (axis_names,)
+    if not compat.SUPPORTS_PARTIAL_AUTO_PPERMUTE:
+        return _or_allreduce_psum(x, axis_names)
     for ax in reversed(tuple(axis_names)):
         if x.shape[0] >= ring_threshold:
             idx = axis_indices.get(ax) if axis_indices else None
@@ -138,7 +157,7 @@ def dense_all_reduce(grads: Any, axis_names: Sequence[str],
         axis_names = (axis_names,)
     w = 1
     for ax in axis_names:
-        w *= jax.lax.axis_size(ax)
+        w *= compat.axis_size(ax)
 
     def red(g):
         s = jax.lax.psum(g.astype(acc_dtype), tuple(axis_names))
@@ -272,15 +291,16 @@ def compressed_all_reduce(grads: Any, agg_state: AggregationState,
                 continue
             tp_set |= set(part) if isinstance(part, (tuple, list)) else {part}
         # sketch/index shapes per shard (for the nested out_specs)
-        if tp_set:
+        if tp_set and compat.SUPPORTS_NESTED_SHARD_MAP:
             # Two nested regions with the DP collectives *between* them
             # at the outer level: running psum/ppermute over the outer
             # manual axis inside a doubly-nested manual region check-
             # crashes XLA's SPMD partitioner (AllReduceAlongShardingDims)
             # on 3-axis meshes. Phase boundaries cost nothing — sketch
             # and words stay shard-local either way.
-            enc = jax.shard_map(
+            enc = compat.shard_map(
                 functools.partial(_compress_leaf, comp=comp),
+                mesh=mesh,
                 in_specs=(spec, res_spec),
                 out_specs=(P(), P(), res_spec),
                 axis_names=tp_set, check_vma=False)
@@ -298,15 +318,20 @@ def compressed_all_reduce(grads: Any, agg_state: AggregationState,
                     d *= mesh.shape[nm]
                 return d
             local_shape = tuple(sz // _div(i) for i, sz in enumerate(g.shape))
-            dec = jax.shard_map(
+            dec = compat.shard_map(
                 functools.partial(_recover_leaf, comp=comp,
                                   n_workers=n_workers,
                                   shape=local_shape, dtype=g.dtype),
+                mesh=mesh,
                 in_specs=(P(), P()),
                 out_specs=spec,
                 axis_names=tp_set, check_vma=False)
             rec = dec(sk, words)
-        else:                      # pure DP: no nested manual axis needed
+        else:
+            # Pure DP, or a TP-sharded leaf on a JAX without nested
+            # partial-manual shard_map support: compress the auto-sharded
+            # global view. Same compress -> psum/OR -> recover math (the
+            # nesting only avoids GSPMD resharding around the codec).
             sk, words, new_res = _compress_leaf(g, res, comp)
             sk = jax.lax.psum(sk, tuple(dp_axes))
             words = or_allreduce(words, dp_axes, axis_indices=dp_idx)

@@ -12,6 +12,10 @@ Aggregation happens *between* the two calls and is someone else's job —
 :mod:`repro.core.collectives`) — which is exactly the homomorphic contract
 of the paper: the aggregation API never decompresses.
 
+All sketch compute (encode, peel, estimate) goes through the backend
+dispatch in :mod:`repro.kernels.ops`, so ``cfg.use_pallas`` selects the
+Pallas TPU kernels or the jnp reference for every consumer of this class.
+
 Large leaves are processed in chunks of ``cfg.chunk_blocks`` blocks via
 ``lax.map`` to bound peak memory (the (nb, G, 3, c) rotation intermediates
 would otherwise dwarf the gradient itself).
@@ -25,11 +29,10 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops
 from .config import CompressionConfig
 from .blocks import LeafPlan, make_plan, to_blocks, from_blocks
 from . import index as index_lib
-from .sketch import encode_blocks, estimate_blocks
-from .peeling import peel_blocks
 
 
 class CompressedLeaf(NamedTuple):
@@ -79,7 +82,7 @@ class HomomorphicCompressor:
         ids = jnp.arange(plan.nb, dtype=jnp.int32)
 
         def enc(ids_c, xb_c):
-            return encode_blocks(xb_c, ids_c, self.cfg)
+            return ops.sketch_encode(xb_c, ids_c, self.cfg)
 
         sketch = _chunked_map(enc, plan.nb, self.cfg.chunk_blocks, ids, xb)
         if self.cfg.index == "bitmap":
@@ -104,17 +107,18 @@ class HomomorphicCompressor:
         ids = jnp.arange(plan.nb, dtype=jnp.int32)
 
         def rec(ids_c, sk_c, bits_c):
-            r = peel_blocks(sk_c, bits_c, ids_c, self.cfg)
-            return r.values, r.peeled, r.residual
+            return ops.sketch_peel(sk_c, bits_c, ids_c, self.cfg)
 
-        values, peeled, residual = _chunked_map(
+        values, residual = _chunked_map(
             rec, plan.nb, self.cfg.chunk_blocks, ids, comp.sketch, bits)
         x = from_blocks(values, plan, shape)
         if not with_stats:
             return x
+        nnz = jnp.sum(bits)
+        n_residual = jnp.sum(residual.astype(jnp.int32))
         stats = RecoveryStats(
-            nnz=jnp.sum(bits), peeled=jnp.sum(peeled),
-            residual=jnp.sum(residual), rounds=jnp.int32(self.cfg.rounds))
+            nnz=nnz, peeled=nnz - n_residual,   # peeled == indexed & exact
+            residual=n_residual, rounds=jnp.int32(self.cfg.rounds))
         return x, stats
 
     # ------------------------------------------------------------------
@@ -126,7 +130,7 @@ class HomomorphicCompressor:
         ids = jnp.arange(plan.nb, dtype=jnp.int32)
 
         def est(ids_c, sk_c):
-            return estimate_blocks(sk_c, ids_c, self.cfg)
+            return ops.sketch_estimate(sk_c, ids_c, self.cfg)
 
         values = _chunked_map(est, plan.nb, self.cfg.chunk_blocks, ids, comp.sketch)
         if self.cfg.index == "bitmap":

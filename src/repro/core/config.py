@@ -43,6 +43,8 @@ class CompressionConfig:
     seed: int = 0x5EED
     chunk_blocks: int = 512      # blocks per lax.map chunk (memory bound)
     use_pallas: str = "auto"     # "never" | "always" | "auto"
+    encode_block_tile: int = 8   # sketch blocks per encode-kernel grid
+                                 # cell (VMEM-bounded; see sketch_encode)
     sketch_dtype: str = "float32"
 
     def __post_init__(self):
@@ -54,6 +56,9 @@ class CompressionConfig:
             raise ValueError(f"lanes must be >= 8, got {self.lanes}")
         if self.index not in ("bitmap", "bloom"):
             raise ValueError(f"index must be 'bitmap' or 'bloom', got {self.index}")
+        if self.encode_block_tile < 1:
+            raise ValueError(
+                f"encode_block_tile must be >= 1, got {self.encode_block_tile}")
 
     # ---- derived static geometry -------------------------------------
 

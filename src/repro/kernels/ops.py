@@ -1,5 +1,12 @@
 """Jitted dispatch between the Pallas kernels and the jnp reference.
 
+This module is the **single compute backend** for the compression
+pipeline: ``HomomorphicCompressor`` (and through it training, serving,
+collectives and the benchmarks) calls ``sketch_encode`` / ``sketch_peel``
+/ ``sketch_estimate`` here and never reaches into ``repro.core.sketch``
+or ``repro.core.peeling`` directly, so the ``use_pallas`` policy governs
+every consumer.
+
 ``use_pallas`` policy:
   "never"  — always the jnp reference (the default on CPU: interpret-mode
              Pallas is a Python-loop emulator, far slower than XLA:CPU).
@@ -33,6 +40,7 @@ def _want_pallas(cfg: CompressionConfig) -> bool:
 
 def sketch_encode(xb: jnp.ndarray, block_ids: jnp.ndarray,
                   cfg: CompressionConfig) -> jnp.ndarray:
+    """(nb, G, c) values + (nb,) ids -> (nb, rows, c) sketch (f32)."""
     if _want_pallas(cfg):
         return sketch_encode_pallas(xb, block_ids, cfg,
                                     interpret=not _on_tpu())
@@ -41,7 +49,23 @@ def sketch_encode(xb: jnp.ndarray, block_ids: jnp.ndarray,
 
 def sketch_peel(sketch: jnp.ndarray, bits: jnp.ndarray,
                 block_ids: jnp.ndarray, cfg: CompressionConfig):
+    """(nb, rows, c) sketch + (nb, G, c) bits -> (values f32,
+    residual int8), both (nb, G, c)."""
     if _want_pallas(cfg):
         return sketch_peel_pallas(sketch, bits, block_ids, cfg,
                                   interpret=not _on_tpu())
     return ref_ops.sketch_peel_ref(sketch, bits, block_ids, cfg)
+
+
+def sketch_estimate(sketch: jnp.ndarray, block_ids: jnp.ndarray,
+                    cfg: CompressionConfig) -> jnp.ndarray:
+    """Median-of-3 Count-Sketch estimate for every coordinate,
+    (nb, rows, c) -> (nb, G, c).
+
+    The sketch-only lossy decode (ablation path). Reference-backed on
+    every policy: it is off the training hot path, and the peel kernel
+    already computes the same median in-kernel for its residue, so a
+    dedicated Pallas estimate kernel would duplicate that code for no
+    measured benefit.
+    """
+    return ref_ops.sketch_estimate_ref(sketch, block_ids, cfg)

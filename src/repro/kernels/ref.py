@@ -1,8 +1,12 @@
-"""Pure-jnp oracles for the Pallas kernels.
+"""The pure-jnp oracle backend of :mod:`repro.kernels.ops`.
 
-These delegate to :mod:`repro.core` — the reference implementation the
-whole framework runs on CPU — so the kernel tests pin the Pallas bodies
-to exactly the semantics the training path uses.
+There is exactly one reference implementation of the sketch math — the
+block-layout functions in :mod:`repro.core.sketch` and
+:mod:`repro.core.peeling` — and this module is its adapter to the kernel
+calling convention (flat outputs, int8 residual). The Pallas kernels are
+pinned to these functions by the interpret-mode parity tests, and the
+dispatch layer uses them verbatim for the ``use_pallas="never"``/CPU
+path, so training, serving and the kernel tests all share one oracle.
 """
 
 from __future__ import annotations
@@ -10,7 +14,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core.config import CompressionConfig
-from repro.core.sketch import encode_blocks
+from repro.core.sketch import encode_blocks, estimate_blocks
 from repro.core.peeling import peel_blocks
 
 
@@ -31,3 +35,9 @@ def sketch_peel_ref(sketch: jnp.ndarray, bits: jnp.ndarray,
     """
     r = peel_blocks(sketch, bits != 0, block_ids, cfg)
     return r.values, r.residual.astype(jnp.int8)
+
+
+def sketch_estimate_ref(sketch: jnp.ndarray, block_ids: jnp.ndarray,
+                        cfg: CompressionConfig) -> jnp.ndarray:
+    """(nb, rows, c) -> (nb, G, c) median-of-3 estimate for every coord."""
+    return estimate_blocks(sketch, block_ids, cfg)

@@ -1,22 +1,28 @@
 """Pallas TPU kernel: block-local Count-Sketch encode (paper §3.1 + §3.4).
 
-Grid = one cell per sketch block. Each cell:
+Grid = one cell per *tile* of ``encode_block_tile`` sketch blocks. Each
+cell:
 
-- loads its (G, c) tile of gradient batches HBM→VMEM,
-- accumulates `g_j(i) * roll(x_i, rot_j(i, blk))` into its private
-  (rows, c) sketch tile held in VMEM registers — the block-local hashing
-  guarantees no other grid cell ever touches this tile, which is how the
-  paper's GPU scatter-with-atomics becomes a race-free TPU kernel,
-- writes the sketch tile back.
+- loads its (B, G, c) tile of gradient batches HBM→VMEM,
+- rotates every batch row by its per-(block, batch, hash) offset (the
+  §3.4 locality randomisation) as one batched lane-gather,
+- scatters the rotated contributions onto sketch rows as a single
+  (rows, G*3) x (B, G*3, c) contraction against a static sign-folded
+  one-hot plan matrix — MXU work instead of the G*3 serial
+  roll-and-accumulate VPU ops of the naive formulation,
+- writes the (B, rows, c) sketch tile back.
 
-Row targets and signs are compile-time constants (static hash plan), so
-the per-batch scatter unrolls into static-row adds; only the lane
-*rotations* (the §3.4 locality randomisation) are computed in-kernel from
-the block id, as dynamic rolls on the 128-lane axis.
+The block-local hashing guarantees no other grid cell ever touches these
+rows, which is how the paper's GPU scatter-with-atomics becomes a
+race-free TPU kernel. Row targets and signs are compile-time constants
+(static hash plan) folded into the plan matrix; only the lane rotations
+are computed in-kernel from the block ids.
 
-VMEM budget per cell (defaults G=60, c=512, rows=6):
-  x tile 60*512*4 = 120 KiB, sketch 6*512*4 = 12 KiB, ids 4 B — well
-  under the ~16 MiB/core VMEM of v5e, leaving room for double buffering.
+VMEM budget per cell (defaults B=8, G=60, c=512, rows=6):
+  x tile 8*60*512*4 = 960 KiB, rotated contributions 8*60*3*512*4
+  = 2.8 MiB, sketch out 8*6*512*4 = 96 KiB, plan 6*180*4 ≈ 4 KiB —
+  comfortably under the ~16 MiB/core VMEM of v5e with room for double
+  buffering.
 """
 
 from __future__ import annotations
@@ -32,34 +38,50 @@ from repro.core.config import CompressionConfig
 from repro.core import hashing
 
 
-def _rotations_for_block(block_id, group: int, lanes: int, seed: int):
-    """(G, 3) int32 rotation offsets for one block — in-kernel hash."""
-    i = jnp.arange(group, dtype=jnp.uint32)
-    j = jnp.arange(3, dtype=jnp.uint32)
-    key = (block_id.astype(jnp.uint32) * jnp.uint32(0x01000193)
-           + i[:, None] * jnp.uint32(3) + j[None, :]
-           + jnp.uint32(seed * 2654435761 & 0xFFFFFFFF))
-    return (hashing.mix32(key) % jnp.uint32(lanes)).astype(jnp.int32)
+def _rotations_for_block(block_ids, group: int, lanes: int, seed: int):
+    """Rotation offsets for one block (scalar id -> (G, 3)) or a tile of
+    blocks ((B,) ids -> (B, G, 3)).
+
+    Thin adapter over :func:`repro.core.hashing.block_rotations` — the
+    kernels and the reference must draw from the same hash stream, so
+    there is exactly one implementation of it.
+    """
+    ids = jnp.asarray(block_ids)
+    if ids.ndim == 0:
+        return hashing.block_rotations(ids[None], group, lanes, seed)[0]
+    return hashing.block_rotations(ids, group, lanes, seed)
 
 
-def _encode_kernel(ids_ref, x_ref, o_ref, *, cfg: CompressionConfig,
-                   rows_tbl: np.ndarray, signs: np.ndarray):
-    blk = ids_ref[0, 0]
-    rot = _rotations_for_block(blk, cfg.group, cfg.lanes, cfg.seed)  # (G,3)
-    x = x_ref[0].astype(jnp.float32)                                 # (G,c)
-    acc = jnp.zeros((cfg.rows, cfg.lanes), jnp.float32)
-    # Static-row scatter: unrolled per row so every update is a
-    # constant-index add (MXU-free, pure VPU work).
-    for r in range(cfg.rows):
-        row_acc = jnp.zeros((cfg.lanes,), jnp.float32)
-        for g in range(cfg.group):
-            for j in range(3):
-                if int(rows_tbl[g, j]) != r:
-                    continue
-                rolled = jnp.roll(x[g], rot[g, j])
-                row_acc = row_acc + float(signs[g, j]) * rolled
-        acc = acc.at[r].set(row_acc)
-    o_ref[0] = acc
+def _plan_matrix(cfg: CompressionConfig) -> np.ndarray:
+    """(rows, G*3) f32 one-hot row-scatter matrix with signs folded in:
+    A[r, (i,j)] = g_j(i) * [h_j(i) == r]."""
+    rows_flat = hashing.batch_rows(cfg.group, cfg.rows, cfg.seed).reshape(-1)
+    signs_flat = hashing.batch_signs(cfg.group, cfg.seed).reshape(-1)
+    onehot = (rows_flat[None, :] == np.arange(cfg.rows)[:, None])
+    return (onehot * signs_flat[None, :]).astype(np.float32)
+
+
+def _encode_kernel(ids_ref, plan_ref, x_ref, o_ref, *,
+                   cfg: CompressionConfig):
+    B = x_ref.shape[0]                    # blocks per grid cell (tile)
+    G, c = cfg.group, cfg.lanes
+    ids = ids_ref[...][:, 0]                                         # (B,)
+    rot = _rotations_for_block(ids, G, c, cfg.seed)                  # (B,G,3)
+    x = x_ref[...].astype(jnp.float32)                               # (B,G,c)
+
+    # Batched lane rotation: out[m] = x[(m - rot) % c] for all (blk,i,j).
+    lane = jnp.arange(c, dtype=jnp.int32)
+    fwd_idx = (lane[None, None, None, :] - rot[..., None]) % c       # (B,G,3,c)
+    vb = jnp.broadcast_to(x[:, :, None, :], (B, G, 3, c))
+    rolled = jnp.take_along_axis(vb, fwd_idx, axis=-1)               # (B,G,3,c)
+
+    # Static-plan row scatter as one contraction over the G*3 axis.
+    contrib = rolled.reshape(B, G * 3, c)
+    acc = jax.lax.dot_general(
+        plan_ref[...], contrib,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)                          # (R,B,c)
+    o_ref[...] = acc.transpose(1, 0, 2)
 
 
 def sketch_encode_pallas(xb: jnp.ndarray, block_ids: jnp.ndarray,
@@ -67,19 +89,28 @@ def sketch_encode_pallas(xb: jnp.ndarray, block_ids: jnp.ndarray,
                          interpret: bool = True) -> jnp.ndarray:
     """(nb, G, c) values + (nb,) ids -> (nb, rows, c) sketch."""
     nb = xb.shape[0]
-    rows_tbl = hashing.batch_rows(cfg.group, cfg.rows, cfg.seed)
-    signs = hashing.batch_signs(cfg.group, cfg.seed)
-    kern = functools.partial(_encode_kernel, cfg=cfg, rows_tbl=rows_tbl,
-                             signs=signs)
-    ids2d = block_ids.reshape(nb, 1).astype(jnp.int32)
-    return pl.pallas_call(
+    tile = max(1, min(cfg.encode_block_tile, nb))
+    padded = -(-nb // tile) * tile
+    if padded != nb:
+        # Zero blocks encode to zero sketches; their (arbitrary) ids only
+        # seed rotations of zeros. Sliced back off below.
+        xb = jnp.pad(xb, ((0, padded - nb), (0, 0), (0, 0)))
+        block_ids = jnp.pad(block_ids, (0, padded - nb))
+    kern = functools.partial(_encode_kernel, cfg=cfg)
+    ids2d = block_ids.reshape(padded, 1).astype(jnp.int32)
+    plan = jnp.asarray(_plan_matrix(cfg))
+    out = pl.pallas_call(
         kern,
-        grid=(nb,),
+        grid=(padded // tile,),
         in_specs=[
-            pl.BlockSpec((1, 1), lambda i: (i, 0)),
-            pl.BlockSpec((1, cfg.group, cfg.lanes), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tile, 1), lambda i: (i, 0)),
+            pl.BlockSpec((cfg.rows, cfg.group * 3), lambda i: (0, 0)),
+            pl.BlockSpec((tile, cfg.group, cfg.lanes), lambda i: (i, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, cfg.rows, cfg.lanes), lambda i: (i, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((nb, cfg.rows, cfg.lanes), jnp.float32),
+        out_specs=pl.BlockSpec((tile, cfg.rows, cfg.lanes),
+                               lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((padded, cfg.rows, cfg.lanes),
+                                       jnp.float32),
         interpret=interpret,
-    )(ids2d, xb)
+    )(ids2d, plan, xb)
+    return out[:nb] if padded != nb else out

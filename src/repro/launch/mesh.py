@@ -9,18 +9,18 @@ from __future__ import annotations
 
 import jax
 
+from repro.compat import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 chips per pod ("data", "model"); 2 pods when multi_pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(model_parallel: int = 1, axis_names=("data", "model")):
     """Mesh over whatever devices this host actually has (tests, examples)."""
     n = len(jax.devices())
     data = max(1, n // model_parallel)
-    return jax.make_mesh((data, model_parallel), axis_names,
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((data, model_parallel), axis_names)

@@ -15,6 +15,7 @@ from typing import Any, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from .config import ModelConfig
 from . import layers as L
 from repro.parallel.hints import constrain
@@ -100,14 +101,18 @@ def encdec_loss(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
     enc_out = encode(params, cfg, batch["frames"])
     tokens, labels = batch["tokens"], batch["labels"]
     x = jnp.take(params["embed"], tokens, axis=0)
-    positions = jnp.arange(x.shape[1])[None, :]
+    S = x.shape[1]
 
     def body(xx, p_l):
-        out, _, _ = _dec_block(xx, p_l, cfg, enc_out, positions)
+        # in-body iota: a hoisted positions constant becomes a scan
+        # operand whose sharding annotation breaks 0.4.x partial-auto
+        # manual regions (see repro.compat)
+        out, _, _ = _dec_block(xx, p_l, cfg, enc_out,
+                               jnp.arange(S)[None, :])
         return out, None
 
     if remat in ("block", "dots"):
-        body = jax.checkpoint(body, prevent_cse=False)
+        body = compat.checkpoint(body, prevent_cse=False)
     x, _ = jax.lax.scan(body, x, params["dec_layers"])
     x = L.layernorm(x, params["dec_ln"], cfg.norm_eps)
     logits = L.mask_padded_vocab(

@@ -17,6 +17,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from .config import ModelConfig, MoEConfig
 from repro.parallel.hints import constrain
 
@@ -169,25 +170,29 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     ks = kp.reshape(B, nk, bk, H, hd).transpose(1, 0, 2, 3, 4)
     vs = vp.reshape(B, nk, bk, H, hd).transpose(1, 0, 2, 3, 4)
 
-    kv_pos = (jnp.arange(nk * bk).reshape(nk, bk))[:, None, :]  # (nk,1,bk)
-    kv_valid = (jnp.arange(nk * bk) < Skv).reshape(nk, 1, bk)
-
-    @jax.checkpoint   # flash backward: recompute probs per q-block instead
-    def q_step(_, qi_blk):  # of saving the O(Sq*Skv) attention matrix
-        qi, q_blk = qi_blk                              # q_blk (B,bq,H,hd)
+    # Block indices ride in the scan *carries* and positions are built by
+    # in-body iotas: a constant (arange) among the scan xs picks up a
+    # plain replicated sharding annotation, which the 0.4.x partitioner
+    # cannot carry through a partial-auto manual region (fatal
+    # IsManualSubgroup check). Carry counters are annotation-free on
+    # every JAX and numerically identical.
+    @compat.checkpoint  # flash backward: recompute probs per q-block
+    def q_step(qi, q_blk):  # instead of saving the O(Sq*Skv) attn matrix
         q_pos = q_offset + qi * bq + jnp.arange(bq)     # (bq,)
 
         def kv_step(carry, kv_blk):
-            m, l, acc = carry
-            ki, k_blk, v_blk, kpos, kval = kv_blk
+            m, l, acc, ki = carry
+            k_blk, v_blk = kv_blk
+            kpos = ki * bk + jnp.arange(bk)             # (bk,)
+            kval = kpos < Skv
             # (§Perf iteration 2 tried bf16 score emission here — wire
             # bytes were unchanged, the f32 resharding happens at the
             # layer level, not in this einsum's cotangents. Reverted.)
             s = jnp.einsum("bqhd,bkhd->bhqk", q_blk, k_blk,
                            preferred_element_type=jnp.float32) * scale
-            mask = jnp.broadcast_to(kval, (bq, bk))     # kval (1, bk)
+            mask = jnp.broadcast_to(kval[None, :], (bq, bk))
             if causal:
-                mask = mask & (q_pos[:, None] >= kpos)  # kpos (1, bk)
+                mask = mask & (q_pos[:, None] >= kpos[None, :])
             s = jnp.where(mask[None, None, :, :], s, -1e30)
             m_new = jnp.maximum(m, jnp.max(s, axis=-1))
             p = jnp.exp(s - m_new[..., None])
@@ -196,19 +201,18 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
             pv = jnp.einsum("bhqk,bkhd->bqhd", p.astype(v_blk.dtype), v_blk,
                             preferred_element_type=jnp.float32)
             acc_new = acc * corr.transpose(0, 2, 1)[..., None] + pv
-            return (m_new, l_new, acc_new), None
+            return (m_new, l_new, acc_new, ki + 1), None
 
         m0 = jnp.full((B, H, bq), -jnp.inf, jnp.float32)
         l0 = jnp.zeros((B, H, bq), jnp.float32)
         a0 = jnp.zeros((B, bq, H, hd), jnp.float32)
-        (m, l, acc), _ = jax.lax.scan(
-            kv_step, (m0, l0, a0),
-            (jnp.arange(nk), ks, vs, kv_pos, kv_valid))
+        (m, l, acc, _), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0, jnp.int32(0)), (ks, vs))
         l = jnp.maximum(l, 1e-30)
         out = acc / l.transpose(0, 2, 1)[..., None]
-        return None, out.astype(q.dtype)
+        return qi + 1, out.astype(q.dtype)
 
-    _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), qs))
+    _, outs = jax.lax.scan(q_step, jnp.int32(0), qs)
     out = outs.transpose(1, 0, 2, 3, 4).reshape(B, nq * bq, H, hd)
     return out[:, :Sq]
 

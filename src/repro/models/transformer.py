@@ -19,6 +19,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from .config import ModelConfig
 from . import layers as L
 from . import ssm as S
@@ -149,7 +150,13 @@ def lm_hidden(params, cfg: ModelConfig, tokens, vis_embed=None,
     """Token (+ visual prefix) embedding through all blocks. -> (x, aux)."""
     x = _embed(params, cfg, tokens, vis_embed)
     Sq = x.shape[1]
-    positions = jnp.arange(Sq)[None, :]
+
+    # positions is built *inside* each scan body: hoisted outside, the
+    # iota becomes a scan-level constant operand whose replicated sharding
+    # annotation aborts the 0.4.x partitioner in partial-auto manual
+    # regions (see repro.compat); in-body it is a plain iota op.
+    def _positions():
+        return jnp.arange(Sq)[None, :]
 
     if cfg.family == "hybrid":
         def super_body(carry, p_sb):
@@ -157,7 +164,7 @@ def lm_hidden(params, cfg: ModelConfig, tokens, vis_embed=None,
             for pos in range(cfg.attn_period):
                 sub = p_sb[f"pos{pos}"]
                 if pos == cfg.attn_offset:
-                    xx, a, _ = _attn_block(xx, sub, cfg, positions)
+                    xx, a, _ = _attn_block(xx, sub, cfg, _positions())
                 else:
                     xx, a = _ssm_block(xx, sub, cfg)
                 aux = aux + a
@@ -173,16 +180,16 @@ def lm_hidden(params, cfg: ModelConfig, tokens, vis_embed=None,
     else:
         def body(carry, p_l):
             xx, aux = carry
-            xx, a, _ = _attn_block(xx, p_l, cfg, positions)
+            xx, a, _ = _attn_block(xx, p_l, cfg, _positions())
             return (xx, aux + a), None
         stacked = params["layers"]
 
     if remat == "block":
-        body = jax.checkpoint(body, prevent_cse=False)
+        body = compat.checkpoint(body, prevent_cse=False)
     elif remat == "block_nocse":
-        body = jax.checkpoint(body)
+        body = compat.checkpoint(body)
     elif remat == "dots":
-        body = jax.checkpoint(
+        body = compat.checkpoint(
             body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
             prevent_cse=False)
 

@@ -68,4 +68,5 @@ def constrain(x: jax.Array, logical_spec) -> jax.Array:
         from jax.sharding import NamedSharding
         return jax.lax.with_sharding_constraint(
             x, NamedSharding(mesh, P(*parts)))
-    return jax.lax.with_sharding_constraint(x, P(*parts))
+    from repro import compat
+    return compat.manual_region_constraint(x, P(*parts))

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P, NamedSharding
 
+from repro import compat
 from repro.core import collectives as coll
 from repro.models.registry import ModelAPI
 from repro.parallel import sharding as shd
@@ -185,7 +186,7 @@ def build_train_step(api: ModelAPI, tc: TrainConfig, mesh):
         if rules_mesh is not None:
             return jax.lax.with_sharding_constraint(
                 x, NamedSharding(rules_mesh, spec))
-        return jax.lax.with_sharding_constraint(x, spec)
+        return compat.manual_region_constraint(x, spec)
 
     def local_grads(params, batch, pspecs):
         """Per-worker gradients, with optional microbatch accumulation."""
@@ -317,11 +318,12 @@ def build_train_step(api: ModelAPI, tc: TrainConfig, mesh):
             if dp_axes:
                 bm, _ = batch_specs(batch, mesh, tc)
                 sm = specs["manual"]
-                fn = jax.shard_map(
+                fn = compat.shard_map(
                     inner, mesh=mesh,
                     in_specs=(sm.params, sm.opt, sm.residual, P(), bm),
                     out_specs=(sm.params, sm.opt, sm.residual, P()),
-                    axis_names=set(dp_axes), check_vma=False)
+                    axis_names=compat.train_step_manual_axes(mesh, dp_axes),
+                    check_vma=False)
             else:
                 fn = inner          # no DP axes: pure auto-sharded step
             params, opt, residual, metrics = fn(

@@ -15,13 +15,13 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P, NamedSharding
 
+from repro.compat import make_mesh, shard_map
 from repro.core import CompressionConfig
 from repro.core.collectives import (
     or_allreduce, compressed_all_reduce, dense_all_reduce,
     init_aggregation_state)
 
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
 rng = np.random.default_rng(0)
 
 # ---- 1. OR-allreduce ------------------------------------------------
@@ -35,7 +35,7 @@ def or_fn(x):
 # lay the 4 distinct worker payloads over (pod,data); replicate over model
 x = jnp.asarray(words.reshape(2, 2, 4096))
 sh = NamedSharding(mesh, P("pod", "data", None))
-got = jax.jit(jax.shard_map(
+got = jax.jit(shard_map(
     lambda a: or_fn(a[0, 0]),
     mesh=mesh, in_specs=P("pod", "data", None),
     out_specs=P(), axis_names={"pod", "data"}, check_vma=False,
@@ -43,14 +43,17 @@ got = jax.jit(jax.shard_map(
 assert np.array_equal(np.asarray(got), expect), "OR-allreduce mismatch"
 print("OK or_allreduce hierarchical")
 
-# ring + doubling individually over one axis
+# ring + doubling individually over one axis. Full-manual region: on
+# 0.4.x the partitioner cannot run ppermute while other axes stay auto
+# (see repro.compat.SUPPORTS_PARTIAL_AUTO_PPERMUTE), and taking every
+# axis manual tests the collective itself on every JAX.
 words2 = rng.integers(0, 2**32, size=(2, 100_000), dtype=np.uint32)
 from repro.core.collectives import or_allreduce_ring, or_allreduce_doubling
 for name, fn in [("ring", or_allreduce_ring), ("doubling", or_allreduce_doubling)]:
-    got2 = jax.jit(jax.shard_map(
+    got2 = jax.jit(shard_map(
         lambda a, fn=fn: fn(a[0], "pod"),
         mesh=mesh, in_specs=P("pod", None), out_specs=P(),
-        axis_names={"pod"}, check_vma=False,
+        axis_names={"pod", "data", "model"}, check_vma=False,
     ))(jax.device_put(jnp.asarray(words2.reshape(2, 1, -1)[:, 0]),
                       NamedSharding(mesh, P("pod", None))))
     assert np.array_equal(np.asarray(got2), np.bitwise_or.reduce(words2, 0)), name
@@ -103,7 +106,7 @@ put = jax.tree.map(
     lambda a, s: jax.device_put(jnp.asarray(a), NamedSharding(mesh, s)),
     stacked, put_specs, is_leaf=lambda x: isinstance(x, np.ndarray))
 
-got = jax.jit(jax.shard_map(outer, mesh=mesh, in_specs=(in_specs,),
+got = jax.jit(shard_map(outer, mesh=mesh, in_specs=(in_specs,),
                             out_specs=out_specs,
                             axis_names={"pod", "data"}, check_vma=False))(put)
 got = jax.tree.map(np.asarray, got)
@@ -113,7 +116,7 @@ for k in ("w1", "w2", "scale"):
     assert ok, k
 
 # dense baseline for comparison
-got_d = jax.jit(jax.shard_map(
+got_d = jax.jit(shard_map(
     lambda gs: dense_all_reduce(jax.tree.map(lambda a: a[0, 0], gs), ("pod", "data")),
     mesh=mesh, in_specs=(in_specs,), out_specs=out_specs,
     axis_names={"pod", "data"}, check_vma=False))(put)

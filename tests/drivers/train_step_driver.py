@@ -11,14 +11,14 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import make_mesh
 from repro.models import ModelConfig, MoEConfig, model_api
 from repro.core import CompressionConfig
 from repro.train import TrainConfig, OptimizerConfig, init_train_state, build_train_step
 from repro.train.step import state_specs, batch_specs
 from repro.parallel.sharding import ShardingProfile
 
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
 cfg = ModelConfig(name="tiny", family="moe", n_layers=2, d_model=64,
                   n_heads=4, n_kv_heads=2, d_ff=128, vocab=256,
                   moe=MoEConfig(num_experts=8, top_k=2, shared_experts=1,

@@ -58,8 +58,8 @@ def test_async_checkpointer(tmp_path):
 def test_restore_with_resharding(tmp_path):
     """Bytes on disk are mesh-agnostic: restore onto explicit shardings."""
     from jax.sharding import NamedSharding, PartitionSpec as P
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.compat import make_mesh
+    mesh = make_mesh((1,), ("data",))
     t = _tree()
     ck.save(str(tmp_path), 2, t)
     sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), t)

@@ -1,0 +1,84 @@
+"""Backend-dispatch parity: the full compress -> aggregate -> recover
+roundtrip must be bit-for-bit identical between ``use_pallas="always"``
+(Pallas kernels, interpret mode on CPU) and ``"never"`` (jnp reference).
+
+Test values are dyadic (sign * 2^e, small e) so every floating-point sum
+along either backend's reduction order is exact — bitwise equality then
+checks the *math*, not addition-order luck.
+"""
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import CompressionConfig, HomomorphicCompressor, CompressedLeaf
+
+
+def dyadic_sparse(n, frac, seed):
+    r = np.random.default_rng(seed)
+    x = np.zeros(n, np.float32)
+    k = int(n * frac)
+    idx = r.choice(n, size=k, replace=False)
+    x[idx] = (r.choice([-1.0, 1.0], size=k)
+              * np.exp2(r.integers(-2, 3, size=k))).astype(np.float32)
+    return x
+
+
+# lanes=128 keeps interpret-mode Pallas fast; chunk_blocks=4 and
+# encode_block_tile=3 force the lax.map chunking and the multi-block
+# grid-cell tiling (with padding) on the 11-block leaf below.
+BASE = CompressionConfig(ratio=0.3, lanes=128, rows=6, rounds=10,
+                         chunk_blocks=4, encode_block_tile=3)
+
+
+def _roundtrip(cfg, n, workers=2):
+    comp = HomomorphicCompressor(cfg)
+    xs = [dyadic_sparse(n, 0.05, seed=s) for s in range(workers)]
+    cs = [comp.compress(jnp.asarray(x)) for x in xs]
+    agg = cs[0]
+    for c in cs[1:]:
+        agg = CompressedLeaf(sketch=agg.sketch + c.sketch,
+                             index_words=agg.index_words | c.index_words)
+    out, stats = comp.recover(agg, n, with_stats=True)
+    return [np.asarray(c.sketch) for c in cs], np.asarray(out), stats, \
+        np.sum(xs, axis=0)
+
+
+@pytest.mark.parametrize("nb", [1, 11], ids=["single-chunk", "chunked"])
+def test_roundtrip_parity_bitwise(nb):
+    n = nb * BASE.block_elems - (BASE.lanes // 2 if nb > 1 else 0)
+    never = dataclasses.replace(BASE, use_pallas="never")
+    always = dataclasses.replace(BASE, use_pallas="always")
+    sk_n, out_n, st_n, want = _roundtrip(never, n)
+    sk_a, out_a, st_a, _ = _roundtrip(always, n)
+    for a, b in zip(sk_n, sk_a):
+        assert np.array_equal(a, b), "per-worker sketches differ"
+    assert np.array_equal(out_n, out_a), "recovered gradients differ"
+    assert int(st_n.residual) == 0 and int(st_a.residual) == 0
+    assert int(st_n.peeled) == int(st_a.peeled)
+    # lossless regime + dyadic values: recovery is exact, not approximate
+    assert np.array_equal(out_n, want)
+
+
+def test_estimate_runs_on_both_backends():
+    n = 3 * BASE.block_elems
+    x = dyadic_sparse(n, 0.02, seed=7)
+    outs = []
+    for policy in ("never", "always"):
+        cfg = dataclasses.replace(BASE, use_pallas=policy)
+        comp = HomomorphicCompressor(cfg)
+        outs.append(np.asarray(comp.estimate(comp.compress(jnp.asarray(x)), n)))
+    assert np.array_equal(outs[0], outs[1])
+
+
+def test_compressor_has_no_direct_backend_imports():
+    """The dispatch layer is the only compute backend: the compressor
+    must not reach into core.sketch/core.peeling directly."""
+    import inspect
+    import repro.core.compressor as m
+    src = inspect.getsource(m)
+    for needle in ("encode_blocks", "peel_blocks", "estimate_blocks",
+                   "from .sketch", "from .peeling"):
+        assert needle not in src, f"compressor bypasses kernels.ops: {needle}"
+    assert "from repro.kernels import ops" in src

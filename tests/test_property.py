@@ -1,6 +1,11 @@
 """Hypothesis property tests for the system's core invariants."""
 import numpy as np
 import jax.numpy as jnp
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need the 'test' extra (pip install -e .[test])")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (CompressionConfig, HomomorphicCompressor,

@@ -3,6 +3,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import make_mesh
 from repro.configs import get_arch
 from repro.models import model_api
 from repro.parallel.sharding import (ShardingProfile, param_pspecs,
@@ -61,8 +62,7 @@ def test_hybrid_nested_paths():
 
 
 def test_batch_pspec_coverage():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     prof = ShardingProfile()
     assert batch_pspec(4, mesh, prof) == P(("data",))
     # batch=1 cannot cover even data=1? 1 % 1 == 0 -> covered
@@ -70,8 +70,7 @@ def test_batch_pspec_coverage():
 
 
 def test_cache_pspecs_families():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     prof = ShardingProfile()
     dense = get_arch("qwen2-7b").smoke
     c = cache_pspecs(dense, 8, mesh, prof)
@@ -82,8 +81,7 @@ def test_cache_pspecs_families():
 
 
 def test_filter_rules_and_strip():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     rules = {"dp": ("pod", "data"), "tp": "model", "ep": "pod"}
     f = filter_rules_for_mesh(rules, mesh)
     assert f == {"dp": ("data",), "tp": "model", "ep": None}

@@ -18,8 +18,8 @@ CFG = ModelConfig(name="tiny", family="dense", n_layers=2, d_model=64,
 
 
 def _mesh():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.compat import make_mesh
+    return make_mesh((1, 1), ("data", "model"))
 
 
 def _run(tc, steps=8, **kw):
