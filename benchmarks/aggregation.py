@@ -12,45 +12,72 @@ Aggregation throughput (paper definition: aggregated gradient volume /
 wall time, counting each worker's gradient once) is then
     throughput = orig_bytes / max(t_codec, t_wire)
 reported for both the dense baseline and the compressed pipeline.
+
+``--compare-bucketing`` (PR 2) additionally compares the bucketed
+aggregator (one fused codec + O(1) collective launches for the whole
+pytree) against the pre-bucketing per-leaf architecture (one codec plan +
+one psum + one OR-AllReduce *per leaf*) on a multi-leaf model-shaped
+pytree: static collective-op counts from the jaxpr, plus end-to-end
+aggregation wall time, plus the single-leaf case (where bucketing must
+not regress). Runs on 2 fake CPU devices so the collectives are real.
+
+``--smoke`` shrinks every size for CI; ``--json PATH`` dumps all rows as
+a JSON artifact so the perf trajectory accumulates across CI runs.
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import json
+import os
+import sys
 import time
 from typing import Dict, List
+
+# Must be set before jax initializes: the bucketing comparison needs >1
+# device so the psum / OR-AllReduce launches are real collectives.
+if "--compare-bucketing" in sys.argv and \
+        "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=2")
 
 import numpy as np
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.core import CompressionConfig, HomomorphicCompressor, CompressedLeaf
+from repro.core import collectives as coll
+from repro.core.aggregators import make_aggregator
+from repro.core.collectives import AggregationState
 
 N = 1 << 22                  # 4M f32 gradient (16 MiB) per measurement
 SPARSITY = 0.945             # LSTM profile
 LINK_GBPS = {"nccl_100g": 100.0, "ici_v5e": 400.0}
 
 
-def _grad(seed=0):
+def _grad(seed=0, n=N):
     r = np.random.default_rng(seed)
-    x = np.zeros(N, np.float32)
-    k = int(N * (1 - SPARSITY))
-    x[r.choice(N, size=k, replace=False)] = r.standard_normal(k).astype(np.float32)
+    x = np.zeros(n, np.float32)
+    k = int(n * (1 - SPARSITY))
+    x[r.choice(n, size=k, replace=False)] = r.standard_normal(k).astype(np.float32)
     return jnp.asarray(x)
 
 
 def measure(frac: float, workers: int = 4, iters: int = 3,
-            use_pallas: str = "auto") -> Dict:
+            use_pallas: str = "auto", n: int = N) -> Dict:
     rows = 6 if frac <= 0.4 else 90
     cfg = CompressionConfig(ratio=frac, lanes=512, rows=rows, rounds=16,
                             chunk_blocks=256, use_pallas=use_pallas)
     comp = HomomorphicCompressor(cfg)
-    x = _grad()
+    x = _grad(n=n)
     compress = jax.jit(comp.compress)
-    recover = jax.jit(lambda c: comp.recover(c, N))
+    recover = jax.jit(lambda c: comp.recover(c, n))
     c = compress(x)
     jax.block_until_ready(c)
-    xs = [compress(_grad(s)) for s in range(workers)]
+    xs = [compress(_grad(s, n=n)) for s in range(workers)]
     agg = CompressedLeaf(sketch=sum(cc.sketch for cc in xs),
                          index_words=xs[0].index_words)
     for cc in xs[1:]:
@@ -66,8 +93,8 @@ def measure(frac: float, workers: int = 4, iters: int = 3,
         jax.block_until_ready(recover(agg))
     t_rec = (time.perf_counter() - t0) / iters
 
-    wire = comp.wire_bytes(N, grad_bytes_per_elem=4)
-    orig_bytes = N * 4
+    wire = comp.wire_bytes(n, grad_bytes_per_elem=4)
+    orig_bytes = n * 4
     out = {"size_frac": frac, "backend": use_pallas,
            "t_compress_s": t_comp, "t_recover_s": t_rec,
            "codec_gbps": orig_bytes * 8 / (t_comp + t_rec) / 1e9,
@@ -86,12 +113,175 @@ def measure(frac: float, workers: int = 4, iters: int = 3,
     return out
 
 
+# ----------------------------------------------------------------------
+# Bucketed vs per-leaf aggregation (PR 2)
+# ----------------------------------------------------------------------
+
+_COLLECTIVE_PREFIXES = ("psum", "ppermute", "all_gather", "all_to_all",
+                        "reduce_scatter", "pmax", "pmin")
+
+
+def _count_collectives(obj, counts: Dict[str, int]):
+    """Recursively count collective eqns in a (Closed)Jaxpr."""
+    jaxpr = getattr(obj, "jaxpr", obj)
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if any(name.startswith(p) for p in _COLLECTIVE_PREFIXES):
+            counts[name] = counts.get(name, 0) + 1
+        for v in eqn.params.values():
+            for sub in (v if isinstance(v, (list, tuple)) else (v,)):
+                if hasattr(sub, "eqns") or hasattr(sub, "jaxpr"):
+                    _count_collectives(sub, counts)
+    return counts
+
+
+def _model_tree(n_leaves: int, width: int, seed: int = 0):
+    """A transformer-shaped pytree: n_leaves alternating matrices/vectors."""
+    r = np.random.default_rng(seed)
+    tree = {}
+    for i in range(n_leaves):
+        shape = (width, width) if i % 3 == 0 else (
+            (width, 4 * width) if i % 3 == 1 else (width,))
+        g = np.zeros(int(np.prod(shape)), np.float32)
+        k = max(1, int(g.size * 0.03))
+        idx = r.choice(g.size, size=k, replace=False)
+        g[idx] = r.standard_normal(k).astype(np.float32)
+        tree[f"leaf{i:02d}"] = g.reshape(shape)
+    return tree
+
+
+def _stacked_inputs(tree, mesh, W):
+    """Per-worker stacked copies of ``tree`` laid over the "data" axis:
+    (device_put inputs, in_specs, out_specs, total element count)."""
+    stacked = jax.tree.map(
+        lambda g: np.stack([g * (1.0 + 0.1 * w) for w in range(W)]), tree)
+    in_specs = jax.tree.map(
+        lambda g: P(*(("data",) + (None,) * g.ndim)), tree)
+    put = jax.tree.map(
+        lambda a, s: jax.device_put(jnp.asarray(a), NamedSharding(mesh, s)),
+        stacked, in_specs)
+    out_specs = jax.tree.map(lambda _: P(), tree)
+    total = sum(int(np.prod(g.shape)) for g in tree.values())
+    return put, in_specs, out_specs, total
+
+
+def _time_jitted(fn, args, iters: int) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters
+
+
+def compare_bucketing(smoke: bool = False) -> List[Dict]:
+    """Bucketed aggregator vs the per-leaf architecture it replaced."""
+    W = jax.device_count()
+    mesh = compat.make_mesh((W,), ("data",))
+    width = 32 if smoke else 128
+    iters = 1 if smoke else 3
+    cfg = CompressionConfig(
+        ratio=0.3, lanes=128, rows=6, rounds=10, chunk_blocks=64,
+        use_pallas="never",
+        bucket_bytes=(64 << 10) if smoke else (1 << 20))
+    comp = HomomorphicCompressor(cfg)
+
+    def per_leaf_path(grads):
+        """The seed architecture: plan + psum + OR-AllReduce per leaf."""
+        idx = {"data": jax.lax.axis_index("data")}
+        out = {}
+        for k, g in grads.items():
+            flat = g.reshape(-1).astype(jnp.float32)
+            c = comp.compress(flat)
+            sk = jax.lax.psum(c.sketch, ("data",))
+            words = coll.or_allreduce(c.index_words, ("data",),
+                                      axis_indices=idx)
+            rec = comp.recover(CompressedLeaf(sk, words), flat.shape[0])
+            out[k] = (rec / W).astype(g.dtype).reshape(g.shape)
+        return out
+
+    agg = make_aggregator("compressed", cfg, mesh, ("data",), ())
+
+    def bucketed_path(grads):
+        specs = jax.tree.map(lambda _: P(), grads)
+        res = coll.init_aggregation_state(grads, cfg).residual
+        out, _ = agg(grads, AggregationState(residual=res), specs)
+        return out
+
+    rows = []
+    for case, n_leaves in (("multi_leaf", 24), ("single_leaf", 1)):
+        tree = _model_tree(n_leaves, width)
+        put, in_specs, out_specs, total = _stacked_inputs(tree, mesh, W)
+        wire = cfg.wire_bytes(total, grad_bytes_per_elem=4)
+        row = {"case": case, "n_leaves": n_leaves, "workers": W,
+               "total_elems": total, "n_buckets": wire["n_buckets"],
+               "bucket_elems": wire["bucket_elems"]}
+        for name, path in (("perleaf", per_leaf_path),
+                           ("bucketed", bucketed_path)):
+            fn = jax.jit(compat.shard_map(
+                lambda st, path=path: path(jax.tree.map(lambda a: a[0], st)),
+                mesh=mesh, in_specs=(in_specs,), out_specs=out_specs,
+                axis_names={"data"}, check_vma=False))
+            counts = _count_collectives(jax.make_jaxpr(fn)(put), {})
+            row[f"{name}_collective_ops"] = sum(counts.values())
+            row[f"{name}_collectives"] = dict(sorted(counts.items()))
+            row[f"{name}_wall_s"] = _time_jitted(fn, (put,), iters)
+        row["collective_ratio"] = (
+            row["perleaf_collective_ops"]
+            / max(row["bucketed_collective_ops"], 1))
+        row["wall_ratio"] = row["perleaf_wall_s"] / row["bucketed_wall_s"]
+        rows.append(row)
+        print(f"[{case}] leaves={n_leaves} buckets={row['n_buckets']} "
+              f"collective_ops per-leaf={row['perleaf_collective_ops']} "
+              f"bucketed={row['bucketed_collective_ops']} "
+              f"wall per-leaf={row['perleaf_wall_s']:.4f}s "
+              f"bucketed={row['bucketed_wall_s']:.4f}s")
+
+    # ---- bucket-size sweep (fused vs overlap-pipelined) --------------
+    tree = _model_tree(24, width)
+    put, in_specs, out_specs, total = _stacked_inputs(tree, mesh, W)
+    sweep = ((16 << 10, 64 << 10, 256 << 10) if smoke
+             else (256 << 10, 1 << 20, 4 << 20))
+    for bucket_bytes in sweep:
+        for overlap in (False, True):
+            cfg_b = dataclasses.replace(cfg, bucket_bytes=bucket_bytes,
+                                        overlap=overlap)
+            agg_b = make_aggregator("compressed", cfg_b, mesh, ("data",), ())
+
+            def bucketed_b(grads, agg_b=agg_b, cfg_b=cfg_b):
+                specs = jax.tree.map(lambda _: P(), grads)
+                res = coll.init_aggregation_state(grads, cfg_b).residual
+                out, _ = agg_b(grads, AggregationState(residual=res), specs)
+                return out
+
+            fn = jax.jit(compat.shard_map(
+                lambda st, path=bucketed_b: path(
+                    jax.tree.map(lambda a: a[0], st)),
+                mesh=mesh, in_specs=(in_specs,), out_specs=out_specs,
+                axis_names={"data"}, check_vma=False))
+            wire_b = cfg_b.wire_bytes(total, grad_bytes_per_elem=4)
+            row = {"case": "bucket_sweep", "bucket_bytes": bucket_bytes,
+                   "overlap": overlap, "workers": W,
+                   "n_buckets": wire_b["n_buckets"],
+                   "bucket_elems": wire_b["bucket_elems"],
+                   "bucketed_total_bytes": wire_b["bucketed_total_bytes"],
+                   "collective_ops": sum(_count_collectives(
+                       jax.make_jaxpr(fn)(put), {}).values()),
+                   "wall_s": _time_jitted(fn, (put,), iters)}
+            rows.append(row)
+            print(f"[bucket_sweep] bucket_bytes={bucket_bytes} "
+                  f"overlap={overlap} buckets={row['n_buckets']} "
+                  f"collective_ops={row['collective_ops']} "
+                  f"wall={row['wall_s']:.4f}s")
+    return rows
+
+
 def _fmt(v):
     return v if isinstance(v, str) else f"{v:.4g}"
 
 
 def main(fracs=(0.02, 0.05, 0.10, 0.25, 0.60, 1.0),
-         backends=("auto",)):
+         backends=("auto",), smoke=False, compare=False, json_path=None):
     """One CSV row per (size fraction, compute backend).
 
     ``--backends never always`` compares the jnp reference codec against
@@ -99,14 +289,23 @@ def main(fracs=(0.02, 0.05, 0.10, 0.25, 0.60, 1.0),
     "always"/"auto" exercises the real kernels and this becomes the
     paper's codec-throughput comparison).
     """
+    n = (1 << 16) if smoke else N
+    iters = 1 if smoke else 3
+    rows: List[Dict] = []
     keys = None
     for frac in fracs:
         for backend in backends:
-            r = measure(frac, use_pallas=backend)
+            r = measure(frac, use_pallas=backend, n=n, iters=iters)
+            rows.append(r)
             if keys is None:
                 keys = list(r)
                 print(",".join(keys))
             print(",".join(_fmt(r[k]) for k in keys))
+    bucket_rows = compare_bucketing(smoke=smoke) if compare else []
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"codec": rows, "bucketing": bucket_rows}, f, indent=2)
+        print(f"wrote {json_path}")
 
 
 if __name__ == "__main__":
@@ -116,5 +315,12 @@ if __name__ == "__main__":
     ap.add_argument("--backends", nargs="+", default=("auto",),
                     choices=("never", "always", "auto"),
                     help="use_pallas policies to compare")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI smoke runs")
+    ap.add_argument("--compare-bucketing", action="store_true",
+                    help="bucketed aggregator vs the per-leaf architecture")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="dump all rows as a JSON artifact")
     args = ap.parse_args()
-    main(tuple(args.fracs), tuple(args.backends))
+    main(tuple(args.fracs), tuple(args.backends), smoke=args.smoke,
+         compare=args.compare_bucketing, json_path=args.json)

@@ -5,6 +5,7 @@ form across a TPU mesh."""
 
 from .config import CompressionConfig, GAMMA
 from .blocks import LeafPlan, make_plan, to_blocks, from_blocks
+from .bucketing import BucketPlan, BucketSegment, make_bucket_plan
 from .compressor import HomomorphicCompressor, CompressedLeaf, RecoveryStats
 from .sketch import encode_blocks, estimate_blocks
 from .peeling import peel_blocks, PeelResult
@@ -14,7 +15,8 @@ from . import topk
 
 __all__ = [
     "CompressionConfig", "GAMMA", "LeafPlan", "make_plan", "to_blocks",
-    "from_blocks", "HomomorphicCompressor", "CompressedLeaf", "RecoveryStats",
+    "from_blocks", "BucketPlan", "BucketSegment", "make_bucket_plan",
+    "HomomorphicCompressor", "CompressedLeaf", "RecoveryStats",
     "encode_blocks", "estimate_blocks", "peel_blocks", "PeelResult",
     "index", "hashing", "topk",
 ]

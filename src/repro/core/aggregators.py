@@ -1,0 +1,427 @@
+"""Aggregator strategies: bucketed gradient aggregation (PR 2).
+
+The pre-bucketing pipeline unrolled a Python loop over every pytree leaf —
+each leaf got its own codec plan, its own nested ``shard_map`` regions and
+its own ``psum`` + OR-AllReduce launch, so a 100-leaf model compiled ~100
+copies of the codec and paid ~100x collective launch latency. Here the
+whole gradient is packed into fixed-byte flat buckets
+(:mod:`repro.core.bucketing`) and aggregation is a pluggable strategy:
+
+- :class:`DenseAggregator`              — plain ``psum`` (the paper's NCCL
+  baseline arm);
+- :class:`CompressedAggregator`         — ONE sketch encode over the packed
+  stream, ONE stacked sketch-``psum`` and ONE OR-AllReduce for *all*
+  buckets. With ``cfg.overlap`` the per-bucket collectives are staged
+  against the next bucket's encode via a ``lax.scan`` double-buffer carry,
+  so on hardware with async collectives bucket *i*'s wire time hides
+  bucket *i+1*'s encode;
+- :class:`CompressedReduceScatterAggregator` — recovers (peels) only this
+  DP-rank's bucket range, 1/W of the peeling compute per rank, and
+  reassembles via the same scatter+``psum`` trick the ZeRO-1 optimizer
+  path uses (see ``train/step.py``). The sketch reduction is ``psum`` +
+  local slice rather than a native ``psum_scatter``: XLA's
+  reduce-scatter-creation pass can fuse the pair, and Shardy un-shards
+  auto TP axes around manual-axis ``all_gather``/``psum_scatter`` (the
+  same issue noted at the ZeRO-1 gather) — native lowering is a ROADMAP
+  open item.
+
+All strategies run *inside* the outer train-step ``shard_map`` (manual DP
+axes). On JAX with nested partial-manual support, packing/unpacking runs
+in a nested ``shard_map`` that takes the tensor-parallel axes manual too,
+so each device packs only its local parameter shards — no GSPMD
+resharding of gradients — while the codec and the DP collectives run at
+the outer level on the shard-local buckets. On 0.4.x the packed stream is
+the auto-sharded global view (same math; see ``repro.compat``).
+
+Sparsification / error feedback are applied **per leaf** inside the pack
+stage — identical semantics (and bits) to the per-leaf path this replaced,
+pinned by ``tests/drivers/collectives_driver.py`` — and residuals keep the
+parameter pytree layout. :meth:`BucketPlan.residual_slices` exposes the
+per-bucket view of those residuals.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Protocol, Sequence, Tuple, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from .config import CompressionConfig
+from .compressor import HomomorphicCompressor, CompressedLeaf
+from .bucketing import BucketPlan, make_bucket_plan
+from .collectives import (AggregationState, dense_all_reduce, or_allreduce)
+from . import topk as topk_lib
+
+
+@runtime_checkable
+class Aggregator(Protocol):
+    """Strategy for aggregating a gradient pytree across the DP axes.
+
+    Called inside a ``shard_map`` where the DP axes are manual. Returns
+    the aggregated (mean) gradients and the new error-feedback state.
+    """
+
+    def __call__(self, grads: Any, state: AggregationState,
+                 param_specs: Any) -> Tuple[Any, AggregationState]:
+        ...
+
+
+# ----------------------------------------------------------------------
+# Dense (the NCCL-AllReduce baseline arm)
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DenseAggregator:
+    """Same constructor surface as the compressed strategies so the
+    registry can build any entry uniformly; cfg/tp_axes/outer_manual are
+    simply unused here."""
+
+    mesh: Any
+    dp_axes: Tuple[str, ...]
+    cfg: Any = None
+    tp_axes: Tuple[str, ...] = ()
+    mean: bool = True
+    outer_manual: Any = None
+
+    def __call__(self, grads, state: AggregationState, param_specs=None):
+        return dense_all_reduce(grads, self.dp_axes, mean=self.mean), state
+
+
+# ----------------------------------------------------------------------
+# Shared machinery for the compressed strategies
+# ----------------------------------------------------------------------
+
+def _tp_only(spec, dp_set):
+    """Strip DP-axis references from a PartitionSpec (those axes are
+    manual in the outer shard_map; nested regions partition TP only)."""
+    if spec is None:
+        return P()
+    parts = []
+    for s in spec:
+        if s is None:
+            parts.append(None)
+        elif isinstance(s, (tuple, list)):
+            kept = tuple(a for a in s if a not in dp_set)
+            parts.append(kept if kept else None)
+        else:
+            parts.append(None if s in dp_set else s)
+    return P(*parts)
+
+
+def _spec_axes(spec) -> set:
+    out = set()
+    for part in spec:
+        if part is None:
+            continue
+        out |= set(part) if isinstance(part, (tuple, list)) else {part}
+    return out
+
+
+def _local_shape(shape, spec, mesh):
+    """Per-device shape of a leaf sharded as ``spec`` on ``mesh``."""
+    def div(i):
+        part = spec[i] if i < len(spec) else None
+        if part is None:
+            return 1
+        names = part if isinstance(part, (tuple, list)) else (part,)
+        d = 1
+        for nm in names:
+            d *= mesh.shape[nm]
+        return d
+    return tuple(sz // div(i) for i, sz in enumerate(shape))
+
+
+def _sparsify_leaf(flat: jnp.ndarray, res: jnp.ndarray,
+                   cfg: CompressionConfig):
+    """Per-leaf phase-0: top-k budget + error feedback on one flat leaf.
+
+    Identical math to the per-leaf path this layer replaced (pinned
+    bit-for-bit by the collectives driver): k is proportional to *this
+    leaf's* (shard-local) element count.
+    """
+    new_res = res
+    if cfg.topk_ratio is not None:
+        k = max(1, int(flat.shape[0] * cfg.topk_ratio))
+        if cfg.error_feedback:
+            flat, new_res = topk_lib.apply_error_feedback(
+                flat, res.reshape(-1), k, exact=cfg.topk_exact)
+        elif cfg.topk_exact:
+            flat = topk_lib.sparsify_topk(flat, k)
+        else:
+            flat = topk_lib.sparsify_threshold(flat, k)
+    return flat, new_res
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressedAggregator:
+    """The paper's pipeline over one fused bucket stream.
+
+    pack (shard-local) -> per-leaf sparsify/EF -> encode all buckets ->
+    sketch psum + index OR-AllReduce -> peel -> unpack.
+    """
+
+    cfg: CompressionConfig
+    mesh: Any
+    dp_axes: Tuple[str, ...]
+    tp_axes: Tuple[str, ...] = ("model",)
+    mean: bool = True
+    # The axis set the *caller's* shard_map takes manual. Only consulted
+    # by the reduce-scatter variant: on 0.4.x, axis_index in a
+    # partial-auto region lowers to a PartitionId the old partitioner
+    # rejects, so per-rank slicing needs either new JAX or a full-manual
+    # caller (the 0.4.x train step is full-manual; see compat).
+    outer_manual: Any = None
+
+    # -- construction helpers ------------------------------------------
+
+    def _n_workers(self) -> int:
+        if not self.mean:
+            return 1
+        n = 1
+        for ax in self.dp_axes:
+            n *= self.mesh.shape[ax]
+        return n
+
+    def _manual_set(self, spec_leaves) -> set:
+        """Axes the nested pack/unpack regions must take manual: the TP
+        axes plus every axis any leaf's (DP-stripped) spec references
+        (e.g. expert-parallel axes)."""
+        manual = {a for a in self.tp_axes if a and a in self.mesh.shape}
+        for spec in spec_leaves:
+            manual |= _spec_axes(spec)
+        return manual
+
+    # -- phase I/II bucket codec (runs on shard-local buckets) ---------
+
+    def _encode(self, buckets: jnp.ndarray, plan: BucketPlan,
+                comp: HomomorphicCompressor, dp_idx):
+        """(n_buckets, E) local buckets -> aggregated (sketch, words)."""
+        if self.cfg.overlap and plan.n_buckets > 1:
+            return self._encode_overlapped(buckets, plan, comp, dp_idx)
+        c = comp.compress(buckets.reshape(-1))
+        sk = jax.lax.psum(c.sketch, tuple(self.dp_axes))
+        words = or_allreduce(c.index_words, self.dp_axes,
+                             axis_indices=dp_idx)
+        return sk, words
+
+    def _encode_overlapped(self, buckets, plan: BucketPlan,
+                           comp: HomomorphicCompressor, dp_idx):
+        """Double-buffered staging: bucket i's collectives are issued in
+        the same scan step as bucket i+1's encode, with no data
+        dependence between them — async-collective backends overlap the
+        wire with the MXU encode. Bit-identical to the fused path (same
+        global block ids via block_offset; bitmap index slices exactly
+        per bucket)."""
+        cfg = self.cfg
+        nbpb = plan.bucket_elems // cfg.block_elems   # blocks per bucket
+        wpb = plan.bucket_elems // 32                 # bitmap words/bucket
+
+        def enc(i, bucket):
+            c = comp.compress(bucket, block_offset=i * nbpb)
+            return c.sketch, c.index_words
+
+        def reduce_one(sk, words):
+            return (jax.lax.psum(sk, tuple(self.dp_axes)),
+                    or_allreduce(words, self.dp_axes, axis_indices=dp_idx))
+
+        sk0, w0 = enc(jnp.int32(0), buckets[0])
+
+        def body(carry, xs):
+            i, bucket = xs
+            agg = reduce_one(*carry)
+            return enc(i, bucket), agg
+
+        idx = jnp.arange(1, plan.n_buckets, dtype=jnp.int32)
+        (sk_l, w_l), (sks, ws) = jax.lax.scan(body, (sk0, w0),
+                                              (idx, buckets[1:]))
+        sk_last, w_last = reduce_one(sk_l, w_l)
+        sk = jnp.concatenate([sks, sk_last[None]], axis=0)
+        words = jnp.concatenate([ws, w_last[None]], axis=0)
+        # (n_buckets, nbpb, rows, lanes) / (n_buckets, wpb) -> fused views
+        return (sk.reshape(plan.n_buckets * nbpb, cfg.rows, cfg.lanes),
+                words.reshape(plan.n_buckets * wpb))
+
+    def _recover(self, sk, words, plan: BucketPlan,
+                 comp: HomomorphicCompressor, dp_idx, dp_rank):
+        """Aggregated (sketch, words) -> recovered (n_buckets, E)."""
+        rec = comp.recover(CompressedLeaf(sketch=sk, index_words=words),
+                           plan.padded)
+        return rec.reshape(plan.n_buckets, plan.bucket_elems)
+
+    # -- the strategy --------------------------------------------------
+
+    def __call__(self, grads, state: AggregationState, param_specs):
+        cfg = self.cfg
+        comp = HomomorphicCompressor(cfg)
+        mesh = self.mesh
+        dp_set = set(self.dp_axes)
+        n_workers = self._n_workers()
+        ef_on = cfg.topk_ratio is not None and cfg.error_feedback
+
+        leaves, treedef = jax.tree.flatten(grads)
+        spec_leaves = [_tp_only(s, dp_set)
+                       for s in treedef.flatten_up_to(param_specs)]
+        res_tree = state.residual
+        res_specs = jax.tree.unflatten(
+            treedef, [s if ef_on else P() for s in spec_leaves])
+        specs = jax.tree.unflatten(treedef, spec_leaves)
+
+        # Shard indices on the (outer-manual) DP axes, computed here where
+        # those axes are directly bound; threaded into the OR-rings because
+        # axis_index inside nested regions would re-bind the axis (Shardy).
+        dp_idx = {ax: jax.lax.axis_index(ax) for ax in self.dp_axes}
+        dp_rank = jnp.int32(0)
+        for ax in self.dp_axes:
+            dp_rank = dp_rank * mesh.shape[ax] + dp_idx[ax]
+
+        manual = self._manual_set(spec_leaves)
+        nested = bool(manual) and compat.SUPPORTS_NESTED_SHARD_MAP
+        if nested:
+            local_shapes = [
+                _local_shape(g.shape, s, mesh)
+                for g, s in zip(leaves, spec_leaves)]
+        else:
+            # Pure DP, or a JAX without nested partial-manual shard_map:
+            # pack the auto-sharded global view (same compress -> psum/OR
+            # -> recover math; nesting only avoids GSPMD resharding).
+            local_shapes = [tuple(g.shape) for g in leaves]
+        plan = make_bucket_plan(
+            grads, cfg, shapes=jax.tree.unflatten(treedef, local_shapes))
+
+        def pack_stage(g_tree, r_tree):
+            """Shard-local: per-leaf sparsify/EF, then bucket-pack."""
+            g_leaves = plan.treedef.flatten_up_to(g_tree)
+            r_leaves = plan.treedef.flatten_up_to(r_tree)
+            flats, new_res = [], []
+            for g, r in zip(g_leaves, r_leaves):
+                flat, nr = _sparsify_leaf(
+                    g.reshape(-1).astype(jnp.float32), r, cfg)
+                flats.append(flat)
+                new_res.append(nr.reshape(r.shape))
+            return (plan.pack_flat(flats),
+                    jax.tree.unflatten(plan.treedef, new_res))
+
+        def unpack_stage(buckets):
+            """Shard-local: bucket stream -> leaf pytree (mean)."""
+            return plan.unpack(buckets / n_workers)
+
+        if nested:
+            enc = compat.shard_map(
+                pack_stage, mesh=mesh, in_specs=(specs, res_specs),
+                out_specs=(P(), res_specs), axis_names=manual,
+                check_vma=False)
+            buckets, new_res = enc(grads, res_tree)
+        else:
+            buckets, new_res = pack_stage(grads, res_tree)
+
+        sk, words = self._encode(buckets, plan, comp, dp_idx)
+        rec = self._recover(sk, words, plan, comp, dp_idx, dp_rank)
+
+        if nested:
+            dec = compat.shard_map(
+                unpack_stage, mesh=mesh, in_specs=(P(),),
+                out_specs=specs, axis_names=manual, check_vma=False)
+            agg = dec(rec)
+        else:
+            agg = unpack_stage(rec)
+        return agg, AggregationState(residual=new_res)
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressedReduceScatterAggregator(CompressedAggregator):
+    """Bucketed compressed aggregation that peels only this DP-rank's
+    bucket range.
+
+    Phase I is identical to :class:`CompressedAggregator`. Phase II
+    reduces the stacked sketch across DP, slices this rank's
+    ``n_buckets/W`` range, peels *only that range* (1/W of the recovery
+    compute per rank), and reassembles the recovered buckets with the
+    zero-pad + ``psum`` gather the ZeRO-1 slice-update path uses. That
+    feeds ZeRO-1 sharded optimizers without every rank paying the full
+    peel; recovered values are bit-identical to the all-ranks path (the
+    per-range peel runs the same ops on the same sketch slice, and the
+    disjoint-chunk psum adds each value to zeros exactly once).
+    """
+
+    def _recover(self, sk, words, plan: BucketPlan,
+                 comp: HomomorphicCompressor, dp_idx, dp_rank):
+        cfg = self.cfg
+        if cfg.index != "bitmap":
+            raise ValueError(
+                "compressed_rs requires index='bitmap' (a Bloom filter "
+                "hashes global coordinates and cannot be sliced per-rank)")
+        mesh_axes = set(self.mesh.axis_names)
+        full_manual = (self.outer_manual is not None
+                       and mesh_axes <= set(self.outer_manual))
+        if not (compat.SUPPORTS_PARTIAL_AUTO_PPERMUTE or full_manual):
+            # 0.4.x partial-auto caller: the rank (axis_index) cannot be
+            # lowered — degrade to all-ranks peeling (same values, no
+            # per-rank compute scattering). See ``outer_manual``.
+            return CompressedAggregator._recover(
+                self, sk, words, plan, comp, dp_idx, dp_rank)
+        W = 1
+        for ax in self.dp_axes:
+            W *= self.mesh.shape[ax]
+        nbpb = plan.bucket_elems // cfg.block_elems
+        wpb = plan.bucket_elems // 32
+        nb_p = -(-plan.n_buckets // W) * W      # buckets padded to W ranks
+        pad_b = nb_p - plan.n_buckets
+        if pad_b:
+            # zero sketch blocks / zero index words peel to exact zeros
+            sk = jnp.pad(sk, ((0, pad_b * nbpb), (0, 0), (0, 0)))
+            words = jnp.pad(words, (0, pad_b * wpb))
+        chunk_b = nb_p // W                      # buckets per rank
+        chunk_elems = chunk_b * plan.bucket_elems
+        sk_loc = jax.lax.dynamic_slice_in_dim(
+            sk, dp_rank * chunk_b * nbpb, chunk_b * nbpb, axis=0)
+        w_loc = jax.lax.dynamic_slice_in_dim(
+            words, dp_rank * chunk_b * wpb, chunk_b * wpb, axis=0)
+        rec_loc = comp.recover(
+            CompressedLeaf(sketch=sk_loc, index_words=w_loc), chunk_elems,
+            block_offset=dp_rank * chunk_b * nbpb)
+        # Disjoint-chunk gather via zero-pad + psum (see class docstring
+        # and the ZeRO-1 note in train/step.py on manual-axis all_gather).
+        full = jnp.zeros((nb_p * plan.bucket_elems,), rec_loc.dtype)
+        full = jax.lax.dynamic_update_slice_in_dim(
+            full, rec_loc, dp_rank * chunk_elems, axis=0)
+        full = jax.lax.psum(full, tuple(self.dp_axes))
+        return full[:plan.padded].reshape(plan.n_buckets, plan.bucket_elems)
+
+
+# ----------------------------------------------------------------------
+# Registry
+# ----------------------------------------------------------------------
+
+AGGREGATORS = {
+    "dense": DenseAggregator,
+    "compressed": CompressedAggregator,
+    "compressed_rs": CompressedReduceScatterAggregator,
+}
+
+
+def make_aggregator(name: str, cfg: CompressionConfig, mesh,
+                    dp_axes: Sequence[str],
+                    tp_axes: Sequence[str] = ("model",),
+                    mean: bool = True, outer_manual=None) -> Aggregator:
+    """Build the named strategy (see :data:`AGGREGATORS`).
+
+    ``outer_manual``: the axis set the calling shard_map takes manual
+    (see :class:`CompressedAggregator.outer_manual`).
+    """
+    if isinstance(dp_axes, str):
+        dp_axes = (dp_axes,)
+    if isinstance(tp_axes, str):
+        tp_axes = (tp_axes,)
+    try:
+        cls = AGGREGATORS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown aggregator {name!r}; have {sorted(AGGREGATORS)}")
+    return cls(cfg=cfg, mesh=mesh, dp_axes=tuple(dp_axes),
+               tp_axes=tuple(tp_axes), mean=mean,
+               outer_manual=None if outer_manual is None
+               else tuple(outer_manual))

@@ -1,0 +1,171 @@
+"""Fixed-size gradient buckets: the aggregation substrate (PR 2).
+
+The paper aggregates the *whole* gradient through one homomorphic sketch
+stream; THC (arXiv:2302.08545) and ScaleCom (arXiv:2104.11125) show that
+fusing gradients into fixed-size buckets before compression is what makes
+compressed aggregation scale. ``BucketPlan`` is the static geometry for
+that fusion:
+
+- built **once** from the (shard-local) leaf shapes/dtypes — pure Python,
+  outside jit;
+- ``pack``   — flatten every leaf to f32, concatenate in leaf order, pad,
+  and view as ``(n_buckets, bucket_elems)``. Pure and jittable: nothing
+  but reshape / pad / concat, so XLA fuses it into the producers.
+- ``unpack`` — the exact inverse (slices the stream back into leaves,
+  restoring shape and dtype; padding is dropped).
+
+``bucket_elems`` is ``cfg.bucket_bytes`` rounded to the *bucket quantum*
+(whole sketch blocks and whole packed-bitmap uint32 words), so the fused
+compressed stream's sketch ``(n_blocks, rows, lanes)`` and bitmap words
+slice into exact per-bucket views — which is what lets the overlap
+pipeline and the reduce-scatter aggregator ship bucket ``i`` while bucket
+``i+1`` is still encoding (see :mod:`repro.core.aggregators`).
+
+Error feedback: sparsification semantics are **per leaf** (pinned
+bit-for-bit against the pre-bucketing per-leaf path by
+``tests/drivers/collectives_driver.py``), so residuals keep the parameter
+pytree layout. ``bucket_segments`` / ``residual_slices`` expose the
+per-bucket view of those residuals — each bucket's slice of every leaf
+(and its residual) that lands in it — for per-bucket wire accounting and
+for future per-bucket EF policies.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import CompressionConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketSegment:
+    """One contiguous run of a leaf inside one bucket."""
+
+    leaf: int          # index into the flattened leaf list
+    leaf_start: int    # offset into the leaf's flat vector
+    bucket: int        # bucket index
+    bucket_start: int  # offset into the bucket
+    length: int
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPlan:
+    """Static packing of a pytree into ``(n_buckets, bucket_elems)``."""
+
+    treedef: Any
+    shapes: Tuple[Tuple[int, ...], ...]
+    dtypes: Tuple[Any, ...]
+    sizes: Tuple[int, ...]
+    offsets: Tuple[int, ...]   # start of each leaf in the flat stream
+    total: int                 # true element count (sum of sizes)
+    bucket_elems: int
+    n_buckets: int
+
+    @property
+    def padded(self) -> int:
+        return self.n_buckets * self.bucket_elems
+
+    @property
+    def pad(self) -> int:
+        return self.padded - self.total
+
+    # ------------------------------------------------------------------
+    # pack / unpack (pure, jittable)
+    # ------------------------------------------------------------------
+
+    def pack_flat(self, flats: Sequence[jnp.ndarray]) -> jnp.ndarray:
+        """Already-flat f32 leaves (in treedef order) -> (n_buckets, E)."""
+        if len(flats) != len(self.sizes):
+            raise ValueError(f"{len(flats)} leaves, plan has {len(self.sizes)}")
+        for f, n in zip(flats, self.sizes):
+            if f.shape != (n,):
+                raise ValueError(f"leaf shape {f.shape} != plan size ({n},)")
+        stream = jnp.concatenate(
+            [f.astype(jnp.float32) for f in flats]) if len(flats) > 1 \
+            else flats[0].astype(jnp.float32)
+        stream = jnp.pad(stream, (0, self.pad))
+        return stream.reshape(self.n_buckets, self.bucket_elems)
+
+    def pack(self, grads: Any) -> jnp.ndarray:
+        """Pytree of leaves (any shapes/dtypes) -> (n_buckets, E) f32."""
+        leaves = self.treedef.flatten_up_to(grads)
+        return self.pack_flat([g.reshape(-1) for g in leaves])
+
+    def unpack_flat(self, buckets: jnp.ndarray) -> List[jnp.ndarray]:
+        """(n_buckets, E) -> list of flat f32 leaves (padding dropped)."""
+        if buckets.shape != (self.n_buckets, self.bucket_elems):
+            raise ValueError(
+                f"buckets shape {buckets.shape} != "
+                f"({self.n_buckets}, {self.bucket_elems})")
+        stream = buckets.reshape(-1)
+        return [jax.lax.dynamic_slice_in_dim(stream, off, n)
+                for off, n in zip(self.offsets, self.sizes)]
+
+    def unpack(self, buckets: jnp.ndarray) -> Any:
+        """(n_buckets, E) f32 -> pytree with original shapes and dtypes."""
+        flats = self.unpack_flat(buckets)
+        leaves = [f.astype(dt).reshape(sh)
+                  for f, dt, sh in zip(flats, self.dtypes, self.shapes)]
+        return jax.tree.unflatten(self.treedef, leaves)
+
+    # ------------------------------------------------------------------
+    # per-bucket views
+    # ------------------------------------------------------------------
+
+    @property
+    def bucket_segments(self) -> Tuple[Tuple[BucketSegment, ...], ...]:
+        """For each bucket, the (leaf, leaf_start, bucket_start, length)
+        runs that land in it. Padding tail is not a segment."""
+        out: List[List[BucketSegment]] = [[] for _ in range(self.n_buckets)]
+        for li, (off, n) in enumerate(zip(self.offsets, self.sizes)):
+            pos = off
+            while pos < off + n:
+                b = pos // self.bucket_elems
+                b_start = pos - b * self.bucket_elems
+                length = min(off + n - pos, self.bucket_elems - b_start)
+                out[b].append(BucketSegment(
+                    leaf=li, leaf_start=pos - off, bucket=b,
+                    bucket_start=b_start, length=length))
+                pos += length
+        return tuple(tuple(s) for s in out)
+
+    def residual_slices(self, residual: Any) -> List[List[jnp.ndarray]]:
+        """Per-bucket error-feedback residual slices: for each bucket, the
+        flat residual runs (one per segment) whose coordinates it covers."""
+        leaves = [r.reshape(-1) for r in self.treedef.flatten_up_to(residual)]
+        return [[jax.lax.dynamic_slice_in_dim(
+                    leaves[s.leaf], s.leaf_start, s.length)
+                 for s in segs]
+                for segs in self.bucket_segments]
+
+
+def make_bucket_plan(grads: Any, cfg: CompressionConfig,
+                     shapes: Any = None) -> BucketPlan:
+    """Build the static plan from a pytree (or from a same-structured
+    pytree of shape tuples via ``shapes`` — used when the packed leaves
+    are shard-local views of globally-sharded arrays)."""
+    leaves, treedef = jax.tree.flatten(grads)
+    if shapes is None:
+        shape_list = [tuple(g.shape) for g in leaves]
+    else:
+        shape_list = [tuple(s) for s in treedef.flatten_up_to(shapes)]
+    dtypes = tuple(jnp.asarray(g).dtype if not hasattr(g, "dtype") else g.dtype
+                   for g in leaves)
+    sizes, offsets, off = [], [], 0
+    for sh in shape_list:
+        n = 1
+        for d in sh:
+            n *= d
+        sizes.append(n)
+        offsets.append(off)
+        off += n
+    total = off
+    bucket_elems = cfg.bucket_elems_for(total)
+    return BucketPlan(
+        treedef=treedef, shapes=tuple(shape_list), dtypes=dtypes,
+        sizes=tuple(sizes), offsets=tuple(offsets), total=total,
+        bucket_elems=bucket_elems, n_buckets=-(-total // bucket_elems))

@@ -12,33 +12,32 @@ OR-AllReduce out of ``jax.lax.ppermute``:
   latency-optimal for small bitmaps, used when |B|/W would be tiny.
 - ``or_allreduce``          — hierarchical driver: ring within a pod (ICI),
   then doubling across pods (DCN has few, fat hops), then a broadcast-free
-  second ring phase. This mirrors production hierarchical collectives.
+  second ring phase. Payloads at or above ``ring_threshold`` *bytes* (and
+  any axis whose size is not a power of two) take the ring; small
+  power-of-two axes take recursive doubling.
 
 All functions must run inside ``shard_map`` where ``axis_name`` is manual.
 
-``compressed_all_reduce`` is the full paper pipeline over a gradient
-pytree. It runs inside the *outer* train-step ``shard_map`` (manual DP
-axes) and opens a *nested* ``shard_map`` that takes the tensor-parallel
-axis manual too, so each device compresses only its local parameter shard
-— no GSPMD resharding of gradients ever happens, and the block structure
-stays aligned with the TP shards (which is what lets the same compressed
-stream feed a reduce-scatter for ZeRO-style sharded optimizers).
+Since PR 2 this module holds only the **primitives** (plus the dense
+baseline and the error-feedback state container). Gradient aggregation
+itself is a pluggable strategy over fixed-size buckets — ONE sketch
+encode, ONE stacked sketch-``psum`` and ONE OR-AllReduce for the whole
+pytree instead of a per-leaf Python loop — implemented in
+:mod:`repro.core.aggregators` on top of :mod:`repro.core.bucketing`.
+:func:`compressed_all_reduce` survives as a thin compatibility wrapper
+over the bucketed :class:`~repro.core.aggregators.CompressedAggregator`.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, Optional, Sequence
+from typing import Any, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 from repro import compat
 from .config import CompressionConfig
-from .compressor import HomomorphicCompressor, CompressedLeaf
-from . import topk as topk_lib
 
 
 # ----------------------------------------------------------------------
@@ -121,14 +120,25 @@ def _or_allreduce_psum(x: jnp.ndarray, axis_names: Sequence[str]) -> jnp.ndarray
         axis=-1, dtype=jnp.uint32)
 
 
+def _use_ring(payload_bytes: int, axis_size: int, ring_threshold: int) -> bool:
+    """Ring vs recursive doubling: ring for payloads of ``ring_threshold``
+    bytes or more (bandwidth-bound regime), and always for axis sizes
+    that are not a power of two (doubling requires 2^k participants)."""
+    return payload_bytes >= ring_threshold or bool(axis_size & (axis_size - 1))
+
+
 def or_allreduce(x: jnp.ndarray, axis_names: Sequence[str],
                  ring_threshold: int = 65536,
                  axis_indices: Optional[dict] = None) -> jnp.ndarray:
     """Hierarchical OR-AllReduce over several (manual) mesh axes.
 
     Axes are reduced innermost-first (e.g. ``("pod", "data")`` rings over
-    ``data`` within each pod, then combines across pods). Small payloads
-    use recursive doubling to dodge ring latency.
+    ``data`` within each pod, then combines across pods).
+
+    ``ring_threshold``: payload size in **bytes** at or above which the
+    bandwidth-optimal ring is used; smaller payloads take recursive
+    doubling to dodge ring latency. Axes whose size is not a power of two
+    always take the ring (doubling requires power-of-2 participants).
 
     ``axis_indices``: {axis: this shard's index} — required when calling
     from a nested shard_map (see or_allreduce_ring).
@@ -137,8 +147,9 @@ def or_allreduce(x: jnp.ndarray, axis_names: Sequence[str],
         axis_names = (axis_names,)
     if not compat.SUPPORTS_PARTIAL_AUTO_PPERMUTE:
         return _or_allreduce_psum(x, axis_names)
+    payload_bytes = x.size * x.dtype.itemsize
     for ax in reversed(tuple(axis_names)):
-        if x.shape[0] >= ring_threshold:
+        if _use_ring(payload_bytes, compat.axis_size(ax), ring_threshold):
             idx = axis_indices.get(ax) if axis_indices else None
             x = or_allreduce_ring(x, ax, idx=idx)
         else:
@@ -169,12 +180,16 @@ def dense_all_reduce(grads: Any, axis_names: Sequence[str],
 
 
 # ----------------------------------------------------------------------
-# The paper's pipeline over a gradient pytree
+# Error-feedback state + the compatibility wrapper
 # ----------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
 class AggregationState:
-    """Per-leaf error-feedback residuals (empty pytree when disabled)."""
+    """Per-leaf error-feedback residuals (empty pytree when disabled).
+
+    Residuals keep the parameter pytree layout; the bucketed aggregators
+    expose per-bucket views of them via ``BucketPlan.residual_slices``.
+    """
     residual: Any
 
 
@@ -187,157 +202,26 @@ def init_aggregation_state(params: Any, cfg: CompressionConfig) -> AggregationSt
     return AggregationState(residual=res)
 
 
-def _compress_leaf(g_local: jnp.ndarray, res: jnp.ndarray,
-                   comp: HomomorphicCompressor):
-    """Phase I on one leaf shard: sparsify -> encode."""
-    cfg = comp.cfg
-    flat = g_local.reshape(-1).astype(jnp.float32)
-    new_res = res
-    if cfg.topk_ratio is not None:
-        k = max(1, int(flat.shape[0] * cfg.topk_ratio))
-        if cfg.error_feedback:
-            flat, new_res_flat = topk_lib.apply_error_feedback(
-                flat, res.reshape(-1), k, exact=cfg.topk_exact)
-            new_res = new_res_flat.reshape(res.shape)
-        elif cfg.topk_exact:
-            flat = topk_lib.sparsify_topk(flat, k)
-        else:
-            flat = topk_lib.sparsify_threshold(flat, k)
-    c = comp.compress(flat)
-    return c.sketch, c.index_words, new_res
-
-
-def _recover_leaf(sk: jnp.ndarray, words: jnp.ndarray, shape, dtype,
-                  comp: HomomorphicCompressor, n_workers: int):
-    """Phase II on one leaf shard: peel -> mean."""
-    n = 1
-    for d in shape:
-        n *= d
-    rec = comp.recover(CompressedLeaf(sketch=sk, index_words=words), n)
-    return (rec / n_workers).astype(dtype).reshape(shape)
-
-
 def compressed_all_reduce(grads: Any, agg_state: AggregationState,
                           param_specs: Any, mesh,
                           cfg: CompressionConfig,
                           dp_axes: Sequence[str] = ("data",),
                           tp_axes: Sequence[str] = ("model",),
-                          mean: bool = True):
+                          mean: bool = True,
+                          reduce_scatter: bool = False):
     """Aggregate a gradient pytree with the paper's compressed pipeline.
 
-    Must be called *inside* a ``shard_map`` where ``dp_axes`` are already
-    manual. Opens a nested ``shard_map`` making ``tp_axes`` manual too, so
-    compression happens on local shards with no resharding.
-
-    Args:
-      grads:       pytree of (possibly TP-sharded) gradients.
-      agg_state:   error-feedback residuals (same treedef).
-      param_specs: pytree of ``PartitionSpec`` describing TP placement.
-      mesh:        the device mesh (same one the outer shard_map uses).
-      cfg:         compression config.
+    Thin wrapper over the bucketed
+    :class:`~repro.core.aggregators.CompressedAggregator` (or the
+    reduce-scatter variant), kept for API compatibility with the
+    pre-bucketing per-leaf path. Must be called *inside* a ``shard_map``
+    where ``dp_axes`` are already manual.
 
     Returns: (aggregated grads pytree, new AggregationState)
     """
-    comp = HomomorphicCompressor(cfg)
-    if isinstance(dp_axes, str):
-        dp_axes = (dp_axes,)
-    n_workers = 1
-    for ax in dp_axes:
-        n_workers *= mesh.shape[ax]
-    if not mean:
-        n_workers = 1
-
-    # Strip any DP-axis references from the specs (those axes are manual
-    # in the outer shard_map; the nested one only partitions TP axes).
-    dp_set = set(dp_axes)
-
-    def tp_only(spec):
-        if spec is None:
-            return P()
-        parts = []
-        for s in spec:
-            if s is None:
-                parts.append(None)
-            elif isinstance(s, (tuple, list)):
-                kept = tuple(a for a in s if a not in dp_set)
-                parts.append(kept if kept else None)
-            else:
-                parts.append(None if s in dp_set else s)
-        return P(*parts)
-
-    specs = jax.tree.map(tp_only, param_specs,
-                         is_leaf=lambda s: isinstance(s, P) or s is None)
-
-    leaves, treedef = jax.tree.flatten(grads)
-    spec_leaves = treedef.flatten_up_to(specs)
-    res_leaves = treedef.flatten_up_to(agg_state.residual)
-
-    # Shard indices on the (outer-manual) DP axes, computed *here* where
-    # those axes are directly bound; threaded into OR-rings because
-    # axis_index inside nested regions would re-bind the axis (Shardy).
-    dp_idx = dict(zip(dp_axes, (jax.lax.axis_index(ax) for ax in dp_axes)))
-
-    ef_on = cfg.topk_ratio is not None and cfg.error_feedback
-    out_leaves = []
-    new_res_leaves = []
-    for g, spec, res in zip(leaves, spec_leaves, res_leaves):
-        res_spec = spec if ef_on else P()
-        # manual axes = the TP axis plus any axis this leaf's spec
-        # references (e.g. kimi's experts are sharded over the EP axis
-        # "data" — the nested shard_map must bind it to slice locally)
-        tp_set = {a for a in tp_axes if a}
-        for part in spec:
-            if part is None:
-                continue
-            tp_set |= set(part) if isinstance(part, (tuple, list)) else {part}
-        # sketch/index shapes per shard (for the nested out_specs)
-        if tp_set and compat.SUPPORTS_NESTED_SHARD_MAP:
-            # Two nested regions with the DP collectives *between* them
-            # at the outer level: running psum/ppermute over the outer
-            # manual axis inside a doubly-nested manual region check-
-            # crashes XLA's SPMD partitioner (AllReduceAlongShardingDims)
-            # on 3-axis meshes. Phase boundaries cost nothing — sketch
-            # and words stay shard-local either way.
-            enc = compat.shard_map(
-                functools.partial(_compress_leaf, comp=comp),
-                mesh=mesh,
-                in_specs=(spec, res_spec),
-                out_specs=(P(), P(), res_spec),
-                axis_names=tp_set, check_vma=False)
-            sk, words, new_res = enc(g, res)
-            sk = jax.lax.psum(sk, tuple(dp_axes))
-            words = or_allreduce(words, dp_axes, axis_indices=dp_idx)
-            # local (per-shard) leaf shape for the recovery region
-            def _div(i):
-                part = spec[i] if i < len(spec) else None
-                if part is None:
-                    return 1
-                names = part if isinstance(part, (tuple, list)) else (part,)
-                d = 1
-                for nm in names:
-                    d *= mesh.shape[nm]
-                return d
-            local_shape = tuple(sz // _div(i) for i, sz in enumerate(g.shape))
-            dec = compat.shard_map(
-                functools.partial(_recover_leaf, comp=comp,
-                                  n_workers=n_workers,
-                                  shape=local_shape, dtype=g.dtype),
-                mesh=mesh,
-                in_specs=(P(), P()),
-                out_specs=spec,
-                axis_names=tp_set, check_vma=False)
-            rec = dec(sk, words)
-        else:
-            # Pure DP, or a TP-sharded leaf on a JAX without nested
-            # partial-manual shard_map support: compress the auto-sharded
-            # global view. Same compress -> psum/OR -> recover math (the
-            # nesting only avoids GSPMD resharding around the codec).
-            sk, words, new_res = _compress_leaf(g, res, comp)
-            sk = jax.lax.psum(sk, tuple(dp_axes))
-            words = or_allreduce(words, dp_axes, axis_indices=dp_idx)
-            rec = _recover_leaf(sk, words, g.shape, g.dtype, comp, n_workers)
-        out_leaves.append(rec)
-        new_res_leaves.append(new_res)
-
-    return (jax.tree.unflatten(treedef, out_leaves),
-            AggregationState(residual=jax.tree.unflatten(treedef, new_res_leaves)))
+    # Imported here: aggregators imports this module's primitives.
+    from .aggregators import make_aggregator
+    name = "compressed_rs" if reduce_scatter else "compressed"
+    agg = make_aggregator(name, cfg, mesh, dp_axes=dp_axes,
+                          tp_axes=tp_axes, mean=mean)
+    return agg(grads, agg_state, param_specs)

@@ -9,8 +9,11 @@ format ``CompressedLeaf(sketch, index_words)`` and back:
 Both directions are pure jittable functions of statically-planned shape.
 Aggregation happens *between* the two calls and is someone else's job —
 ``psum`` for the sketch, OR-AllReduce for the index words (see
-:mod:`repro.core.collectives`) — which is exactly the homomorphic contract
-of the paper: the aggregation API never decompresses.
+:mod:`repro.core.aggregators`, which feeds the compressor whole bucketed
+gradient streams, and :mod:`repro.core.collectives` for the primitives) —
+which is exactly the homomorphic contract of the paper: the aggregation
+API never decompresses. ``block_offset`` lets a caller encode/recover a
+sub-range of a larger bucket stream under the stream's global hash plan.
 
 All sketch compute (encode, peel, estimate) goes through the backend
 dispatch in :mod:`repro.kernels.ops`, so ``cfg.use_pallas`` selects the
@@ -76,10 +79,15 @@ class HomomorphicCompressor:
     # Phase I — compression
     # ------------------------------------------------------------------
 
-    def compress(self, x: jnp.ndarray) -> CompressedLeaf:
+    def compress(self, x: jnp.ndarray, block_offset=0) -> CompressedLeaf:
+        """``block_offset`` (static or traced int32) shifts the hash/
+        rotation block ids — used by the bucketed aggregators so a bucket
+        encoded on its own is bit-identical to its slice of the fused
+        whole-stream encode (the block at stream position ``b`` always
+        hashes as block ``b``)."""
         plan = make_plan(x.size, self.cfg)
         xb = to_blocks(x.astype(jnp.float32), plan)
-        ids = jnp.arange(plan.nb, dtype=jnp.int32)
+        ids = jnp.arange(plan.nb, dtype=jnp.int32) + jnp.int32(block_offset)
 
         def enc(ids_c, xb_c):
             return ops.sketch_encode(xb_c, ids_c, self.cfg)
@@ -96,15 +104,20 @@ class HomomorphicCompressor:
     # ------------------------------------------------------------------
 
     def recover(self, comp: CompressedLeaf, n: int, shape=None,
-                with_stats: bool = False
+                with_stats: bool = False, block_offset=0
                 ) -> jnp.ndarray | Tuple[jnp.ndarray, RecoveryStats]:
+        """``block_offset``: hash-plan id of the first block in
+        ``comp`` — pass the same offset the sketch was encoded with when
+        recovering a sub-range of a fused bucket stream (bitmap index
+        only: a Bloom filter hashes global coordinates and cannot be
+        sliced per-range)."""
         plan = make_plan(n, self.cfg)
         bshape = (plan.nb, plan.group, plan.lanes)
         if self.cfg.index == "bitmap":
             bits = index_lib.unpack_bits(comp.index_words, bshape)
         else:
             bits = index_lib.bloom_query(bshape, self.cfg, comp.index_words)
-        ids = jnp.arange(plan.nb, dtype=jnp.int32)
+        ids = jnp.arange(plan.nb, dtype=jnp.int32) + jnp.int32(block_offset)
 
         def rec(ids_c, sk_c, bits_c):
             return ops.sketch_peel(sk_c, bits_c, ids_c, self.cfg)
@@ -125,9 +138,10 @@ class HomomorphicCompressor:
     # Lossy sketch-only decode (Sketched-SGD style) for ablations
     # ------------------------------------------------------------------
 
-    def estimate(self, comp: CompressedLeaf, n: int, shape=None) -> jnp.ndarray:
+    def estimate(self, comp: CompressedLeaf, n: int, shape=None,
+                 block_offset=0) -> jnp.ndarray:
         plan = make_plan(n, self.cfg)
-        ids = jnp.arange(plan.nb, dtype=jnp.int32)
+        ids = jnp.arange(plan.nb, dtype=jnp.int32) + jnp.int32(block_offset)
 
         def est(ids_c, sk_c):
             return ops.sketch_estimate(sk_c, ids_c, self.cfg)

@@ -14,11 +14,19 @@ The knobs mirror the paper's design space:
                    blocks, which is structural here.
 - ``index``      — "bitmap" (exact, 1 bit/coordinate, §3.2) or "bloom"
                    (probabilistic, §3.3, for extreme sparsity).
+- ``bucket_bytes`` / ``overlap`` — the aggregation substrate (PR 2): the
+                   whole gradient pytree is packed into fixed-byte flat
+                   buckets before encoding (see
+                   :mod:`repro.core.bucketing`), so the codec and the
+                   collectives launch O(n_buckets) times instead of
+                   O(n_leaves); ``overlap`` stages bucket *i*'s
+                   collectives against bucket *i+1*'s encode.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Optional
 
 GAMMA = 1.23  # 3-ary peeling threshold from the paper (§3.2)
@@ -45,6 +53,14 @@ class CompressionConfig:
     use_pallas: str = "auto"     # "never" | "always" | "auto"
     encode_block_tile: int = 8   # sketch blocks per encode-kernel grid
                                  # cell (VMEM-bounded; see sketch_encode)
+    peel_block_tile: int = 4     # sketch blocks per peel-kernel grid cell
+                                 # (smaller than encode: the peel loop
+                                 # keeps y/b/d/x tiles live across rounds)
+    bucket_bytes: int = 4 << 20  # target f32 bytes per aggregation bucket
+                                 # (rounded to block/word alignment; see
+                                 # bucketing.BucketPlan)
+    overlap: bool = False        # pipeline bucket i's collectives against
+                                 # bucket i+1's encode (lax.scan staging)
     sketch_dtype: str = "float32"
 
     def __post_init__(self):
@@ -59,6 +75,16 @@ class CompressionConfig:
         if self.encode_block_tile < 1:
             raise ValueError(
                 f"encode_block_tile must be >= 1, got {self.encode_block_tile}")
+        if self.peel_block_tile < 1:
+            raise ValueError(
+                f"peel_block_tile must be >= 1, got {self.peel_block_tile}")
+        if self.bucket_bytes < 4:
+            raise ValueError(
+                f"bucket_bytes must be >= 4, got {self.bucket_bytes}")
+        if self.overlap and self.index != "bitmap":
+            # Per-bucket OR-AllReduce slices the packed bitmap by bucket;
+            # a Bloom filter is one global structure and cannot be sliced.
+            raise ValueError("overlap=True requires index='bitmap'")
 
     # ---- derived static geometry -------------------------------------
 
@@ -89,8 +115,42 @@ class CompressionConfig:
     def padded_size(self, n: int) -> int:
         return self.num_blocks(n) * self.block_elems
 
+    # ---- bucket geometry (PR 2 aggregation substrate) ----------------
+
+    @property
+    def bucket_quantum(self) -> int:
+        """Alignment unit for bucket sizes: whole sketch blocks *and*
+        whole packed-bitmap uint32 words, so per-bucket sketch / index
+        slices of the fused stream are exact views."""
+        return math.lcm(self.block_elems, 32)
+
+    def bucket_elems_for(self, total_elems: int) -> int:
+        """f32 elements per bucket for a stream of ``total_elems``.
+
+        ``bucket_bytes`` rounded up to the alignment quantum, but never
+        larger than the (quantum-rounded) stream itself — a pytree
+        smaller than one configured bucket gets a single right-sized
+        bucket instead of megabytes of zero padding.
+        """
+        if total_elems < 1:
+            raise ValueError(f"total_elems must be >= 1, got {total_elems}")
+        q = self.bucket_quantum
+        want = max(1, self.bucket_bytes // 4)
+        elems = -(-want // q) * q
+        cap = -(-total_elems // q) * q
+        return min(elems, cap)
+
+    def num_buckets(self, total_elems: int) -> int:
+        return -(-total_elems // self.bucket_elems_for(total_elems))
+
     def wire_bytes(self, n: int, grad_bytes_per_elem: int = 2) -> dict:
-        """Bytes on the wire for ``n`` elements vs. the dense baseline."""
+        """Bytes on the wire for ``n`` elements vs. the dense baseline.
+
+        Includes the per-bucket totals of the bucketed aggregation path:
+        ``n`` is taken as the whole packed stream, split into
+        ``n_buckets`` buckets of ``bucket_elems`` each (last one padded),
+        and each bucket ships ``bucket_sketch_bytes + bucket_index_bytes``.
+        """
         nb = self.num_blocks(n)
         sketch = nb * self.sketch_elems * 4  # fp32 sketch
         if self.index == "bitmap":
@@ -98,10 +158,23 @@ class CompressionConfig:
         else:
             idx = int(n * self.bloom_bits_ratio / 32 + 1) * 4
         dense = n * grad_bytes_per_elem
+        be = self.bucket_elems_for(n)
+        n_buckets = self.num_buckets(n)
+        b_sketch = (be // self.block_elems) * self.sketch_elems * 4
+        if self.index == "bitmap":
+            b_idx = (be // 32) * 4
+        else:
+            b_idx = int(be * self.bloom_bits_ratio / 32 + 1) * 4
         return {
             "sketch_bytes": sketch,
             "index_bytes": idx,
             "total_bytes": sketch + idx,
             "dense_bytes": dense,
             "wire_fraction": (sketch + idx) / max(dense, 1),
+            "n_buckets": n_buckets,
+            "bucket_elems": be,
+            "bucket_sketch_bytes": b_sketch,
+            "bucket_index_bytes": b_idx,
+            "bucket_total_bytes": b_sketch + b_idx,
+            "bucketed_total_bytes": n_buckets * (b_sketch + b_idx),
         }

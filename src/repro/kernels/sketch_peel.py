@@ -1,10 +1,13 @@
 """Pallas TPU kernel: parallel-peeling recovery (paper §3.2).
 
-Grid = one cell per sketch block; the whole peeling loop for a block runs
-*inside* the kernel, so the sketch tile, degree tile and index tile stay
-VMEM-resident across rounds — the TPU translation of the paper's §3.4
-cache-locality argument (their GPU version re-reads global memory per
-round; here HBM sees exactly one read of [Y, B] and one write of X).
+Grid = one cell per *tile* of ``peel_block_tile`` sketch blocks (the same
+multi-block grid-cell tiling as the encode kernel); the whole peeling
+loop for a tile runs *inside* the kernel, so the sketch tile, degree tile
+and index tile stay VMEM-resident across rounds — the TPU translation of
+the paper's §3.4 cache-locality argument (their GPU version re-reads
+global memory per round; here HBM sees exactly one read of [Y, B] and one
+write of X). Batching blocks per cell amortises the per-cell hash-plan
+setup and keeps the VPU busy on short rows.
 
 The round count is a static unroll bound: with block-local sketches the
 paper's peeling finishes in O(1) rounds, so a fixed `cfg.rounds` loses
@@ -13,6 +16,12 @@ unit. Rounds after the fixpoint are cheap no-ops (all-false peel masks).
 
 Per-round math is identical to :mod:`repro.core.peeling` (the oracle):
 degree gather -> singleton test -> exact value extraction -> subtract.
+
+VMEM budget per cell (defaults B=4, G=60, c=512, rows=6): y 4*6*512*4 =
+48 KiB, b/d/x tiles 3 x 4*60*512*(1|4) ≈ 1.1 MiB, the (B, G, 3, c)
+rotation gathers 2.8 MiB — comfortably under ~16 MiB/core with double
+buffering (the peel loop keeps more state live than encode, hence the
+smaller default tile).
 """
 
 from __future__ import annotations
@@ -31,43 +40,44 @@ from .sketch_encode import _rotations_for_block
 
 def _peel_kernel(ids_ref, rows_ref, signs_ref, y_ref, b_ref, xo_ref, ro_ref,
                  *, cfg: CompressionConfig):
+    B = y_ref.shape[0]                    # blocks per grid cell (tile)
     G, R, c = cfg.group, cfg.rows, cfg.lanes
-    blk = ids_ref[0, 0]
-    rot = _rotations_for_block(blk, G, c, cfg.seed)                   # (G,3)
+    ids = ids_ref[...][:, 0]                                          # (B,)
+    rot = _rotations_for_block(ids, G, c, cfg.seed)                   # (B,G,3)
     rows_flat = rows_ref[:, 0]                                        # (G*3,)
-    sg = signs_ref[...][:, :, None]                                   # (G,3,1)
+    sg = signs_ref[...][None, :, :, None]                             # (1,G,3,1)
 
     lane = jnp.arange(c, dtype=jnp.int32)
-    fwd_idx = (lane[None, None, :] - rot[:, :, None]) % c             # roll to sketch
-    bwd_idx = (lane[None, None, :] + rot[:, :, None]) % c             # roll back
+    fwd_idx = (lane[None, None, None, :] - rot[..., None]) % c        # to sketch
+    bwd_idx = (lane[None, None, None, :] + rot[..., None]) % c        # roll back
 
-    def roll_fwd(v):   # (G,c) -> (G,3,c)
-        vb = jnp.broadcast_to(v[:, None, :], (G, 3, c))
+    def roll_fwd(v):   # (B,G,c) -> (B,G,3,c)
+        vb = jnp.broadcast_to(v[:, :, None, :], (B, G, 3, c))
         return jnp.take_along_axis(vb, fwd_idx, axis=-1)
 
-    def roll_bwd(v):   # (G,3,c) -> (G,3,c)
+    def roll_bwd(v):   # (B,G,3,c) -> (B,G,3,c)
         return jnp.take_along_axis(v, bwd_idx, axis=-1)
 
-    def scatter(contrib):  # (G,3,c) -> (R,c)
-        flat = contrib.reshape(G * 3, c)
-        return jnp.zeros((R, c), contrib.dtype).at[rows_flat].add(flat)
+    def scatter(contrib):  # (B,G,3,c) -> (B,R,c)
+        flat = contrib.reshape(B, G * 3, c)
+        return jnp.zeros((B, R, c), contrib.dtype).at[:, rows_flat].add(flat)
 
-    def gather(t):     # (R,c) -> (G,3,c)
-        return jnp.take(t, rows_flat, axis=0).reshape(G, 3, c)
+    def gather(t):     # (B,R,c) -> (B,G,3,c)
+        return jnp.take(t, rows_flat, axis=1).reshape(B, G, 3, c)
 
-    y = y_ref[0].astype(jnp.float32)                                  # (R,c)
-    b = b_ref[0] != 0                                                 # (G,c)
-    d = scatter(roll_fwd(b.astype(jnp.int32)))                        # (R,c)
-    x = jnp.zeros((G, c), jnp.float32)
+    y = y_ref[...].astype(jnp.float32)                                # (B,R,c)
+    b = b_ref[...] != 0                                               # (B,G,c)
+    d = scatter(roll_fwd(b.astype(jnp.int32)))                        # (B,R,c)
+    x = jnp.zeros((B, G, c), jnp.float32)
 
     def round_body(_, state):
         y, b, d, x = state
         d_at = roll_bwd(gather(d))
         v_at = roll_bwd(gather(y)) * sg
-        peelable = (d_at == 1) & b[:, None, :]
-        any_peel = jnp.any(peelable, axis=1)
-        jstar = jnp.argmax(peelable, axis=1)
-        val = jnp.take_along_axis(v_at, jstar[:, None, :], axis=1)[:, 0, :]
+        peelable = (d_at == 1) & b[:, :, None, :]
+        any_peel = jnp.any(peelable, axis=2)
+        jstar = jnp.argmax(peelable, axis=2)
+        val = jnp.take_along_axis(v_at, jstar[:, :, None, :], axis=2)[:, :, 0, :]
         val = jnp.where(any_peel, val, 0.0)
         y = y - scatter(roll_fwd(val) * sg)
         d = d - scatter(roll_fwd(any_peel.astype(jnp.int32)))
@@ -79,12 +89,12 @@ def _peel_kernel(ids_ref, rows_ref, signs_ref, y_ref, b_ref, xo_ref, ro_ref,
 
     # Residue -> unbiased median-of-3 estimate (paper footnote 5).
     est = roll_bwd(gather(y)) * sg
-    v0, v1, v2 = est[:, 0], est[:, 1], est[:, 2]
+    v0, v1, v2 = est[:, :, 0], est[:, :, 1], est[:, :, 2]
     med = (v0 + v1 + v2
            - jnp.maximum(jnp.maximum(v0, v1), v2)
            - jnp.minimum(jnp.minimum(v0, v1), v2))
-    xo_ref[0] = x + jnp.where(b, med, 0.0)
-    ro_ref[0] = b.astype(jnp.int8)
+    xo_ref[...] = x + jnp.where(b, med, 0.0)
+    ro_ref[...] = b.astype(jnp.int8)
 
 
 def sketch_peel_pallas(sketch: jnp.ndarray, bits: jnp.ndarray,
@@ -93,29 +103,41 @@ def sketch_peel_pallas(sketch: jnp.ndarray, bits: jnp.ndarray,
     """(nb,rows,c) sketch + (nb,G,c) bits -> (values (nb,G,c) f32,
     residual (nb,G,c) int8)."""
     nb = sketch.shape[0]
+    tile = max(1, min(cfg.peel_block_tile, nb))
+    padded = -(-nb // tile) * tile
+    if padded != nb:
+        # Zero sketch blocks with empty indexes peel to exact zeros;
+        # their (arbitrary) ids only seed rotations of zeros. Sliced
+        # back off below.
+        sketch = jnp.pad(sketch, ((0, padded - nb), (0, 0), (0, 0)))
+        bits = jnp.pad(bits, ((0, padded - nb), (0, 0), (0, 0)))
+        block_ids = jnp.pad(block_ids, (0, padded - nb))
     g3 = cfg.group * 3
     rows_tbl = jnp.asarray(
         hashing.batch_rows(cfg.group, cfg.rows, cfg.seed).reshape(g3, 1))
     signs = jnp.asarray(hashing.batch_signs(cfg.group, cfg.seed))
     kern = functools.partial(_peel_kernel, cfg=cfg)
-    ids2d = block_ids.reshape(nb, 1).astype(jnp.int32)
-    return pl.pallas_call(
+    ids2d = block_ids.reshape(padded, 1).astype(jnp.int32)
+    out = pl.pallas_call(
         kern,
-        grid=(nb,),
+        grid=(padded // tile,),
         in_specs=[
-            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((tile, 1), lambda i: (i, 0)),
             pl.BlockSpec((g3, 1), lambda i: (0, 0)),          # hash plan
             pl.BlockSpec((cfg.group, 3), lambda i: (0, 0)),   # signs
-            pl.BlockSpec((1, cfg.rows, cfg.lanes), lambda i: (i, 0, 0)),
-            pl.BlockSpec((1, cfg.group, cfg.lanes), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tile, cfg.rows, cfg.lanes), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tile, cfg.group, cfg.lanes), lambda i: (i, 0, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((1, cfg.group, cfg.lanes), lambda i: (i, 0, 0)),
-            pl.BlockSpec((1, cfg.group, cfg.lanes), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tile, cfg.group, cfg.lanes), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tile, cfg.group, cfg.lanes), lambda i: (i, 0, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((nb, cfg.group, cfg.lanes), jnp.float32),
-            jax.ShapeDtypeStruct((nb, cfg.group, cfg.lanes), jnp.int8),
+            jax.ShapeDtypeStruct((padded, cfg.group, cfg.lanes), jnp.float32),
+            jax.ShapeDtypeStruct((padded, cfg.group, cfg.lanes), jnp.int8),
         ],
         interpret=interpret,
     )(ids2d, rows_tbl, signs, sketch, bits.astype(jnp.int8))
+    if padded != nb:
+        out = [o[:nb] for o in out]
+    return tuple(out)

@@ -24,7 +24,8 @@ def main():
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--global-batch", type=int, default=8)
     ap.add_argument("--seq-len", type=int, default=128)
-    ap.add_argument("--aggregator", choices=["dense", "compressed"],
+    ap.add_argument("--aggregator",
+                    choices=["dense", "compressed", "compressed_rs"],
                     default=None)
     ap.add_argument("--compression-ratio", type=float, default=None)
     ap.add_argument("--lr", type=float, default=None)

@@ -14,7 +14,11 @@ from .optimizer import OptimizerConfig
 @dataclasses.dataclass(frozen=True)
 class TrainConfig:
     aggregator: str = "compressed"       # "dense" (NCCL-baseline analogue)
-                                         # | "compressed" (the paper)
+                                         # | "compressed" (the paper,
+                                         #   bucketed — core/aggregators)
+                                         # | "compressed_rs" (peel only
+                                         #   this DP-rank's bucket range;
+                                         #   pairs with zero1)
     compression: CompressionConfig = dataclasses.field(
         default_factory=CompressionConfig)
     optimizer: OptimizerConfig = dataclasses.field(
@@ -26,5 +30,5 @@ class TrainConfig:
     seed: int = 0
 
     def __post_init__(self):
-        if self.aggregator not in ("dense", "compressed"):
+        if self.aggregator not in ("dense", "compressed", "compressed_rs"):
             raise ValueError(self.aggregator)

@@ -3,11 +3,21 @@
 The step is organised exactly like the paper's Algorithm 1 deployment:
 
   1. each (pod, data) worker computes *local* gradients (auto TP inside);
-  2. gradients are aggregated across the DP axes either densely
-     (``psum`` — the NCCL-baseline arm) or with the homomorphic
-     compressed pipeline (sketch ``psum`` + index OR-AllReduce + peel);
+  2. gradients are aggregated across the DP axes by a pluggable
+     :class:`~repro.core.aggregators.Aggregator` strategy selected by
+     ``tc.aggregator`` — ``"dense"`` (plain ``psum``, the NCCL-baseline
+     arm), ``"compressed"`` (the paper's pipeline over fixed-size
+     gradient buckets: ONE sketch encode + ONE stacked sketch-``psum`` +
+     ONE index OR-AllReduce for the whole pytree, optionally pipelined
+     per bucket via ``cfg.overlap``), or ``"compressed_rs"`` (same wire
+     format, but each DP rank peels only its own bucket range — the
+     natural partner of the ZeRO-1 sharded optimizer);
   3. the optimizer applies the aggregated gradient — replicated, or
      ZeRO-1-sharded across the DP axes (slice-update-allgather).
+
+Error-feedback residuals keep the parameter pytree layout (sparsification
+is per leaf — see ``core/aggregators``); the bucketed strategies expose
+per-bucket residual views through ``BucketPlan.residual_slices``.
 
 Everything lives in one jittable function so the multi-pod dry-run can
 ``lower().compile()`` it with placeholder inputs.
@@ -24,6 +34,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P, NamedSharding
 
 from repro import compat
+from repro.core import aggregators as agg_lib
 from repro.core import collectives as coll
 from repro.models.registry import ModelAPI
 from repro.parallel import sharding as shd
@@ -62,7 +73,7 @@ def init_train_state(api: ModelAPI, tc: TrainConfig, mesh, key) -> TrainState:
     opt = opt_lib.init_opt_state(params, tc.optimizer)
     dp = _dp_total(mesh, effective_dp_axes(tc.sharding, mesh))
     ccfg = tc.compression
-    if tc.aggregator == "compressed" and ccfg.topk_ratio is not None \
+    if tc.aggregator != "dense" and ccfg.topk_ratio is not None \
             and ccfg.error_feedback:
         residual = jax.tree.map(
             lambda p: jnp.zeros((dp,) + p.shape, jnp.float32), params)
@@ -227,18 +238,22 @@ def build_train_step(api: ModelAPI, tc: TrainConfig, mesh):
         metrics = jax.tree.map(lambda m: m[-1], metrics)
         return loss_sum * inv, metrics, grads
 
+    # Strategy selected once per step build; called inside the manual-DP
+    # region. Compression packs shard-locally even in pure-DP profiles:
+    # vocab-sharded embedding grads would otherwise be all-gathered to
+    # full size before encoding (16+ GiB/step on a 3B model).
+    aggregator = agg_lib.make_aggregator(
+        tc.aggregator if dp > 1 else "dense", tc.compression, mesh,
+        dp_axes=dp_axes, tp_axes=((prof.tp_axis or "model"),),
+        outer_manual=compat.train_step_manual_axes(mesh, dp_axes))
+
     def aggregate(grads, residual, pspecs):
-        if tc.aggregator == "dense" or dp == 1:
+        if isinstance(aggregator, agg_lib.DenseAggregator):
             return coll.dense_all_reduce(grads, dp_axes), residual
         res_local = jax.tree.map(
             lambda r: r[0] if r.ndim > 1 else r, residual)
-        # compress shard-locally even in pure-DP profiles: vocab-sharded
-        # embedding grads would otherwise be all-gathered to full size
-        # before encoding (16+ GiB/step on a 3B model)
-        agg, new_state = coll.compressed_all_reduce(
-            grads, coll.AggregationState(residual=res_local), pspecs,
-            mesh, tc.compression, dp_axes=dp_axes,
-            tp_axes=((prof.tp_axis or "model"),))
+        agg, new_state = aggregator(
+            grads, coll.AggregationState(residual=res_local), pspecs)
         new_res = jax.tree.map(
             lambda old, r: r[None] if old.ndim > 1 else old,
             residual, new_state.residual)

@@ -3,7 +3,15 @@
 Validates, on a (2, 2, 2) pod/data/model mesh:
   1. or_allreduce (ring + doubling) == numpy bitwise-or reduce
   2. compressed_all_reduce of a TP-sharded gradient pytree == mean of
-     per-worker gradients (within fp tolerance), via nested shard_map.
+     per-worker gradients (within fp tolerance), via the bucketed
+     aggregator (nested shard_map packing where supported).
+  3. bucketed compressed aggregation with topk_ratio + error_feedback
+     matches the pre-bucketing per-leaf path BIT-FOR-BIT over 3 steps
+     (residual roundtrip included; reference computed per leaf with the
+     same sparsifier, dyadic values so every psum order is exact), and
+     the overlap-pipelined schedule matches the fused one bitwise.
+  4. the reduce-scatter aggregator (per-rank bucket peeling) matches the
+     dense mean like the plain one.
 """
 import os
 os.environ.setdefault(
@@ -123,4 +131,120 @@ got_d = jax.jit(shard_map(
 for k in ("w1", "w2", "scale"):
     assert np.allclose(np.asarray(got_d[k]), mean_ref[k], atol=1e-6), k
 print("OK dense_all_reduce baseline")
+
+# ---- 3. bucketed top-k + EF == per-leaf path, bit-for-bit, 3 steps ---
+# Pure-DP pytree (replicated specs) so the per-leaf reference below has
+# exactly the shard-local view the aggregator sparsifies. Dyadic values
+# (sign * 2^e) make every summation order exact, so bitwise equality
+# checks the math. ratio=1.0 keeps peel capacity far above the top-k
+# density: recovery is exact and the only "lossy" step is the
+# sparsifier — which must be the seed's per-leaf one, bit-for-bit.
+import dataclasses
+from repro.core import topk as topk_lib
+from repro.core.aggregators import make_aggregator
+from repro.core.collectives import AggregationState
+
+cfg_ef = CompressionConfig(ratio=1.0, lanes=128, rows=6, rounds=10,
+                           chunk_blocks=8, topk_ratio=0.1, topk_exact=True,
+                           error_feedback=True, bucket_bytes=2 * 768 * 4)
+assert cfg_ef.block_elems == 768
+ef_shapes = {"wa": (96, 40), "wb": (3000,), "wc": (11,)}
+ef_specs = {k: P() for k in ef_shapes}
+
+
+def dyadic_tree(seed):
+    r = np.random.default_rng(seed)
+    out = {}
+    for k, sh in ef_shapes.items():
+        n = int(np.prod(sh))
+        g = np.zeros(n, np.float32)
+        nz = max(1, int(n * 0.3))
+        idx = r.choice(n, size=nz, replace=False)
+        g[idx] = (r.choice([-1.0, 1.0], size=nz)
+                  * np.exp2(r.integers(-2, 3, size=nz))).astype(np.float32)
+        out[k] = g.reshape(sh)
+    return out
+
+
+def run_ef(overlap):
+    cfg = dataclasses.replace(cfg_ef, overlap=overlap)
+    agg = make_aggregator("compressed", cfg, mesh, ("pod", "data"), ())
+
+    def ef_step(gs, rs):
+        g = jax.tree.map(lambda a: a[0], gs)
+        r = jax.tree.map(lambda a: a[0], rs)
+        out, st = agg(g, AggregationState(residual=r), ef_specs)
+        return out, jax.tree.map(lambda a: a[None], st.residual)
+
+    res_in_specs = {k: P(("pod", "data")) for k in ef_shapes}
+    jfn = jax.jit(shard_map(
+        ef_step, mesh=mesh,
+        in_specs=({k: P(("pod", "data")) for k in ef_shapes}, res_in_specs),
+        out_specs=(ef_specs, res_in_specs),
+        axis_names={"pod", "data", "model"}, check_vma=False))
+
+    res = {k: jnp.zeros((n_workers,) + sh, jnp.float32)
+           for k, sh in ef_shapes.items()}
+    outs = []
+    for step in range(3):
+        per_w = [dyadic_tree(100 + 10 * step + w) for w in range(n_workers)]
+        stacked = {k: jnp.asarray(np.stack([pw[k] for pw in per_w]))
+                   for k in ef_shapes}
+        stacked = jax.tree.map(
+            lambda a, s: jax.device_put(a, NamedSharding(mesh, s)),
+            stacked, {k: P(("pod", "data")) for k in ef_shapes})
+        out, res = jfn(stacked, res)
+        outs.append((jax.tree.map(np.asarray, out),
+                     jax.tree.map(np.asarray, res)))
+    return outs
+
+
+got_ef = run_ef(overlap=False)
+
+# per-leaf reference: the seed architecture, per worker, per leaf
+res_ref = {k: np.zeros((n_workers, int(np.prod(sh))), np.float32)
+           for k, sh in ef_shapes.items()}
+for step in range(3):
+    per_w = [dyadic_tree(100 + 10 * step + w) for w in range(n_workers)]
+    out_np, res_np = got_ef[step]
+    for k, sh in ef_shapes.items():
+        n = int(np.prod(sh))
+        kk = max(1, int(n * cfg_ef.topk_ratio))
+        sparses = []
+        for w in range(n_workers):
+            flat = jnp.asarray(per_w[w][k].reshape(-1))
+            sp, nr = topk_lib.apply_error_feedback(
+                flat, jnp.asarray(res_ref[k][w]), kk, exact=True)
+            sparses.append(np.asarray(sp))
+            res_ref[k][w] = np.asarray(nr)
+        want = (np.sum(sparses, axis=0) / n_workers).reshape(sh)
+        assert np.array_equal(out_np[k], want), \
+            f"EF step {step} leaf {k}: bucketed != per-leaf reference"
+        assert np.array_equal(res_np[k].reshape(n_workers, n),
+                              res_ref[k]), \
+            f"EF step {step} leaf {k}: residuals diverged"
+print("OK bucketed topk+EF == per-leaf path bit-for-bit over 3 steps")
+
+got_ef_ov = run_ef(overlap=True)
+for step in range(3):
+    for k in ef_shapes:
+        assert np.array_equal(got_ef[step][0][k], got_ef_ov[step][0][k]), \
+            f"overlap schedule diverged at step {step} leaf {k}"
+        assert np.array_equal(got_ef[step][1][k], got_ef_ov[step][1][k])
+print("OK overlap pipeline == fused bitwise")
+
+# ---- 4. reduce-scatter aggregator on the TP-sharded tree -------------
+got_rs = jax.jit(shard_map(
+    lambda gs: compressed_all_reduce(
+        jax.tree.map(lambda a: a[0, 0], gs),
+        init_aggregation_state(jax.tree.map(lambda a: a[0, 0], gs), cfg),
+        specs, mesh, cfg, dp_axes=("pod", "data"), tp_axes=("model",),
+        reduce_scatter=True)[0],
+    mesh=mesh, in_specs=(in_specs,), out_specs=out_specs,
+    axis_names={"pod", "data"}, check_vma=False))(put)
+for k in ("w1", "w2", "scale"):
+    ok = np.allclose(np.asarray(got_rs[k]), mean_ref[k], atol=1e-5)
+    print(f"{'OK' if ok else 'FAIL'} compressed_rs[{k}] "
+          f"maxerr={np.abs(np.asarray(got_rs[k]) - mean_ref[k]).max():.2e}")
+    assert ok, k
 print("ALL OK")

@@ -86,6 +86,12 @@ print("dense (mom)  :", [round(x, 5) for x in l_dense_m])
 print("comp  (mom)  :", [round(x, 5) for x in l_ll_m])
 l_ll = run(tc_comp_ll)
 print("comp lossless:", [round(x, 4) for x in l_ll])
+# reduce-scatter aggregator: each DP rank peels only its bucket range,
+# feeding the ZeRO-1 slice-update path; must track the lossless run.
+l_rs = run(TrainConfig(aggregator="compressed_rs", optimizer=opt,
+                       compression=tc_comp_ll.compression,
+                       sharding=ShardingProfile(zero1=True), remat="block"))
+print("comp rs+z1   :", [round(x, 4) for x in l_rs])
 l_tk = run(tc_comp_tk)
 print("comp topk+EF :", [round(x, 4) for x in l_tk])
 
@@ -96,6 +102,8 @@ assert all(abs(a - b) < 1e-4 for a, b in zip(l_dense_m, l_ll_m)), \
     f"lossless compressed diverged under momentum: {l_dense_m} vs {l_ll_m}"
 assert all(abs(a - b) < 0.1 for a, b in zip(l_dense, l_ll)), \
     f"lossless compressed (adam) off-track: {l_dense} vs {l_ll}"
+assert all(abs(a - b) < 1e-4 for a, b in zip(l_ll, l_rs)), \
+    f"reduce-scatter aggregator diverged from lossless: {l_ll} vs {l_rs}"
 assert l_tk[-1] < l_tk[0] and l_tk[-1] < 5.0, \
     f"topk+EF compressed failed to converge: {l_tk}"
 print("ALL OK")

@@ -1,0 +1,121 @@
+"""BucketPlan packing edge cases: leaf larger than a bucket, pytree
+smaller than one bucket, padding correctness, dtype-mixed leaves, and the
+per-bucket segment/residual views."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import CompressionConfig, make_bucket_plan
+
+# lanes=128, ratio=0.3 -> group=20, block_elems=2560 (= bucket quantum).
+CFG = CompressionConfig(ratio=0.3, lanes=128, rows=6,
+                        bucket_bytes=2 * 2560 * 4)  # 2 blocks / bucket
+
+
+def _tree():
+    r = np.random.default_rng(0)
+    return {
+        "big": r.standard_normal(3 * 5120 + 17).astype(np.float32),  # > bucket
+        "mat": r.standard_normal((40, 50)).astype(np.float16),       # mixed dt
+        "small": r.standard_normal(7).astype(np.float32),
+        "int-ish": r.standard_normal((3, 4)).astype(np.float32),
+    }
+
+
+def test_pack_unpack_roundtrip_mixed_dtypes():
+    tree = _tree()
+    plan = make_bucket_plan(tree, CFG)
+    assert plan.bucket_elems == 5120
+    assert plan.n_buckets == -(-plan.total // 5120)
+    assert plan.total == sum(v.size for v in tree.values())
+    buckets = plan.pack(jax.tree.map(jnp.asarray, tree))
+    assert buckets.shape == (plan.n_buckets, plan.bucket_elems)
+    assert buckets.dtype == jnp.float32
+    out = plan.unpack(buckets)
+    for k, v in tree.items():
+        got = np.asarray(out[k])
+        assert got.shape == v.shape and got.dtype == v.dtype, k
+        # f16 leaves roundtrip through f32 exactly; f32 leaves bitwise
+        np.testing.assert_array_equal(got, v, err_msg=k)
+
+
+def test_padding_is_zero_and_dropped():
+    tree = {"a": jnp.arange(10, dtype=jnp.float32)}
+    plan = make_bucket_plan(tree, CFG)
+    # pytree smaller than one configured bucket: single right-sized bucket
+    assert plan.n_buckets == 1
+    assert plan.bucket_elems == CFG.bucket_quantum  # capped, not 5120
+    buckets = plan.pack(tree)
+    flat = np.asarray(buckets).reshape(-1)
+    np.testing.assert_array_equal(flat[:10], np.arange(10, dtype=np.float32))
+    assert np.all(flat[10:] == 0.0), "padding must be zero"
+    out = plan.unpack(buckets)
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.arange(10))
+
+
+def test_leaf_larger_than_bucket_spans_segments():
+    tree = _tree()
+    plan = make_bucket_plan(tree, CFG)
+    segs = plan.bucket_segments
+    assert len(segs) == plan.n_buckets
+    # "big" (leaf 0 in sorted-dict flatten order) spans several buckets
+    big_segs = [s for bucket in segs for s in bucket if s.leaf == 0]
+    assert len(big_segs) >= 3
+    # segments tile the stream exactly: lengths sum to total, no overlap
+    assert sum(s.length for bucket in segs for s in bucket) == plan.total
+    for b, bucket in enumerate(segs):
+        pos = None
+        for s in bucket:
+            assert s.bucket == b
+            if pos is not None:
+                assert s.bucket_start == pos, "segments must be contiguous"
+            pos = s.bucket_start + s.length
+            assert pos <= plan.bucket_elems
+
+
+def test_residual_slices_match_segments():
+    tree = _tree()
+    plan = make_bucket_plan(tree, CFG)
+    res = jax.tree.map(lambda v: jnp.asarray(np.arange(v.size, dtype=np.float32)
+                                             .reshape(v.shape)), tree)
+    slices = plan.residual_slices(res)
+    res_leaves = [np.asarray(r).reshape(-1)
+                  for r in plan.treedef.flatten_up_to(res)]
+    for bucket, segs in zip(slices, plan.bucket_segments):
+        for sl, s in zip(bucket, segs):
+            want = res_leaves[s.leaf][s.leaf_start:s.leaf_start + s.length]
+            np.testing.assert_array_equal(np.asarray(sl), want)
+
+
+def test_bucket_alignment_quantum():
+    # bucket sizes are whole sketch blocks AND whole uint32 bitmap words
+    for lanes, ratio in ((128, 0.3), (256, 0.1), (512, 0.25)):
+        cfg = dataclasses.replace(CFG, lanes=lanes, ratio=ratio)
+        q = cfg.bucket_quantum
+        assert q % cfg.block_elems == 0 and q % 32 == 0
+        for total in (1, q - 1, q, q + 1, 10 * q + 3):
+            be = cfg.bucket_elems_for(total)
+            assert be % q == 0 and be >= 1
+            assert cfg.num_buckets(total) * be >= total
+
+
+def test_pack_rejects_wrong_shapes():
+    tree = {"a": jnp.zeros((8,), jnp.float32)}
+    plan = make_bucket_plan(tree, CFG)
+    with pytest.raises(ValueError):
+        plan.pack_flat([jnp.zeros((9,), jnp.float32)])
+    with pytest.raises(ValueError):
+        plan.unpack_flat(jnp.zeros((2, plan.bucket_elems), jnp.float32))
+
+
+def test_wire_bytes_reports_buckets():
+    w = CFG.wire_bytes(3 * 5120 + 100, grad_bytes_per_elem=4)
+    assert w["n_buckets"] == 4 and w["bucket_elems"] == 5120
+    assert w["bucket_total_bytes"] == (w["bucket_sketch_bytes"]
+                                       + w["bucket_index_bytes"])
+    assert w["bucketed_total_bytes"] == 4 * w["bucket_total_bytes"]
+    # bucketed total >= exact-stream total (last-bucket padding only)
+    assert w["bucketed_total_bytes"] >= w["total_bytes"]

@@ -1,0 +1,41 @@
+"""Unit coverage for the OR-AllReduce algorithm-selection policy.
+
+The multi-device semantics (ring == doubling == numpy OR-reduce) live in
+``tests/drivers/collectives_driver.py``; here we pin the *decision*:
+``ring_threshold`` is payload **bytes** (not element count), and axes
+whose size is not a power of two must take the ring instead of raising
+from ``or_allreduce_doubling``.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.collectives import _use_ring, or_allreduce
+
+
+def test_threshold_is_bytes_not_elements():
+    thr = 65536
+    # 16384 uint32 words == 65536 bytes: exactly at the byte threshold
+    assert _use_ring(16384 * 4, 4, thr)
+    # 16384 *elements* would have crossed an element-count threshold,
+    # but it is only 64 KiB-of-4 == under the byte threshold at 16383
+    assert not _use_ring(16383 * 4, 4, thr)
+    assert not _use_ring(65535, 4, thr)
+    assert _use_ring(65536, 4, thr)
+
+
+@pytest.mark.parametrize("n,ring", [(1, False), (2, False), (3, True),
+                                    (4, False), (6, True), (12, True),
+                                    (16, False), (24, True)])
+def test_non_power_of_two_axes_take_ring(n, ring):
+    assert _use_ring(payload_bytes=4, axis_size=n, ring_threshold=1 << 30) \
+        == ring
+
+
+def test_or_allreduce_single_shard_identity():
+    # axis size 1 on a trivial mesh context: both branches short-circuit.
+    # (No shard_map needed: compat.axis_size is only consulted per axis,
+    # and an empty axis list never consults it.)
+    x = jnp.asarray(np.arange(8, dtype=np.uint32))
+    out = or_allreduce(x, ())
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x))

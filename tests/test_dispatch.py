@@ -1,6 +1,8 @@
 """Backend-dispatch parity: the full compress -> aggregate -> recover
 roundtrip must be bit-for-bit identical between ``use_pallas="always"``
-(Pallas kernels, interpret mode on CPU) and ``"never"`` (jnp reference).
+(Pallas kernels, interpret mode on CPU) and ``"never"`` (jnp reference) —
+both at the compressor level and through the bucketed aggregator layer
+(fused and overlap-pipelined, plain and reduce-scatter strategies).
 
 Test values are dyadic (sign * 2^e, small e) so every floating-point sum
 along either backend's reduction order is exact — bitwise equality then
@@ -9,10 +11,16 @@ checks the *math*, not addition-order luck.
 import dataclasses
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 import pytest
+from jax.sharding import PartitionSpec as P
 
+from repro.compat import make_mesh, shard_map
 from repro.core import CompressionConfig, HomomorphicCompressor, CompressedLeaf
+from repro.core import topk as topk_lib
+from repro.core.aggregators import make_aggregator
+from repro.core.collectives import AggregationState, init_aggregation_state
 
 
 def dyadic_sparse(n, frac, seed):
@@ -70,6 +78,105 @@ def test_estimate_runs_on_both_backends():
         comp = HomomorphicCompressor(cfg)
         outs.append(np.asarray(comp.estimate(comp.compress(jnp.asarray(x)), n)))
     assert np.array_equal(outs[0], outs[1])
+
+
+# ----------------------------------------------------------------------
+# Bucketed aggregator roundtrip (PR 2): pack -> sparsify/EF -> encode ->
+# psum/OR -> peel -> unpack, through both strategies and both backends.
+# Runs inside a real (1-device) shard_map so the collectives are genuine.
+# ----------------------------------------------------------------------
+
+# ratio=1.0 keeps peel capacity (~81%) far above the post-top-k density
+# even with dyadic tie overshoot; topk_ratio < nonzero fraction so the
+# sparsifier really cuts and residuals are nonzero. bucket_bytes =
+# 2 blocks -> the 4-leaf tree below spans several buckets, with one leaf
+# larger than a bucket and one mixed-dtype leaf.
+_AGG0 = dataclasses.replace(BASE, ratio=1.0, topk_ratio=0.1,
+                            topk_exact=True, error_feedback=True)
+AGG_BASE = dataclasses.replace(_AGG0, bucket_bytes=2 * _AGG0.block_elems * 4)
+
+
+def _agg_tree(seed=0):
+    r = np.random.default_rng(seed)
+
+    def dyadic(n, frac, dtype=np.float32):
+        return dyadic_sparse(n, frac, seed=r.integers(1 << 30)).astype(dtype)
+
+    return {
+        "big": dyadic(3 * AGG_BASE.block_elems * 2 + 101, 0.3),
+        "mat": dyadic(40 * 64, 0.3).reshape(40, 64),
+        "half": dyadic(900, 0.3, np.float16),
+        "tiny": dyadic(9, 0.5),
+    }
+
+
+def _run_aggregator(cfg, name, steps=1):
+    mesh = make_mesh((1,), ("data",))
+    tree = jax.tree.map(jnp.asarray, _agg_tree())
+    specs = jax.tree.map(lambda _: P(), tree)
+    agg = make_aggregator(name, cfg, mesh, ("data",), ("model",),
+                          outer_manual=("data",))
+
+    def fn(g, r):
+        out, st = agg(g, AggregationState(residual=r), specs)
+        return out, st.residual
+
+    jfn = jax.jit(shard_map(
+        fn, mesh=mesh, in_specs=(specs, specs), out_specs=(specs, specs),
+        axis_names={"data"}, check_vma=False))
+    res = init_aggregation_state(tree, cfg).residual
+    outs = []
+    for s in range(steps):
+        g = jax.tree.map(jnp.asarray, _agg_tree(seed=s))
+        out, res = jfn(g, res)
+        outs.append(jax.tree.map(np.asarray, out))
+    return outs, jax.tree.map(np.asarray, res)
+
+
+@pytest.mark.parametrize("name", ["compressed", "compressed_rs"])
+@pytest.mark.parametrize("overlap", [False, True], ids=["fused", "overlap"])
+def test_bucketed_aggregate_backend_parity(name, overlap):
+    cfg_n = dataclasses.replace(AGG_BASE, use_pallas="never", overlap=overlap)
+    cfg_a = dataclasses.replace(AGG_BASE, use_pallas="always", overlap=overlap)
+    (out_n,), res_n = _run_aggregator(cfg_n, name)
+    (out_a,), res_a = _run_aggregator(cfg_a, name)
+    for k in out_n:
+        assert np.array_equal(out_n[k], out_a[k]), f"grads differ: {k}"
+        assert out_n[k].dtype == out_a[k].dtype
+        assert np.array_equal(res_n[k], res_a[k]), f"residuals differ: {k}"
+    # single worker + dyadic values: the roundtrip is exact, so the
+    # aggregate must equal the sparsified (g + residual) per leaf
+    tree = _agg_tree()
+    for k, g in tree.items():
+        flat = jnp.asarray(g.reshape(-1), jnp.float32)
+        k_budget = max(1, int(flat.shape[0] * AGG_BASE.topk_ratio))
+        want, want_res = topk_lib.apply_error_feedback(
+            flat, jnp.zeros_like(flat), k_budget, exact=True)
+        np.testing.assert_array_equal(
+            out_n[k].reshape(-1), np.asarray(want).astype(g.dtype), err_msg=k)
+        np.testing.assert_array_equal(res_n[k].reshape(-1),
+                                      np.asarray(want_res), err_msg=k)
+
+
+def test_bucketed_overlap_matches_fused_bitwise():
+    for name in ("compressed", "compressed_rs"):
+        (fused,), rf = _run_aggregator(
+            dataclasses.replace(AGG_BASE, use_pallas="never"), name)
+        (over,), ro = _run_aggregator(
+            dataclasses.replace(AGG_BASE, use_pallas="never", overlap=True),
+            name)
+        for k in fused:
+            assert np.array_equal(fused[k], over[k]), (name, k)
+            assert np.array_equal(rf[k], ro[k]), (name, k)
+
+
+def test_rs_matches_plain_bitwise():
+    (plain,), _ = _run_aggregator(
+        dataclasses.replace(AGG_BASE, use_pallas="never"), "compressed")
+    (rs,), _ = _run_aggregator(
+        dataclasses.replace(AGG_BASE, use_pallas="never"), "compressed_rs")
+    for k in plain:
+        assert np.array_equal(plain[k], rs[k]), k
 
 
 def test_compressor_has_no_direct_backend_imports():

@@ -59,6 +59,42 @@ def test_peel_matches_oracle(cfg, frac):
     assert np.array_equal(np.asarray(r_p), np.asarray(r_r))
 
 
+@pytest.mark.parametrize("nb,tile", [(1, 4), (6, 3), (11, 3), (2, 8)],
+                         ids=["single", "exact-tiles", "padded", "tile>nb"])
+def test_peel_multiblock_tiling_matches_oracle(nb, tile):
+    """Multi-block grid-cell tiling of the peel kernel (same scheme as
+    encode): cells of ``peel_block_tile`` blocks, padded when nb is not a
+    tile multiple, must be bit-identical to the untiled oracle."""
+    import dataclasses
+    cfg = dataclasses.replace(CFGS[0], peel_block_tile=tile, rounds=10)
+    xb = jnp.asarray(_blocks(cfg, nb, 0.05, seed=nb + 23))
+    ids = jnp.arange(nb, dtype=jnp.int32)
+    y = ref.sketch_encode_ref(xb, ids, cfg)
+    bits = xb != 0
+    v_p, r_p = sketch_peel_pallas(y, bits, ids, cfg, interpret=True)
+    v_r, r_r = ref.sketch_peel_ref(y, bits, ids, cfg)
+    assert v_p.shape == v_r.shape and r_p.shape == r_r.shape
+    np.testing.assert_array_equal(np.asarray(v_p), np.asarray(v_r))
+    assert np.array_equal(np.asarray(r_p), np.asarray(r_r))
+
+
+def test_peel_tiling_with_offset_ids():
+    """Bucketed aggregators peel sub-ranges with shifted block ids; the
+    tiled kernel must honour arbitrary (non-contiguous-from-zero) ids."""
+    cfg = CFGS[0]
+    import dataclasses
+    cfg = dataclasses.replace(cfg, peel_block_tile=2)
+    nb = 5
+    ids = jnp.arange(nb, dtype=jnp.int32) + 37
+    xb = jnp.asarray(_blocks(cfg, nb, 0.04, seed=91))
+    y = ref.sketch_encode_ref(xb, ids, cfg)
+    bits = xb != 0
+    v_p, r_p = sketch_peel_pallas(y, bits, ids, cfg, interpret=True)
+    v_r, r_r = ref.sketch_peel_ref(y, bits, ids, cfg)
+    np.testing.assert_array_equal(np.asarray(v_p), np.asarray(v_r))
+    assert np.array_equal(np.asarray(r_p), np.asarray(r_r))
+
+
 def test_ops_dispatch_never_uses_pallas_on_cpu():
     cfg = CompressionConfig(ratio=0.2, lanes=128, rows=6, use_pallas="auto")
     xb = jnp.asarray(_blocks(cfg, 1, 0.02, 3))
