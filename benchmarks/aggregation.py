@@ -21,6 +21,15 @@ pytree: static collective-op counts from the jaxpr, plus end-to-end
 aggregation wall time, plus the single-leaf case (where bucketing must
 not regress). Runs on 2 fake CPU devices so the collectives are real.
 
+``--compare-rs`` (PR 3) compares the four aggregation arms — dense,
+``compressed`` (AllReduce wire), ``compressed_rs`` over its emulated
+psum+slice wire, and ``compressed_rs`` over the native psum_scatter +
+OR-Reduce-Scatter wire — on per-rank wire accounting
+(``CompressionConfig.strategy_wire_bytes``), static collective-op
+counts, and wall time. The 1-axis mesh keeps the region full-manual so
+the native path runs on both JAX legs; CI fails if the native arm's
+per-rank payload is not strictly below ``compressed``'s.
+
 ``--smoke`` shrinks every size for CI; ``--json PATH`` dumps all rows as
 a JSON artifact so the perf trajectory accumulates across CI runs.
 """
@@ -35,9 +44,10 @@ import sys
 import time
 from typing import Dict, List
 
-# Must be set before jax initializes: the bucketing comparison needs >1
-# device so the psum / OR-AllReduce launches are real collectives.
-if "--compare-bucketing" in sys.argv and \
+# Must be set before jax initializes: the bucketing / reduce-scatter
+# comparisons need >1 device so the psum / OR-AllReduce / psum_scatter
+# launches are real collectives.
+if ("--compare-bucketing" in sys.argv or "--compare-rs" in sys.argv) and \
         "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
     os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
                                + " --xla_force_host_platform_device_count=2")
@@ -276,12 +286,90 @@ def compare_bucketing(smoke: bool = False) -> List[Dict]:
     return rows
 
 
+# ----------------------------------------------------------------------
+# Dense vs compressed vs emulated-RS vs native-RS (PR 3)
+# ----------------------------------------------------------------------
+
+def compare_rs(smoke: bool = False) -> List[Dict]:
+    """The reduce-scatter wire story: per-strategy collective-op counts,
+    wall time, and per-rank wire accounting for ``dense``,
+    ``compressed``, and ``compressed_rs`` over both its wire paths
+    (psum+slice emulation vs native psum_scatter + OR-Reduce-Scatter).
+
+    The mesh has only the manual "data" axis, so the region is
+    full-manual and the native path runs on both JAX legs. The headline
+    number is ``rank_payload_bytes``: the reduced sketch+bitmap that
+    lands on each rank is the full payload for ``compressed`` /
+    emulated RS but 1/W of it for native RS — the paper's claim that the
+    sketch aggregates through the existing reduce-scatter API at full
+    collective bandwidth.
+    """
+    W = jax.device_count()
+    mesh = compat.make_mesh((W,), ("data",))
+    width = 32 if smoke else 128
+    iters = 1 if smoke else 3
+    # Small buckets relative to the stream keep the pad-to-W-chunks slack
+    # small, so the native arm's payload sits near the ideal 1/W.
+    cfg = CompressionConfig(
+        ratio=0.3, lanes=128, rows=6, rounds=10, chunk_blocks=64,
+        use_pallas="never",
+        bucket_bytes=(8 << 10) if smoke else (256 << 10))
+    tree = _model_tree(24, width)
+    put, in_specs, out_specs, total = _stacked_inputs(tree, mesh, W)
+    acc = cfg.strategy_wire_bytes(total, W, grad_bytes_per_elem=4)
+
+    arms = (
+        ("dense", "dense", "auto", acc["dense"]),
+        ("compressed", "compressed", "auto", acc["compressed"]),
+        ("compressed_rs_emulated", "compressed_rs", "emulate",
+         acc["compressed_rs_emulated"]),
+        ("compressed_rs_native", "compressed_rs", "native",
+         acc["compressed_rs_native"]),
+    )
+    rows = []
+    for arm, name, rs_wire, wire in arms:
+        cfg_a = dataclasses.replace(cfg, rs_wire=rs_wire)
+        agg = make_aggregator(name, cfg_a, mesh, ("data",), (),
+                              outer_manual=("data",))
+
+        def path(grads, agg=agg, cfg_a=cfg_a):
+            specs = jax.tree.map(lambda _: P(), grads)
+            res = coll.init_aggregation_state(grads, cfg_a).residual
+            out, _ = agg(grads, AggregationState(residual=res), specs)
+            return out
+
+        fn = jax.jit(compat.shard_map(
+            lambda st, path=path: path(jax.tree.map(lambda a: a[0], st)),
+            mesh=mesh, in_specs=(in_specs,), out_specs=out_specs,
+            axis_names={"data"}, check_vma=False))
+        counts = _count_collectives(jax.make_jaxpr(fn)(put), {})
+        row = {"case": "compare_rs", "arm": arm, "workers": W,
+               "total_elems": total,
+               "collective_ops": sum(counts.values()),
+               "collectives": dict(sorted(counts.items())),
+               "wall_s": _time_jitted(fn, (put,), iters)}
+        row.update(wire)
+        rows.append(row)
+        print(f"[compare_rs] {arm}: rank_payload={row['rank_payload_bytes']} "
+              f"link={row['link_bytes']} "
+              f"collective_ops={row['collective_ops']} "
+              f"wall={row['wall_s']:.4f}s")
+
+    by_arm = {r["arm"]: r for r in rows}
+    ratio = (by_arm["compressed_rs_native"]["rank_payload_bytes"]
+             / by_arm["compressed"]["rank_payload_bytes"])
+    print(f"[compare_rs] native-RS rank payload = {ratio:.3f}x compressed "
+          f"(ideal 1/W = {1 / W:.3f})")
+    return rows
+
+
 def _fmt(v):
     return v if isinstance(v, str) else f"{v:.4g}"
 
 
 def main(fracs=(0.02, 0.05, 0.10, 0.25, 0.60, 1.0),
-         backends=("auto",), smoke=False, compare=False, json_path=None):
+         backends=("auto",), smoke=False, compare=False, compare_rs_flag=False,
+         json_path=None):
     """One CSV row per (size fraction, compute backend).
 
     ``--backends never always`` compares the jnp reference codec against
@@ -302,9 +390,11 @@ def main(fracs=(0.02, 0.05, 0.10, 0.25, 0.60, 1.0),
                 print(",".join(keys))
             print(",".join(_fmt(r[k]) for k in keys))
     bucket_rows = compare_bucketing(smoke=smoke) if compare else []
+    rs_rows = compare_rs(smoke=smoke) if compare_rs_flag else []
     if json_path:
         with open(json_path, "w") as f:
-            json.dump({"codec": rows, "bucketing": bucket_rows}, f, indent=2)
+            json.dump({"codec": rows, "bucketing": bucket_rows,
+                       "compare_rs": rs_rows}, f, indent=2)
         print(f"wrote {json_path}")
 
 
@@ -319,8 +409,12 @@ if __name__ == "__main__":
                     help="tiny sizes for CI smoke runs")
     ap.add_argument("--compare-bucketing", action="store_true",
                     help="bucketed aggregator vs the per-leaf architecture")
+    ap.add_argument("--compare-rs", action="store_true",
+                    help="dense vs compressed vs emulated-RS vs native-RS "
+                         "wire bytes, collective counts and wall time")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="dump all rows as a JSON artifact")
     args = ap.parse_args()
     main(tuple(args.fracs), tuple(args.backends), smoke=args.smoke,
-         compare=args.compare_bucketing, json_path=args.json)
+         compare=args.compare_bucketing, compare_rs_flag=args.compare_rs,
+         json_path=args.json)

@@ -49,6 +49,21 @@ SUPPORTS_NESTED_SHARD_MAP = HAS_TOP_LEVEL_SHARD_MAP
 # False (see :func:`repro.core.collectives.or_allreduce`).
 SUPPORTS_PARTIAL_AUTO_PPERMUTE = HAS_TOP_LEVEL_SHARD_MAP
 
+# Native reduce-scatter lowering (``jax.lax.psum_scatter`` on the sketch,
+# the ppermute-ring OR-Reduce-Scatter on the bitmap) inside *partial*-auto
+# manual regions. On 0.4.x the same partitioner gaps that break ppermute
+# there (and axis_index consumption — the peel's per-rank ``block_offset``
+# is real compute fed by the rank) apply, so the flag tracks the new-API
+# generation. Full-manual regions support the whole native wire path on
+# every JAX — callers that hold EVERY mesh axis manual (the 0.4.x train
+# step, single-DP-axis benchmark meshes) may take the native path even
+# when this flag is False; see
+# :class:`repro.core.aggregators.CompressedReduceScatterAggregator`.
+# On new JAX partial-auto regions note the Shardy caveat: auto TP axes are
+# un-sharded around a manual-axis psum_scatter/all_gather (perf, not
+# correctness — same note as the ZeRO-1 gather in train/step.py).
+SUPPORTS_PSUM_SCATTER = HAS_TOP_LEVEL_SHARD_MAP
+
 # The partial-auto failures above are symptoms of a broader 0.4.x gap:
 # any value whose HLO parameter/operand carries a plain *replicated*
 # sharding annotation (hoisted scan constants, replicated param leaves
@@ -60,6 +75,20 @@ SUPPORTS_PARTIAL_AUTO_PPERMUTE = HAS_TOP_LEVEL_SHARD_MAP
 # identical, merely unsharded. Full-manual regions support ppermute,
 # remat and scanned constants on every JAX.
 SUPPORTS_PARTIAL_AUTO_SHARD_MAP = HAS_TOP_LEVEL_SHARD_MAP
+
+
+def full_manual_region(manual_axes, mesh) -> bool:
+    """True when ``manual_axes`` covers every mesh axis.
+
+    A full-manual region has no auto axes left for GSPMD/Shardy to
+    manage, which unlocks two things the partial-auto paths must avoid:
+    ppermute/psum_scatter on 0.4.x (see SUPPORTS_PARTIAL_AUTO_PPERMUTE /
+    SUPPORTS_PSUM_SCATTER), and manual-axis ``all_gather`` on new JAX
+    without Shardy un-sharding the auto TP axes around it (the reason
+    the ZeRO-1 gather in train/step.py otherwise uses zero-pad + psum
+    at 2x the wire cost).
+    """
+    return set(mesh.axis_names) <= set(manual_axes)
 
 
 def train_step_manual_axes(mesh, dp_axes) -> set:

@@ -15,15 +15,21 @@ whole gradient is packed into fixed-byte flat buckets
   against the next bucket's encode via a ``lax.scan`` double-buffer carry,
   so on hardware with async collectives bucket *i*'s wire time hides
   bucket *i+1*'s encode;
-- :class:`CompressedReduceScatterAggregator` — recovers (peels) only this
-  DP-rank's bucket range, 1/W of the peeling compute per rank, and
-  reassembles via the same scatter+``psum`` trick the ZeRO-1 optimizer
-  path uses (see ``train/step.py``). The sketch reduction is ``psum`` +
-  local slice rather than a native ``psum_scatter``: XLA's
-  reduce-scatter-creation pass can fuse the pair, and Shardy un-shards
-  auto TP axes around manual-axis ``all_gather``/``psum_scatter`` (the
-  same issue noted at the ZeRO-1 gather) — native lowering is a ROADMAP
-  open item.
+- :class:`CompressedReduceScatterAggregator` — the native reduce-scatter
+  wire path (PR 3): the sketch reduces with ``jax.lax.psum_scatter`` and
+  the bitmap with the ppermute-ring
+  :func:`~repro.core.collectives.or_reduce_scatter`, so each rank
+  *receives* only its own ``n_buckets/W`` sketch+bitmap slice (1/W the
+  reduced payload of the AllReduce strategies — the paper's full
+  reduce-scatter bandwidth win), peels only that range (1/W of the
+  recovery compute), and reassembles the recovered chunks with a
+  manual-axis ``all_gather`` (full-manual regions) or the zero-pad +
+  ``psum`` ZeRO-1 gather trick (partial-auto, where Shardy would
+  un-shard auto TP axes around the gather). Gated by
+  ``compat.SUPPORTS_PSUM_SCATTER`` / a full-manual caller, with the
+  older ``psum`` + local-slice emulation kept as the 0.4.x partial-auto
+  fallback (AllReduce wire, per-rank peel compute only); the
+  ``cfg.rs_wire`` knob forces either path.
 
 All strategies run *inside* the outer train-step ``shard_map`` (manual DP
 axes). On JAX with nested partial-manual support, packing/unpacking runs
@@ -53,7 +59,8 @@ from repro import compat
 from .config import CompressionConfig
 from .compressor import HomomorphicCompressor, CompressedLeaf
 from .bucketing import BucketPlan, make_bucket_plan
-from .collectives import (AggregationState, dense_all_reduce, or_allreduce)
+from .collectives import (AggregationState, dense_all_reduce, linear_rank,
+                          or_allreduce, or_reduce_scatter)
 from . import topk as topk_lib
 
 
@@ -274,9 +281,7 @@ class CompressedAggregator:
         # those axes are directly bound; threaded into the OR-rings because
         # axis_index inside nested regions would re-bind the axis (Shardy).
         dp_idx = {ax: jax.lax.axis_index(ax) for ax in self.dp_axes}
-        dp_rank = jnp.int32(0)
-        for ax in self.dp_axes:
-            dp_rank = dp_rank * mesh.shape[ax] + dp_idx[ax]
+        dp_rank = linear_rank(self.dp_axes, dp_idx)
 
         manual = self._manual_set(spec_leaves)
         nested = bool(manual) and compat.SUPPORTS_NESTED_SHARD_MAP
@@ -333,49 +338,131 @@ class CompressedAggregator:
 
 @dataclasses.dataclass(frozen=True)
 class CompressedReduceScatterAggregator(CompressedAggregator):
-    """Bucketed compressed aggregation that peels only this DP-rank's
-    bucket range.
+    """Bucketed compressed aggregation over a reduce-scattered wire.
 
-    Phase I is identical to :class:`CompressedAggregator`. Phase II
-    reduces the stacked sketch across DP, slices this rank's
-    ``n_buckets/W`` range, peels *only that range* (1/W of the recovery
-    compute per rank), and reassembles the recovered buckets with the
-    zero-pad + ``psum`` gather the ZeRO-1 slice-update path uses. That
-    feeds ZeRO-1 sharded optimizers without every rank paying the full
-    peel; recovered values are bit-identical to the all-ranks path (the
+    Phase I (pack/sparsify/encode) is identical to
+    :class:`CompressedAggregator`. Phase II comes in two wire paths,
+    selected by ``cfg.rs_wire`` and the capability map:
+
+    **Native** (``compat.SUPPORTS_PSUM_SCATTER``, or any JAX when the
+    caller's region is full-manual): the stacked sketch reduces with
+    ``jax.lax.psum_scatter`` and the bitmap with the ring
+    :func:`~repro.core.collectives.or_reduce_scatter`, both padded to
+    whole per-rank chunks of ``nb_p/W`` buckets, so each rank *receives*
+    only its own sketch+bitmap slice — 1/W the reduced payload (and
+    roughly half the link traffic) of the AllReduce strategies. The rank
+    peels its range (1/W of the recovery compute, hash ids offset to the
+    chunk's global block position) and the recovered chunks reassemble
+    with a manual-axis ``all_gather`` in full-manual regions, else the
+    zero-pad + ``psum`` ZeRO-1 gather trick (Shardy un-shards auto TP
+    axes around a partial-auto manual-axis all_gather; see
+    train/step.py). ``cfg.overlap`` is inapplicable here and ignored:
+    per-bucket collective staging would scatter each bucket's *interior*
+    across ranks instead of assigning whole buckets to their peeling
+    rank (a strided wire format; ROADMAP open item).
+
+    **Emulated** (the 0.4.x partial-auto fallback, or
+    ``rs_wire="emulate"``): full ``psum`` + OR-AllReduce, then a local
+    slice — AllReduce wire cost, but still only 1/W of the peel compute
+    per rank. On 0.4.x partial-auto callers that did not declare
+    ``outer_manual`` it further degrades to all-ranks peeling (the rank
+    index cannot be lowered there).
+
+    Both paths are bit-identical to :class:`CompressedAggregator`: the
     per-range peel runs the same ops on the same sketch slice, and the
-    disjoint-chunk psum adds each value to zeros exactly once).
+    disjoint-chunk gather (all_gather, or psum onto zeros) reproduces
+    each value exactly once.
     """
+
+    # -- geometry / capability helpers ---------------------------------
+
+    def _dp_world(self) -> int:
+        W = 1
+        for ax in self.dp_axes:
+            W *= self.mesh.shape[ax]
+        return W
+
+    def _full_manual(self) -> bool:
+        return (self.outer_manual is not None
+                and compat.full_manual_region(self.outer_manual, self.mesh))
+
+    def _native_wire(self) -> bool:
+        """Whether phase II takes the psum_scatter/OR-RS wire path."""
+        if self.cfg.rs_wire == "emulate":
+            return False
+        ok = compat.SUPPORTS_PSUM_SCATTER or self._full_manual()
+        if not ok and self.cfg.rs_wire == "native":
+            raise ValueError(
+                "rs_wire='native' requires a JAX with psum_scatter in "
+                "partial-auto manual regions (compat.SUPPORTS_PSUM_SCATTER) "
+                "or a caller whose shard_map takes every mesh axis manual "
+                "(pass outer_manual); use rs_wire='auto' to fall back")
+        return ok
+
+    def _check_bitmap(self):
+        if self.cfg.index != "bitmap":
+            raise ValueError(
+                "compressed_rs requires index='bitmap' (a Bloom filter "
+                "hashes global coordinates and cannot be sliced per-rank)")
+
+    def _rs_geometry(self, plan: BucketPlan):
+        """(W, blocks/bucket, words/bucket, n_buckets padded to W)."""
+        W = self._dp_world()
+        nbpb = plan.bucket_elems // self.cfg.block_elems
+        wpb = plan.bucket_elems // 32
+        nb_p = -(-plan.n_buckets // W) * W
+        return W, nbpb, wpb, nb_p
+
+    # -- phase II ------------------------------------------------------
+
+    def _encode(self, buckets: jnp.ndarray, plan: BucketPlan,
+                comp: HomomorphicCompressor, dp_idx):
+        self._check_bitmap()
+        if not self._native_wire():
+            return super()._encode(buckets, plan, comp, dp_idx)
+        # Fused encode only (see class docstring on cfg.overlap).
+        c = comp.compress(buckets.reshape(-1))
+        W, nbpb, wpb, nb_p = self._rs_geometry(plan)
+        sk, words = c.sketch, c.index_words
+        pad_b = nb_p - plan.n_buckets
+        if pad_b:
+            # zero sketch blocks / zero index words peel to exact zeros
+            sk = jnp.pad(sk, ((0, pad_b * nbpb), (0, 0), (0, 0)))
+            words = jnp.pad(words, (0, pad_b * wpb))
+        if W == 1:
+            return sk, words
+        sk_loc = jax.lax.psum_scatter(
+            sk, tuple(self.dp_axes), scatter_dimension=0, tiled=True)
+        w_loc = or_reduce_scatter(
+            words, self.dp_axes, axis_indices=dp_idx,
+            use_ppermute=True if self._full_manual() else None)
+        return sk_loc, w_loc
 
     def _recover(self, sk, words, plan: BucketPlan,
                  comp: HomomorphicCompressor, dp_idx, dp_rank):
         cfg = self.cfg
-        if cfg.index != "bitmap":
-            raise ValueError(
-                "compressed_rs requires index='bitmap' (a Bloom filter "
-                "hashes global coordinates and cannot be sliced per-rank)")
-        mesh_axes = set(self.mesh.axis_names)
-        full_manual = (self.outer_manual is not None
-                       and mesh_axes <= set(self.outer_manual))
+        self._check_bitmap()
+        W, nbpb, wpb, nb_p = self._rs_geometry(plan)
+        chunk_b = nb_p // W                      # buckets per rank
+        chunk_elems = chunk_b * plan.bucket_elems
+        if self._native_wire():
+            # (sk, words) are already this rank's reduced 1/W slice.
+            rec_loc = comp.recover(
+                CompressedLeaf(sketch=sk, index_words=words), chunk_elems,
+                block_offset=dp_rank * chunk_b * nbpb)
+            return self._gather_chunks(rec_loc, plan, nb_p, chunk_elems,
+                                       dp_rank)
+        full_manual = self._full_manual()
         if not (compat.SUPPORTS_PARTIAL_AUTO_PPERMUTE or full_manual):
             # 0.4.x partial-auto caller: the rank (axis_index) cannot be
             # lowered — degrade to all-ranks peeling (same values, no
             # per-rank compute scattering). See ``outer_manual``.
             return CompressedAggregator._recover(
                 self, sk, words, plan, comp, dp_idx, dp_rank)
-        W = 1
-        for ax in self.dp_axes:
-            W *= self.mesh.shape[ax]
-        nbpb = plan.bucket_elems // cfg.block_elems
-        wpb = plan.bucket_elems // 32
-        nb_p = -(-plan.n_buckets // W) * W      # buckets padded to W ranks
         pad_b = nb_p - plan.n_buckets
         if pad_b:
-            # zero sketch blocks / zero index words peel to exact zeros
             sk = jnp.pad(sk, ((0, pad_b * nbpb), (0, 0), (0, 0)))
             words = jnp.pad(words, (0, pad_b * wpb))
-        chunk_b = nb_p // W                      # buckets per rank
-        chunk_elems = chunk_b * plan.bucket_elems
         sk_loc = jax.lax.dynamic_slice_in_dim(
             sk, dp_rank * chunk_b * nbpb, chunk_b * nbpb, axis=0)
         w_loc = jax.lax.dynamic_slice_in_dim(
@@ -383,12 +470,28 @@ class CompressedReduceScatterAggregator(CompressedAggregator):
         rec_loc = comp.recover(
             CompressedLeaf(sketch=sk_loc, index_words=w_loc), chunk_elems,
             block_offset=dp_rank * chunk_b * nbpb)
-        # Disjoint-chunk gather via zero-pad + psum (see class docstring
-        # and the ZeRO-1 note in train/step.py on manual-axis all_gather).
-        full = jnp.zeros((nb_p * plan.bucket_elems,), rec_loc.dtype)
-        full = jax.lax.dynamic_update_slice_in_dim(
-            full, rec_loc, dp_rank * chunk_elems, axis=0)
-        full = jax.lax.psum(full, tuple(self.dp_axes))
+        return self._gather_chunks(rec_loc, plan, nb_p, chunk_elems, dp_rank)
+
+    def _gather_chunks(self, rec_loc, plan: BucketPlan, nb_p: int,
+                       chunk_elems: int, dp_rank):
+        """Reassemble the per-rank recovered chunks into the full stream.
+
+        Full-manual regions take a manual-axis ``all_gather`` (rank-major
+        tiling, half the wire of the psum trick); partial-auto regions
+        keep the zero-pad + ``psum`` gather so Shardy does not un-shard
+        the auto TP axes around the gather (see train/step.py). Both
+        reproduce each recovered value exactly once (bit-identical).
+        """
+        if self._dp_world() == 1:
+            full = rec_loc
+        elif self._full_manual():
+            full = jax.lax.all_gather(rec_loc, tuple(self.dp_axes),
+                                      axis=0, tiled=True)
+        else:
+            full = jnp.zeros((nb_p * plan.bucket_elems,), rec_loc.dtype)
+            full = jax.lax.dynamic_update_slice_in_dim(
+                full, rec_loc, dp_rank * chunk_elems, axis=0)
+            full = jax.lax.psum(full, tuple(self.dp_axes))
         return full[:plan.padded].reshape(plan.n_buckets, plan.bucket_elems)
 
 

@@ -15,6 +15,15 @@ OR-AllReduce out of ``jax.lax.ppermute``:
   second ring phase. Payloads at or above ``ring_threshold`` *bytes* (and
   any axis whose size is not a power of two) take the ring; small
   power-of-two axes take recursive doubling.
+- ``or_reduce_scatter``     — phase 1 of the ring alone: after the
+  reduce-scatter each rank holds only its own fully OR-reduced 1/W chunk,
+  (W−1)/W · |B| per link and no all-gather phase. This is the bitmap leg
+  of the native reduce-scatter wire path (PR 3): the sketch reduces with
+  ``jax.lax.psum_scatter`` and the bitmap with this primitive, so the
+  reduced payload that lands on each rank is 1/W of the AllReduce
+  strategies' — see
+  :class:`repro.core.aggregators.CompressedReduceScatterAggregator` and
+  ``CompressionConfig.strategy_wire_bytes``.
 
 All functions must run inside ``shard_map`` where ``axis_name`` is manual.
 
@@ -46,6 +55,26 @@ from .config import CompressionConfig
 
 def _ring_perm(n: int):
     return [(i, (i + 1) % n) for i in range(n)]
+
+
+def linear_rank(axis_names: Sequence[str],
+                axis_indices: Optional[dict] = None) -> jnp.ndarray:
+    """This shard's rank-major linear index over ``axis_names``.
+
+    ``rank = (((i0) * s1 + i1) * s2 + i2) ...`` with the first axis most
+    significant — the chunk-to-rank order of ``jax.lax.psum_scatter`` /
+    tiled ``all_gather`` over the same axis tuple, of
+    :func:`or_reduce_scatter`, and of the peel's per-rank
+    ``block_offset``. Every site that linearizes mesh axes must use this
+    helper so the orders can never drift apart. ``axis_indices``: as in
+    :func:`or_allreduce_ring` (required complete if given).
+    """
+    _check_axis_indices(axis_names, axis_indices)
+    rank = jnp.int32(0)
+    for ax in axis_names:
+        idx = axis_indices[ax] if axis_indices else jax.lax.axis_index(ax)
+        rank = rank * compat.axis_size(ax) + idx
+    return rank
 
 
 def or_allreduce_ring(x: jnp.ndarray, axis_name: str,
@@ -89,6 +118,45 @@ def or_allreduce_ring(x: jnp.ndarray, axis_name: str,
     return out[:size] if pad else out
 
 
+def or_reduce_scatter_ring(x: jnp.ndarray, axis_name: str,
+                           idx: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Bitwise-OR Reduce-Scatter via the ring's phase 1 alone.
+
+    Returns this rank's fully OR-reduced chunk ``x[idx*C:(idx+1)*C]``
+    with ``C = x.shape[0] // n`` — the chunk-to-rank assignment matches
+    ``jax.lax.psum_scatter(..., scatter_dimension=0, tiled=True)``, so
+    the sketch (psum_scatter) and the bitmap (this ring) arrive sliced
+    identically. ``x.shape[0]`` must divide evenly by the axis size (the
+    bucketed callers pad to whole per-rank chunks first).
+
+    The send schedule is the reduce-scatter ring shifted so the chunk a
+    rank finishes reducing at step n-2 is its *own* chunk ``idx`` (the
+    AllReduce ring in :func:`or_allreduce_ring` finishes on chunk
+    ``(idx+1) % n``, which only matters there because phase 2 regathers
+    everything). ``idx``: see :func:`or_allreduce_ring`.
+    """
+    n = compat.axis_size(axis_name)
+    if x.shape[0] % n:
+        raise ValueError(
+            f"or_reduce_scatter: leading dim {x.shape[0]} not divisible "
+            f"by axis {axis_name!r} size {n}")
+    if n == 1:
+        return x
+    if idx is None:
+        idx = jax.lax.axis_index(axis_name)
+    chunks = x.reshape((n, x.shape[0] // n) + x.shape[1:])
+    perm = _ring_perm(n)
+    for t in range(n - 1):
+        send = jax.lax.dynamic_index_in_dim(chunks, (idx - t - 1) % n, 0,
+                                            keepdims=False)
+        recv = jax.lax.ppermute(send, axis_name, perm)
+        tgt = (idx - t - 2) % n
+        upd = jax.lax.dynamic_index_in_dim(chunks, tgt, 0,
+                                           keepdims=False) | recv
+        chunks = jax.lax.dynamic_update_index_in_dim(chunks, upd, tgt, 0)
+    return jax.lax.dynamic_index_in_dim(chunks, idx, 0, keepdims=False)
+
+
 def or_allreduce_doubling(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
     """Bitwise-OR AllReduce via recursive doubling (requires power-of-2)."""
     n = compat.axis_size(axis_name)
@@ -104,20 +172,44 @@ def or_allreduce_doubling(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
     return x
 
 
-def _or_allreduce_psum(x: jnp.ndarray, axis_names: Sequence[str]) -> jnp.ndarray:
+# Words per chunk of the psum-emulated OR. The 32-way int32 bit-unpack
+# (and the psum'd counts) are 64x the bytes of the uint32 words they
+# cover, so a one-shot unpack of a large bitmap transiently costs ~128x
+# the bitmap; chunking bounds the peak at ~8 MiB per chunk.
+PSUM_OR_CHUNK_WORDS = 1 << 16
+
+
+def _or_allreduce_psum(x: jnp.ndarray, axis_names: Sequence[str],
+                       chunk_words: int = PSUM_OR_CHUNK_WORDS) -> jnp.ndarray:
     """OR-AllReduce emulated with the sum collective (exact).
 
     Unpacks each uint32 word into its 32 bits, psums the bit counts, and
     repacks ``count > 0``. 32x the wire volume of the native OR — this is
     the compatibility path for JAX versions whose partitioner cannot run
     ppermute over a manual axis while other mesh axes stay auto.
+
+    The unpack/psum runs in chunks of ``chunk_words`` leading-dim words
+    (one psum per chunk, a static Python loop) so the int32 bit-unpack
+    transient is bounded at ~128 bytes x ``chunk_words`` instead of 128x
+    the whole bitmap. Bit-exact regardless of chunking: each word's 32
+    counts are independent.
     """
+    if chunk_words < 1:
+        raise ValueError(f"chunk_words must be >= 1, got {chunk_words}")
     shifts = jnp.arange(32, dtype=jnp.uint32)
-    bits = ((x[..., None] >> shifts) & jnp.uint32(1)).astype(jnp.int32)
-    counts = jax.lax.psum(bits, tuple(axis_names))
-    return jnp.sum(
-        jnp.where(counts > 0, jnp.uint32(1) << shifts, jnp.uint32(0)),
-        axis=-1, dtype=jnp.uint32)
+
+    def one(xc):
+        bits = ((xc[..., None] >> shifts) & jnp.uint32(1)).astype(jnp.int32)
+        counts = jax.lax.psum(bits, tuple(axis_names))
+        return jnp.sum(
+            jnp.where(counts > 0, jnp.uint32(1) << shifts, jnp.uint32(0)),
+            axis=-1, dtype=jnp.uint32)
+
+    n = x.shape[0] if x.ndim else 0
+    if x.ndim == 0 or n <= chunk_words:
+        return one(x)
+    parts = [one(x[i:i + chunk_words]) for i in range(0, n, chunk_words)]
+    return jnp.concatenate(parts, axis=0)
 
 
 def _use_ring(payload_bytes: int, axis_size: int, ring_threshold: int) -> bool:
@@ -125,6 +217,24 @@ def _use_ring(payload_bytes: int, axis_size: int, ring_threshold: int) -> bool:
     bytes or more (bandwidth-bound regime), and always for axis sizes
     that are not a power of two (doubling requires 2^k participants)."""
     return payload_bytes >= ring_threshold or bool(axis_size & (axis_size - 1))
+
+
+def _check_axis_indices(axis_names: Sequence[str],
+                        axis_indices: Optional[dict]) -> None:
+    """A *partial* ``axis_indices`` dict is always a caller bug: falling
+    back to ``axis_index`` for the missing axes would re-bind an axis
+    already bound by an outer shard_map inside the nested region — the
+    exact Shardy failure the parameter exists to avoid. Fail loudly
+    instead of silently recomputing."""
+    if axis_indices is None:
+        return
+    missing = [ax for ax in axis_names if ax not in axis_indices]
+    if missing:
+        raise ValueError(
+            f"axis_indices is missing {missing} (has "
+            f"{sorted(axis_indices)}); pass every reduced axis's index "
+            "or None — a partial dict would silently re-bind axis_index "
+            "inside a nested shard_map region")
 
 
 def or_allreduce(x: jnp.ndarray, axis_names: Sequence[str],
@@ -141,19 +251,68 @@ def or_allreduce(x: jnp.ndarray, axis_names: Sequence[str],
     always take the ring (doubling requires power-of-2 participants).
 
     ``axis_indices``: {axis: this shard's index} — required when calling
-    from a nested shard_map (see or_allreduce_ring).
+    from a nested shard_map (see or_allreduce_ring). If given it must
+    cover *every* axis in ``axis_names`` (ValueError otherwise).
     """
     if isinstance(axis_names, str):
         axis_names = (axis_names,)
+    _check_axis_indices(axis_names, axis_indices)
     if not compat.SUPPORTS_PARTIAL_AUTO_PPERMUTE:
         return _or_allreduce_psum(x, axis_names)
     payload_bytes = x.size * x.dtype.itemsize
     for ax in reversed(tuple(axis_names)):
         if _use_ring(payload_bytes, compat.axis_size(ax), ring_threshold):
-            idx = axis_indices.get(ax) if axis_indices else None
+            idx = axis_indices[ax] if axis_indices else None
             x = or_allreduce_ring(x, ax, idx=idx)
         else:
             x = or_allreduce_doubling(x, ax)
+    return x
+
+
+def or_reduce_scatter(x: jnp.ndarray, axis_names: Sequence[str],
+                      axis_indices: Optional[dict] = None,
+                      use_ppermute: Optional[bool] = None) -> jnp.ndarray:
+    """Hierarchical bitwise-OR Reduce-Scatter over (manual) mesh axes.
+
+    Each rank receives only its own fully OR-reduced ``1/W`` chunk of
+    ``x`` (leading dim, which must divide by the total axis size W).
+    Chunk-to-rank assignment is rank-major in ``axis_names`` order —
+    identical to ``jax.lax.psum_scatter(x, tuple(axis_names),
+    scatter_dimension=0, tiled=True)`` — so axes scatter
+    *outermost*-first: the outer axis picks the coarse chunk, each inner
+    axis a sub-chunk of it. (The AllReduce driver reduces innermost-first
+    instead; order is irrelevant there because everyone ends with
+    everything.)
+
+    ``use_ppermute``: force (True) or forbid (False) the ppermute ring.
+    Default ``None`` follows ``compat.SUPPORTS_PARTIAL_AUTO_PPERMUTE``;
+    callers inside *full-manual* regions on 0.4.x should pass True (the
+    ring is supported there — see compat.full_manual_region). When the
+    ring is unavailable the result is emulated as a psum-based
+    OR-AllReduce plus a local chunk slice: correct, but it forfeits the
+    wire win (compat path only).
+    """
+    if isinstance(axis_names, str):
+        axis_names = (axis_names,)
+    axis_names = tuple(axis_names)
+    _check_axis_indices(axis_names, axis_indices)
+    W = 1
+    for ax in axis_names:
+        W *= compat.axis_size(ax)
+    if x.shape[0] % W:
+        raise ValueError(
+            f"or_reduce_scatter: leading dim {x.shape[0]} not divisible "
+            f"by the total axis size {W}")
+    if use_ppermute is None:
+        use_ppermute = compat.SUPPORTS_PARTIAL_AUTO_PPERMUTE
+    if not use_ppermute:
+        full = _or_allreduce_psum(x, axis_names)
+        rank = linear_rank(axis_names, axis_indices)
+        return jax.lax.dynamic_slice_in_dim(
+            full, rank * (x.shape[0] // W), x.shape[0] // W, axis=0)
+    for ax in axis_names:
+        idx = axis_indices[ax] if axis_indices else None
+        x = or_reduce_scatter_ring(x, ax, idx=idx)
     return x
 
 
@@ -208,7 +367,8 @@ def compressed_all_reduce(grads: Any, agg_state: AggregationState,
                           dp_axes: Sequence[str] = ("data",),
                           tp_axes: Sequence[str] = ("model",),
                           mean: bool = True,
-                          reduce_scatter: bool = False):
+                          reduce_scatter: bool = False,
+                          outer_manual: Optional[Sequence[str]] = None):
     """Aggregate a gradient pytree with the paper's compressed pipeline.
 
     Thin wrapper over the bucketed
@@ -217,11 +377,20 @@ def compressed_all_reduce(grads: Any, agg_state: AggregationState,
     pre-bucketing per-leaf path. Must be called *inside* a ``shard_map``
     where ``dp_axes`` are already manual.
 
+    ``outer_manual``: the axis set that enclosing shard_map takes manual
+    — forwarded to the aggregator, where it decides whether the
+    reduce-scatter strategy may slice/scatter per rank on 0.4.x (a fully
+    manual caller supports the native wire path and per-rank peeling even
+    without SUPPORTS_PSUM_SCATTER / partial-auto ppermute). Omitting it
+    never affects correctness, but silently degrades ``reduce_scatter``
+    to all-ranks peeling over the emulated wire on 0.4.x.
+
     Returns: (aggregated grads pytree, new AggregationState)
     """
     # Imported here: aggregators imports this module's primitives.
     from .aggregators import make_aggregator
     name = "compressed_rs" if reduce_scatter else "compressed"
     agg = make_aggregator(name, cfg, mesh, dp_axes=dp_axes,
-                          tp_axes=tp_axes, mean=mean)
+                          tp_axes=tp_axes, mean=mean,
+                          outer_manual=outer_manual)
     return agg(grads, agg_state, param_specs)

@@ -61,6 +61,15 @@ class CompressionConfig:
                                  # bucketing.BucketPlan)
     overlap: bool = False        # pipeline bucket i's collectives against
                                  # bucket i+1's encode (lax.scan staging)
+    rs_wire: str = "auto"        # reduce-scatter strategy wire path:
+                                 # "auto"    — native psum_scatter + OR-RS
+                                 #             when the JAX leg / region
+                                 #             supports it, else the
+                                 #             psum+slice emulation;
+                                 # "native"  — require native (raise if
+                                 #             unsupported);
+                                 # "emulate" — force the emulation (for
+                                 #             parity tests / benchmarks)
     sketch_dtype: str = "float32"
 
     def __post_init__(self):
@@ -85,6 +94,10 @@ class CompressionConfig:
             # Per-bucket OR-AllReduce slices the packed bitmap by bucket;
             # a Bloom filter is one global structure and cannot be sliced.
             raise ValueError("overlap=True requires index='bitmap'")
+        if self.rs_wire not in ("auto", "native", "emulate"):
+            raise ValueError(
+                f"rs_wire must be 'auto', 'native' or 'emulate', "
+                f"got {self.rs_wire!r}")
 
     # ---- derived static geometry -------------------------------------
 
@@ -144,7 +157,18 @@ class CompressionConfig:
         return -(-total_elems // self.bucket_elems_for(total_elems))
 
     def wire_bytes(self, n: int, grad_bytes_per_elem: int = 2) -> dict:
-        """Bytes on the wire for ``n`` elements vs. the dense baseline.
+        """Strategy-agnostic payload sizes for ``n`` elements.
+
+        These are the sizes of the *objects* that cross the wire — the
+        fp32 sketch (``sketch_bytes``), the packed index
+        (``index_bytes``, 1 bit/element bitmap or the Bloom filter), and
+        the dense baseline gradient (``dense_bytes``) — NOT what any
+        particular collective ships per rank: an AllReduce materializes
+        the whole reduced payload on every rank while a reduce-scatter
+        lands only ``1/W`` of it, and link traffic further depends on
+        the algorithm (ring AllReduce moves ``2(W-1)/W x`` payload per
+        rank, a reduce-scatter ``(W-1)/W x``). For per-rank,
+        per-strategy accounting use :meth:`strategy_wire_bytes`.
 
         Includes the per-bucket totals of the bucketed aggregation path:
         ``n`` is taken as the whole packed stream, split into
@@ -178,3 +202,93 @@ class CompressionConfig:
             "bucket_total_bytes": b_sketch + b_idx,
             "bucketed_total_bytes": n_buckets * (b_sketch + b_idx),
         }
+
+    def strategy_wire_bytes(self, n: int, workers: int,
+                            grad_bytes_per_elem: int = 2) -> dict:
+        """Per-rank wire accounting for each aggregation strategy.
+
+        For a stream of ``n`` elements reduced across ``workers`` (W)
+        ranks, reports for every strategy in
+        :data:`repro.core.aggregators.AGGREGATORS` (the reduce-scatter
+        one split into its native and emulated wire paths):
+
+        - ``rank_payload_bytes`` — the reduced payload that *lands on*
+          each rank after its collectives: the full dense gradient /
+          full sketch+index for the AllReduce strategies, but only the
+          ``1/W`` sketch+bitmap slice for the native reduce-scatter
+          path (padded to whole per-rank bucket chunks). This is the
+          number the paper's "aggregatable at full collective
+          bandwidth" claim is about.
+        - ``link_bytes`` — bytes each rank *sends* under the standard
+          bandwidth-optimal algorithms: ring AllReduce at
+          ``2(W-1)/W x`` payload, reduce-scatter at ``(W-1)/W x``.
+
+        The compressed payloads are those of the *bucket-padded* packed
+        stream (``n_buckets x bucket_elems`` elements) — what the
+        bucketed aggregators actually encode and ship — further padded
+        to whole per-rank chunks of ``ceil(n_buckets/W)`` buckets for
+        the native RS arm. (With fewer buckets than ranks that chunk
+        padding can erase the native win entirely: one bucket over two
+        ranks scatters nothing.) Other caveats: the numbers model the
+        *native* collectives; on a 0.4.x partial-auto leg the
+        OR-AllReduce is psum-emulated at 32x the bitmap's wire volume
+        (``or_emulated_factor`` is provided to scale index traffic for
+        that leg), and ``compressed_rs``'s native path additionally
+        all-gathers the recovered per-rank gradient chunks
+        (``rs_gather_link_bytes``; the psum-trick fallback ships 2x
+        that) — a cost the ZeRO-1 optimizer path absorbs when it
+        consumes the per-rank chunks directly.
+        """
+        if workers < 1:
+            raise ValueError(f"workers must be >= 1, got {workers}")
+        W = workers
+        base = self.wire_bytes(n, grad_bytes_per_elem)
+        dense = base["dense_bytes"]
+        nb = base["n_buckets"]
+        be = base["bucket_elems"]
+
+        def payload(n_buckets: int):
+            """sketch+index bytes of ``n_buckets`` whole buckets."""
+            elems = n_buckets * be
+            sketch = (elems // self.block_elems) * self.sketch_elems * 4
+            if self.index == "bitmap":
+                return sketch, (elems // 32) * 4
+            return sketch, int(elems * self.bloom_bits_ratio / 32 + 1) * 4
+
+        full = sum(payload(nb))
+        # Native RS pads the stream to whole per-rank chunks of buckets.
+        nb_p = -(-nb // W) * W
+        if self.index == "bitmap":
+            sketch_p, idx_p = payload(nb_p)
+        else:
+            idx_p = None  # Bloom cannot be sliced: no native RS wire
+        ring = 2 * (W - 1) / W
+        rs = (W - 1) / W
+        out = {
+            "workers": W,
+            "elems": n,
+            "or_emulated_factor": 32,
+            "dense": {
+                "rank_payload_bytes": dense,
+                "link_bytes": int(dense * ring),
+            },
+            "compressed": {
+                "rank_payload_bytes": full,
+                "link_bytes": int(full * ring),
+            },
+            # Emulated RS reduces the full sketch+index on every rank
+            # (psum + local slice): AllReduce wire, RS compute only.
+            "compressed_rs_emulated": {
+                "rank_payload_bytes": full,
+                "link_bytes": int(full * ring),
+            },
+        }
+        if idx_p is not None:
+            out["compressed_rs_native"] = {
+                "rank_payload_bytes": (sketch_p + idx_p) // W,
+                "link_bytes": int((sketch_p + idx_p) * rs),
+                "rs_gather_link_bytes": int(nb_p * be * 4 * rs),
+            }
+        else:
+            out["compressed_rs_native"] = None
+        return out

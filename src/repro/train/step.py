@@ -9,9 +9,11 @@ The step is organised exactly like the paper's Algorithm 1 deployment:
      arm), ``"compressed"`` (the paper's pipeline over fixed-size
      gradient buckets: ONE sketch encode + ONE stacked sketch-``psum`` +
      ONE index OR-AllReduce for the whole pytree, optionally pipelined
-     per bucket via ``cfg.overlap``), or ``"compressed_rs"`` (same wire
-     format, but each DP rank peels only its own bucket range — the
-     natural partner of the ZeRO-1 sharded optimizer);
+     per bucket via ``cfg.overlap``), or ``"compressed_rs"`` (the
+     reduce-scatter wire: ``psum_scatter`` sketch + OR-Reduce-Scatter
+     bitmap where supported, so each DP rank receives and peels only its
+     own 1/W bucket range — the natural partner of the ZeRO-1 sharded
+     optimizer; emulated by psum + slice on 0.4.x partial-auto);
   3. the optimizer applies the aggregated gradient — replicated, or
      ZeRO-1-sharded across the DP axes (slice-update-allgather).
 
@@ -242,10 +244,17 @@ def build_train_step(api: ModelAPI, tc: TrainConfig, mesh):
     # region. Compression packs shard-locally even in pure-DP profiles:
     # vocab-sharded embedding grads would otherwise be all-gathered to
     # full size before encoding (16+ GiB/step on a 3B model).
+    step_manual = compat.train_step_manual_axes(mesh, dp_axes)
     aggregator = agg_lib.make_aggregator(
         tc.aggregator if dp > 1 else "dense", tc.compression, mesh,
         dp_axes=dp_axes, tp_axes=((prof.tp_axis or "model"),),
-        outer_manual=compat.train_step_manual_axes(mesh, dp_axes))
+        outer_manual=step_manual)
+    # Full-manual step regions (0.4.x always; new JAX when the mesh has
+    # only DP axes) can gather ZeRO-1 slices with a manual-axis
+    # all_gather — no auto axes left for Shardy to un-shard, and half
+    # the wire of the zero-pad + psum trick kept for partial-auto.
+    manual_all_gather = bool(dp_axes) and \
+        compat.full_manual_region(step_manual, mesh)
 
     def aggregate(grads, residual, pspecs):
         if isinstance(aggregator, agg_lib.DenseAggregator):
@@ -260,10 +269,9 @@ def build_train_step(api: ModelAPI, tc: TrainConfig, mesh):
         return agg, new_res
 
     def _dp_rank():
-        rank = jnp.int32(0)
-        for a in dp_axes:
-            rank = rank * mesh.shape[a] + jax.lax.axis_index(a)
-        return rank
+        # Rank-major linearization shared with the collectives layer so
+        # ZeRO-1 slice placement matches psum_scatter/all_gather tiling.
+        return coll.linear_rank(dp_axes)
 
     def apply_updates(params, opt, grads, step, pspecs):
         lr = opt_lib.lr_schedule(step, ocfg)
@@ -285,16 +293,22 @@ def build_train_step(api: ModelAPI, tc: TrainConfig, mesh):
             g_s = jax.lax.dynamic_slice_in_dim(g, start, blk, axis=d)
             new_p_s, new_st = opt_lib.opt_leaf_update(p_s, g_s, st, lr, step,
                                                       ocfg)
-            # Gather the updated slices with scatter+psum instead of
-            # jax.lax.all_gather: Shardy un-shards the auto (TP) axes
-            # around a manual-axis all_gather (full-size transient per
-            # device); psum keeps them sharded. Wire cost is 2x the
-            # optimal AG ring — revisit in the perf pass.
+            # Gather the updated slices. Full-manual regions use the
+            # rank-major tiled all_gather (optimal AG ring); partial-auto
+            # regions keep the scatter+psum trick instead: Shardy
+            # un-shards the auto (TP) axes around a manual-axis
+            # all_gather (full-size transient per device) while psum
+            # keeps them sharded, at 2x the AG ring's wire. Both add the
+            # exact per-rank delta once — bit-identical results.
             delta = (new_p_s - p_s).astype(p.dtype)
-            full = jnp.zeros(p.shape, p.dtype)
-            full = jax.lax.dynamic_update_slice_in_dim(full, delta, start,
-                                                       axis=d)
-            new_p = p + jax.lax.psum(full, dp_axes)
+            if manual_all_gather:
+                new_p = p + jax.lax.all_gather(delta, tuple(dp_axes),
+                                               axis=d, tiled=True)
+            else:
+                full = jnp.zeros(p.shape, p.dtype)
+                full = jax.lax.dynamic_update_slice_in_dim(full, delta,
+                                                           start, axis=d)
+                new_p = p + jax.lax.psum(full, dp_axes)
             return new_p, tuple(new_st[k] for k in moms)
 
         p_leaves, treedef = jax.tree.flatten(params)

@@ -12,6 +12,18 @@ Validates, on a (2, 2, 2) pod/data/model mesh:
      the overlap-pipelined schedule matches the fused one bitwise.
   4. the reduce-scatter aggregator (per-rank bucket peeling) matches the
      dense mean like the plain one.
+  5. multi-axis hierarchical OR-AllReduce with a non-power-of-2 *inner*
+     axis (a (2, 3) pod/data mesh) == numpy, on whichever wire this JAX
+     leg takes (ring+doubling vs psum emulation), the explicit
+     ring-then-doubling composition, and the chunked psum emulation ==
+     unchunked bit-for-bit.
+  6. or_reduce_scatter: every rank's chunk reassembles to the numpy OR
+     reduce (power-of-2 and non-power-of-2 axes, single and multi axis,
+     rank-major chunk order pinned against psum_scatter's).
+  7. the native reduce-scatter wire (psum_scatter sketch + OR-RS bitmap,
+     full-manual region so it runs on BOTH JAX legs) is bit-identical to
+     the emulated psum+slice wire and to CompressedAggregator over 3
+     error-feedback steps.
 """
 import os
 os.environ.setdefault(
@@ -166,9 +178,12 @@ def dyadic_tree(seed):
     return out
 
 
-def run_ef(overlap):
-    cfg = dataclasses.replace(cfg_ef, overlap=overlap)
-    agg = make_aggregator("compressed", cfg, mesh, ("pod", "data"), ())
+def run_ef(overlap, name="compressed", rs_wire="auto"):
+    cfg = dataclasses.replace(cfg_ef, overlap=overlap, rs_wire=rs_wire)
+    # The region below takes every mesh axis manual, so declare it:
+    # full-manual callers unlock the native RS wire on every JAX leg.
+    agg = make_aggregator(name, cfg, mesh, ("pod", "data"), (),
+                          outer_manual=("pod", "data", "model"))
 
     def ef_step(gs, rs):
         g = jax.tree.map(lambda a: a[0], gs)
@@ -232,6 +247,108 @@ for step in range(3):
             f"overlap schedule diverged at step {step} leaf {k}"
         assert np.array_equal(got_ef[step][1][k], got_ef_ov[step][1][k])
 print("OK overlap pipeline == fused bitwise")
+
+# ---- 5. hierarchical OR with a non-power-of-2 inner axis -------------
+from repro.core.collectives import (
+    _or_allreduce_psum, or_reduce_scatter, or_reduce_scatter_ring)
+
+mesh6 = make_mesh((2, 3), ("pod", "data"), devices=jax.devices()[:6])
+W6 = 6
+words6 = rng.integers(0, 2**32, size=(W6, 6 * 37), dtype=np.uint32)
+expect6 = np.bitwise_or.reduce(words6, axis=0)
+put6 = jax.device_put(jnp.asarray(words6.reshape(2, 3, -1)),
+                      NamedSharding(mesh6, P("pod", "data", None)))
+
+
+def _run6(fn, out_specs=P()):
+    return np.asarray(jax.jit(shard_map(
+        fn, mesh=mesh6, in_specs=P("pod", "data", None),
+        out_specs=out_specs, axis_names={"pod", "data"},
+        check_vma=False))(put6))
+
+# whatever wire this leg supports (ring/doubling vs psum emulation)
+got6 = _run6(lambda a: or_allreduce(a[0, 0], ("pod", "data")))
+assert np.array_equal(got6, expect6), "hierarchical non-pow2 or_allreduce"
+print("OK or_allreduce hierarchical non-pow2 inner axis")
+
+# the explicit ring(non-pow2 data) -> doubling(pod) composition is
+# ppermute-based and full-manual, so it runs on BOTH legs
+got6r = _run6(lambda a: or_allreduce_doubling(
+    or_allreduce_ring(a[0, 0], "data"), "pod"))
+assert np.array_equal(got6r, expect6), "ring+doubling composition"
+print("OK ring(non-pow2) + doubling composition")
+
+# chunked psum emulation == unchunked, bit-for-bit
+got6c = _run6(lambda a: _or_allreduce_psum(a[0, 0], ("pod", "data"),
+                                           chunk_words=16))
+got6u = _run6(lambda a: _or_allreduce_psum(a[0, 0], ("pod", "data"),
+                                           chunk_words=1 << 30))
+assert np.array_equal(got6c, expect6) and np.array_equal(got6u, expect6)
+print("OK chunked == unchunked psum OR emulation")
+
+# ---- 6. or_reduce_scatter ------------------------------------------
+# Multi-axis on the (2,2,2) mesh: rank-major chunks must reassemble to
+# the full numpy OR via the same out_specs tiling psum_scatter uses.
+wordsRS = rng.integers(0, 2**32, size=(W, 4 * 41), dtype=np.uint32)
+expectRS = np.bitwise_or.reduce(wordsRS, axis=0)
+putRS = jax.device_put(jnp.asarray(wordsRS.reshape(2, 2, -1)),
+                       NamedSharding(mesh, P("pod", "data", None)))
+gotRS = np.asarray(jax.jit(shard_map(
+    lambda a: or_reduce_scatter(
+        a[0, 0], ("pod", "data"),
+        axis_indices={ax: jax.lax.axis_index(ax) for ax in ("pod", "data")},
+        use_ppermute=True),
+    mesh=mesh, in_specs=P("pod", "data", None),
+    out_specs=P(("pod", "data")), axis_names={"pod", "data", "model"},
+    check_vma=False))(putRS))
+assert np.array_equal(gotRS, expectRS), "or_reduce_scatter multi-axis"
+print("OK or_reduce_scatter multi-axis rank-major")
+
+# chunk placement must match psum_scatter's exactly
+gotPS = np.asarray(jax.jit(shard_map(
+    lambda a: jax.lax.psum_scatter(a[0, 0].astype(jnp.float64
+                                                  if jax.config.jax_enable_x64
+                                                  else jnp.float32),
+                                   ("pod", "data"), scatter_dimension=0,
+                                   tiled=True),
+    mesh=mesh, in_specs=P("pod", "data", None),
+    out_specs=P(("pod", "data")), axis_names={"pod", "data", "model"},
+    check_vma=False))(jax.device_put(
+        jnp.asarray((wordsRS & 0xFFFF).astype(np.float32).reshape(2, 2, -1)),
+        NamedSharding(mesh, P("pod", "data", None)))))
+assert np.array_equal(gotPS, (wordsRS & 0xFFFF).astype(np.float32).sum(0)), \
+    "psum_scatter chunk order diverged from or_reduce_scatter's"
+print("OK psum_scatter chunk order == or_reduce_scatter")
+
+# single non-pow2 axis ring (data=3 on the 6-device mesh)
+words3 = rng.integers(0, 2**32, size=(3, 3 * 29), dtype=np.uint32)
+got3 = np.asarray(jax.jit(shard_map(
+    lambda a: or_reduce_scatter_ring(a[0], "data"),
+    mesh=mesh6, in_specs=P("data", None), out_specs=P("data"),
+    axis_names={"pod", "data"}, check_vma=False))(
+        jax.device_put(jnp.asarray(words3),
+                       NamedSharding(mesh6, P("data", None)))))
+assert np.array_equal(got3, np.bitwise_or.reduce(words3, 0)), \
+    "or_reduce_scatter_ring non-pow2"
+print("OK or_reduce_scatter_ring non-pow2 axis")
+
+# ---- 7. native RS wire == emulated == CompressedAggregator (3 EF steps)
+got_rs_native = run_ef(overlap=False, name="compressed_rs",
+                       rs_wire="native")
+got_rs_emul = run_ef(overlap=False, name="compressed_rs",
+                     rs_wire="emulate")
+for step in range(3):
+    for k in ef_shapes:
+        assert np.array_equal(got_ef[step][0][k], got_rs_native[step][0][k]), \
+            f"native RS diverged from compressed at step {step} leaf {k}"
+        assert np.array_equal(got_ef[step][1][k], got_rs_native[step][1][k]), \
+            f"native RS residuals diverged at step {step} leaf {k}"
+        assert np.array_equal(got_rs_native[step][0][k],
+                              got_rs_emul[step][0][k]), \
+            f"native RS != emulated RS at step {step} leaf {k}"
+        assert np.array_equal(got_rs_native[step][1][k],
+                              got_rs_emul[step][1][k])
+print("OK native RS wire == emulated RS == CompressedAggregator, 3 EF steps")
 
 # ---- 4. reduce-scatter aggregator on the TP-sharded tree -------------
 got_rs = jax.jit(shard_map(

@@ -1,16 +1,31 @@
-"""Unit coverage for the OR-AllReduce algorithm-selection policy.
+"""Unit coverage for the OR-AllReduce algorithm-selection policy, the
+argument validation of the collective primitives, and the per-strategy
+wire accounting.
 
-The multi-device semantics (ring == doubling == numpy OR-reduce) live in
-``tests/drivers/collectives_driver.py``; here we pin the *decision*:
-``ring_threshold`` is payload **bytes** (not element count), and axes
-whose size is not a power of two must take the ring instead of raising
-from ``or_allreduce_doubling``.
+The multi-device semantics (ring == doubling == numpy OR-reduce, the
+reduce-scatter chunk placement, native-RS bit-parity) live in
+``tests/drivers/collectives_driver.py``; here we pin the *decisions*:
+``ring_threshold`` is payload **bytes** (not element count), axes whose
+size is not a power of two must take the ring instead of raising from
+``or_allreduce_doubling``, a partial ``axis_indices`` dict is a loud
+error (silently recomputing ``axis_index`` re-binds outer-shard_map axes
+— the Shardy failure the parameter exists to avoid), the psum-emulated
+OR is chunk-invariant, and ``compressed_all_reduce`` forwards
+``outer_manual`` so fully-manual callers reach the native RS wire.
 """
+import dataclasses
+
 import numpy as np
+import jax
 import jax.numpy as jnp
 import pytest
+from jax.sharding import PartitionSpec as P
 
-from repro.core.collectives import _use_ring, or_allreduce
+from repro.compat import make_mesh, shard_map
+from repro.core import CompressionConfig
+from repro.core.collectives import (
+    AggregationState, _or_allreduce_psum, _use_ring, compressed_all_reduce,
+    init_aggregation_state, or_allreduce, or_reduce_scatter)
 
 
 def test_threshold_is_bytes_not_elements():
@@ -39,3 +54,164 @@ def test_or_allreduce_single_shard_identity():
     x = jnp.asarray(np.arange(8, dtype=np.uint32))
     out = or_allreduce(x, ())
     np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
+
+
+# ----------------------------------------------------------------------
+# axis_indices validation: a partial dict must fail loudly
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("fn", [or_allreduce, or_reduce_scatter],
+                         ids=["allreduce", "reduce_scatter"])
+def test_partial_axis_indices_dict_raises(fn):
+    x = jnp.zeros((8,), jnp.uint32)
+    with pytest.raises(ValueError, match="axis_indices is missing"):
+        fn(x, ("pod", "data"), axis_indices={"pod": jnp.int32(0)})
+    # an empty dict over real axes is just as partial
+    with pytest.raises(ValueError, match="axis_indices is missing"):
+        fn(x, ("data",), axis_indices={})
+
+
+def test_complete_axis_indices_dict_accepted():
+    # validation must not reject a complete dict (axis size 1 context)
+    mesh = make_mesh((1,), ("data",))
+    x = jnp.asarray(np.arange(8, dtype=np.uint32))
+
+    def f(a):
+        idx = {"data": jax.lax.axis_index("data")}
+        return (or_allreduce(a, ("data",), axis_indices=idx),
+                or_reduce_scatter(a, ("data",), axis_indices=idx))
+
+    ar, rs = jax.jit(shard_map(f, mesh=mesh, in_specs=P(), out_specs=(P(), P()),
+                               axis_names={"data"}, check_vma=False))(x)
+    np.testing.assert_array_equal(np.asarray(ar), np.asarray(x))
+    np.testing.assert_array_equal(np.asarray(rs), np.asarray(x))
+
+
+# ----------------------------------------------------------------------
+# chunked psum-emulated OR == unchunked (single-device harness; the
+# multi-device parity lives in the collectives driver)
+# ----------------------------------------------------------------------
+
+def test_psum_or_emulation_chunk_invariant():
+    mesh = make_mesh((1,), ("data",))
+    words = np.random.default_rng(3).integers(
+        0, 2**32, size=1009, dtype=np.uint32)
+
+    def run(chunk_words):
+        return np.asarray(jax.jit(shard_map(
+            lambda a: _or_allreduce_psum(a, ("data",),
+                                         chunk_words=chunk_words),
+            mesh=mesh, in_specs=P(), out_specs=P(),
+            axis_names={"data"}, check_vma=False))(jnp.asarray(words)))
+
+    unchunked = run(1 << 30)
+    np.testing.assert_array_equal(unchunked, words)  # 1-rank OR == identity
+    for chunk in (1, 7, 64, 1008, 1009):
+        np.testing.assert_array_equal(run(chunk), unchunked)
+    with pytest.raises(ValueError, match="chunk_words"):
+        _or_allreduce_psum(jnp.asarray(words), ("data",), chunk_words=0)
+
+
+# ----------------------------------------------------------------------
+# compressed_all_reduce must forward outer_manual (regression: the
+# wrapper used to drop it, so fully-manual callers silently degraded to
+# all-ranks peeling over the emulated wire on 0.4.x)
+# ----------------------------------------------------------------------
+
+def test_compressed_all_reduce_forwards_outer_manual(monkeypatch):
+    import repro.core.aggregators as agg_mod
+    captured = {}
+
+    def fake_make_aggregator(name, cfg, mesh, dp_axes, tp_axes=("model",),
+                             mean=True, outer_manual=None):
+        captured.update(name=name, outer_manual=outer_manual)
+        return lambda grads, state, specs: (grads, state)
+
+    monkeypatch.setattr(agg_mod, "make_aggregator", fake_make_aggregator)
+    cfg = CompressionConfig(ratio=0.5, lanes=8, rows=3)
+    grads = {"w": jnp.zeros((4,), jnp.float32)}
+    st = AggregationState(residual={"w": jnp.zeros((0,), jnp.float32)})
+    compressed_all_reduce(grads, st, {"w": P()}, mesh=None, cfg=cfg,
+                          dp_axes=("data",), reduce_scatter=True,
+                          outer_manual=("data", "model"))
+    assert captured["name"] == "compressed_rs"
+    assert captured["outer_manual"] == ("data", "model")
+
+
+def test_compressed_all_reduce_native_rs_through_wrapper():
+    """End-to-end: rs_wire='native' must work through the wrapper when
+    the caller declares a full-manual region — on 0.4.x this is exactly
+    the configuration the dropped ``outer_manual`` used to break."""
+    cfg = CompressionConfig(ratio=1.0, lanes=128, rows=6, rounds=10,
+                            chunk_blocks=8, rs_wire="native",
+                            bucket_bytes=768 * 4)
+    mesh = make_mesh((1,), ("data",))
+    g = np.zeros(2000, np.float32)
+    r = np.random.default_rng(0)
+    idx = r.choice(2000, size=100, replace=False)
+    g[idx] = r.standard_normal(100).astype(np.float32)
+    grads = {"w": jnp.asarray(g)}
+    specs = {"w": P()}
+
+    def fn(g):
+        st = init_aggregation_state(g, cfg)
+        agg, _ = compressed_all_reduce(
+            g, st, specs, mesh, cfg, dp_axes=("data",), tp_axes=(),
+            reduce_scatter=True, outer_manual=("data",))
+        return agg
+
+    out = jax.jit(shard_map(fn, mesh=mesh, in_specs=(specs,),
+                            out_specs=specs, axis_names={"data"},
+                            check_vma=False))(grads)
+    np.testing.assert_allclose(np.asarray(out["w"]),
+                               np.asarray(grads["w"]), atol=1e-6)
+
+
+# ----------------------------------------------------------------------
+# per-strategy wire accounting (CompressionConfig.strategy_wire_bytes)
+# ----------------------------------------------------------------------
+
+def test_strategy_wire_bytes_native_rs_is_one_over_w():
+    cfg = CompressionConfig(ratio=1.0, lanes=128, rows=6,
+                            bucket_bytes=768 * 4)
+    W = 4
+    # n = whole buckets, a multiple of W: no padding slack at all
+    n = cfg.bucket_elems_for(768 * 8) * 8
+    acc = cfg.strategy_wire_bytes(n, workers=W, grad_bytes_per_elem=4)
+    full = acc["compressed"]["rank_payload_bytes"]
+    nat = acc["compressed_rs_native"]["rank_payload_bytes"]
+    assert nat * W == full, "native RS payload must be exactly 1/W"
+    # emulated RS ships the AllReduce wire
+    assert acc["compressed_rs_emulated"] == acc["compressed"]
+    # link traffic: RS ring sends half of what the AR ring sends
+    assert acc["compressed_rs_native"]["link_bytes"] * 2 == \
+        acc["compressed"]["link_bytes"]
+    assert acc["dense"]["rank_payload_bytes"] == n * 4
+
+
+def test_strategy_wire_bytes_padding_and_edges():
+    cfg = CompressionConfig(ratio=1.0, lanes=128, rows=6,
+                            bucket_bytes=768 * 4)
+    # 3 buckets across 4 ranks: padded to 4, payload still strictly below
+    # the full AllReduce payload
+    n = cfg.bucket_elems_for(768 * 3) * 3
+    acc = cfg.strategy_wire_bytes(n, workers=4, grad_bytes_per_elem=4)
+    assert acc["compressed_rs_native"]["rank_payload_bytes"] \
+        < acc["compressed"]["rank_payload_bytes"]
+    # W=1: degenerate but well-defined (no wire at all on the links)
+    acc1 = cfg.strategy_wire_bytes(n, workers=1)
+    assert acc1["compressed"]["link_bytes"] == 0
+    assert acc1["compressed_rs_native"]["link_bytes"] == 0
+    with pytest.raises(ValueError, match="workers"):
+        cfg.strategy_wire_bytes(n, workers=0)
+    # Bloom index cannot be sliced per-rank: no native RS wire entry
+    bloom = dataclasses.replace(cfg, index="bloom")
+    assert bloom.strategy_wire_bytes(n, workers=4)[
+        "compressed_rs_native"] is None
+
+
+def test_rs_wire_config_validation():
+    with pytest.raises(ValueError, match="rs_wire"):
+        CompressionConfig(rs_wire="sometimes")
+    for ok in ("auto", "native", "emulate"):
+        assert CompressionConfig(rs_wire=ok).rs_wire == ok

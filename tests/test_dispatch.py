@@ -2,7 +2,9 @@
 roundtrip must be bit-for-bit identical between ``use_pallas="always"``
 (Pallas kernels, interpret mode on CPU) and ``"never"`` (jnp reference) —
 both at the compressor level and through the bucketed aggregator layer
-(fused and overlap-pipelined, plain and reduce-scatter strategies).
+(fused and overlap-pipelined, plain and reduce-scatter strategies, the
+latter over both its native psum_scatter/OR-RS wire and the psum+slice
+emulation).
 
 Test values are dyadic (sign * 2^e, small e) so every floating-point sum
 along either backend's reduction order is exact — bitwise equality then
@@ -177,6 +179,23 @@ def test_rs_matches_plain_bitwise():
         dataclasses.replace(AGG_BASE, use_pallas="never"), "compressed_rs")
     for k in plain:
         assert np.array_equal(plain[k], rs[k]), k
+
+
+# The harness mesh has only the (manual) "data" axis, so the region is
+# full-manual and the native psum_scatter + OR-Reduce-Scatter wire runs
+# on BOTH JAX legs — including pinned 0.4.x — not just where
+# compat.SUPPORTS_PSUM_SCATTER is set.
+@pytest.mark.parametrize("wire", ["native", "emulate"])
+@pytest.mark.parametrize("backend", ["never", "always"])
+def test_rs_wire_paths_match_plain_bitwise(wire, backend):
+    (plain,), res_p = _run_aggregator(
+        dataclasses.replace(AGG_BASE, use_pallas=backend), "compressed")
+    (rs,), res_r = _run_aggregator(
+        dataclasses.replace(AGG_BASE, use_pallas=backend, rs_wire=wire),
+        "compressed_rs")
+    for k in plain:
+        assert np.array_equal(plain[k], rs[k]), (wire, k)
+        assert np.array_equal(res_p[k], res_r[k]), (wire, k)
 
 
 def test_compressor_has_no_direct_backend_imports():
