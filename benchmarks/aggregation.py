@@ -30,8 +30,23 @@ counts, and wall time. The 1-axis mesh keeps the region full-manual so
 the native path runs on both JAX legs; CI fails if the native arm's
 per-rank payload is not strictly below ``compressed``'s.
 
+``--compare-innet`` (PR 4) compares dense / ``compressed`` /
+``compressed_innet`` over both its wire dtypes (idealized f32 and the
+switch-honest fixed-point fxp32) on collective-op counts, wall time and
+the tree wire model (worker sends the payload ONCE; the root link
+carries 1x the payload per direction vs the ring's 2(W-1)/W x). It also
+drives the emulated :class:`repro.net.switch.SwitchModel` (bounded SRAM
+slots, streaming windows, per-port counters) over the same per-worker
+streams and asserts the switch's integer aggregate is bit-identical to
+the in-mesh fxp32 arm. CI fails if the fxp32 root-link bytes are not
+strictly below the dense ring AllReduce's per-link bytes.
+
 ``--smoke`` shrinks every size for CI; ``--json PATH`` dumps all rows as
-a JSON artifact so the perf trajectory accumulates across CI runs.
+a JSON artifact so the perf trajectory accumulates across CI runs;
+``--normalized-json PATH`` additionally writes a compact
+strategy -> {payload/link bytes, collective ops, wall} map (the
+``BENCH_aggregation.json`` the CI smoke step drops at the repo root to
+track the perf trajectory across PRs).
 """
 
 from __future__ import annotations
@@ -44,10 +59,11 @@ import sys
 import time
 from typing import Dict, List
 
-# Must be set before jax initializes: the bucketing / reduce-scatter
-# comparisons need >1 device so the psum / OR-AllReduce / psum_scatter
-# launches are real collectives.
-if ("--compare-bucketing" in sys.argv or "--compare-rs" in sys.argv) and \
+# Must be set before jax initializes: the bucketing / reduce-scatter /
+# in-network comparisons need >1 device so the psum / OR-AllReduce /
+# psum_scatter / ppermute-tree launches are real collectives.
+if ("--compare-bucketing" in sys.argv or "--compare-rs" in sys.argv
+        or "--compare-innet" in sys.argv) and \
         "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
     os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
                                + " --xla_force_host_platform_device_count=2")
@@ -363,13 +379,183 @@ def compare_rs(smoke: bool = False) -> List[Dict]:
     return rows
 
 
+# ----------------------------------------------------------------------
+# Dense vs compressed vs in-network tree (PR 4)
+# ----------------------------------------------------------------------
+
+def compare_innet(smoke: bool = False) -> List[Dict]:
+    """The in-network aggregation story: the same bucketed stream over
+    the emulated switch tree (``compressed_innet``, f32 and fxp32 wires)
+    vs the host-side AllReduce strategies, plus a ``SwitchModel`` pass
+    over the identical per-worker streams for the SRAM/port accounting a
+    collective trace cannot show. The headline number is
+    ``root_link_bytes``: the tree's hottest link carries the payload
+    once per direction, vs every dense-ring link carrying
+    ``2(W-1)/W x`` the raw gradient.
+    """
+    from repro.core.bucketing import make_bucket_plan
+    from repro.net import FixedPointWire, SwitchModel, make_topology
+
+    W = jax.device_count()
+    mesh = compat.make_mesh((W,), ("data",))
+    width = 32 if smoke else 128
+    iters = 1 if smoke else 3
+    cfg = CompressionConfig(
+        ratio=0.3, lanes=128, rows=6, rounds=10, chunk_blocks=64,
+        use_pallas="never",
+        bucket_bytes=(8 << 10) if smoke else (256 << 10))
+    tree = _model_tree(24, width)
+    put, in_specs, out_specs, total = _stacked_inputs(tree, mesh, W)
+
+    arms = (
+        ("dense", "dense", {}),
+        ("compressed", "compressed", {}),
+        ("compressed_innet_f32", "compressed_innet", {"wire_dtype": "f32"}),
+        ("compressed_innet_fxp32", "compressed_innet",
+         {"wire_dtype": "fxp32"}),
+    )
+    rows = []
+    outs = {}
+    for arm, name, over in arms:
+        cfg_a = dataclasses.replace(cfg, **over)
+        acc = cfg_a.strategy_wire_bytes(total, W, grad_bytes_per_elem=4)
+        wire = acc[name]
+        agg = make_aggregator(name, cfg_a, mesh, ("data",), (),
+                              outer_manual=("data",))
+
+        def path(grads, agg=agg, cfg_a=cfg_a):
+            specs = jax.tree.map(lambda _: P(), grads)
+            res = coll.init_aggregation_state(grads, cfg_a).residual
+            out, _ = agg(grads, AggregationState(residual=res), specs)
+            return out
+
+        fn = jax.jit(compat.shard_map(
+            lambda st, path=path: path(jax.tree.map(lambda a: a[0], st)),
+            mesh=mesh, in_specs=(in_specs,), out_specs=out_specs,
+            axis_names={"data"}, check_vma=False))
+        counts = _count_collectives(jax.make_jaxpr(fn)(put), {})
+        outs[arm] = jax.tree.map(np.asarray, fn(put))
+        row = {"case": "compare_innet", "arm": arm, "workers": W,
+               "total_elems": total,
+               "collective_ops": sum(counts.values()),
+               "collectives": dict(sorted(counts.items())),
+               "wall_s": _time_jitted(fn, (put,), iters)}
+        row.update(wire)
+        rows.append(row)
+        print(f"[compare_innet] {arm}: "
+              f"rank_payload={row['rank_payload_bytes']} "
+              f"link={row['link_bytes']} "
+              f"root_link={row.get('root_link_bytes', '-')} "
+              f"collective_ops={row['collective_ops']} "
+              f"wall={row['wall_s']:.4f}s")
+
+    # f32 innet must be bit-identical to the AllReduce strategy (same
+    # collectives); the fxp32 wire differs only by the documented
+    # quantization roundtrip.
+    for k in outs["compressed"]:
+        assert np.array_equal(outs["compressed"][k],
+                              outs["compressed_innet_f32"][k]), k
+
+    # ---- emulated switch pass over the same per-worker streams -------
+    cfg_fx = dataclasses.replace(cfg, wire_dtype="fxp32")
+    comp = HomomorphicCompressor(cfg_fx)
+    plan = make_bucket_plan(tree, cfg_fx)
+    wire = FixedPointWire(workers=W)
+    per_worker = [jax.tree.map(lambda g, w=w: g * (1.0 + 0.1 * w), tree)
+                  for w in range(W)]
+    sks, wds = [], []
+    for pw in per_worker:
+        c = comp.compress(plan.pack(pw).reshape(-1))
+        sks.append(np.asarray(c.sketch))
+        wds.append(np.asarray(c.index_words))
+    sk_b = [s.reshape(plan.n_buckets, -1) for s in sks]
+    exp = np.asarray(wire.bucket_exponents(jnp.asarray(sk_b[0])))
+    for s in sk_b[1:]:
+        exp = np.maximum(exp, np.asarray(
+            wire.bucket_exponents(jnp.asarray(s))))
+    qs = np.stack([np.asarray(wire.encode(jnp.asarray(s), jnp.asarray(exp)))
+                   for s in sk_b])
+    wpb = plan.bucket_elems // 32
+    bms = np.stack([w.reshape(plan.n_buckets, wpb) for w in wds])
+    switch = SwitchModel(ports=W, slots=cfg_fx.switch_slots)
+    q_sum, bm_or = switch.aggregate(qs, bms,
+                                    metadata_bytes=exp.size * exp.itemsize)
+    dec = np.asarray(wire.decode(jnp.asarray(q_sum), jnp.asarray(exp)))
+    rec = comp.recover(
+        CompressedLeaf(sketch=jnp.asarray(dec.reshape(sks[0].shape)),
+                       index_words=jnp.asarray(bm_or.reshape(-1))),
+        plan.padded)
+    ref = jax.tree.map(np.asarray, plan.unpack(
+        jnp.asarray(rec).reshape(plan.n_buckets, plan.bucket_elems) / W))
+    for k in ref:
+        assert np.array_equal(ref[k], outs["compressed_innet_fxp32"][k]), (
+            f"SwitchModel aggregate diverged from the in-mesh fxp32 "
+            f"wire at leaf {k}")
+    print("[compare_innet] SwitchModel aggregate == in-mesh fxp32 wire "
+          "(bit-for-bit)")
+    report = switch.report()
+    topo = make_topology(cfg_fx.topology, mesh, ("data",))
+    by_arm = {r["arm"]: r for r in rows}
+    fx = by_arm["compressed_innet_fxp32"]
+    fx["switch_report"] = report
+    fx["tree_link_profile"] = topo.link_profile(fx["rank_payload_bytes"])
+    # The device model and the static wire accounting must agree on the
+    # root link (chunks + exponent metadata), byte for byte.
+    assert report["root_link_tx_bytes"] == fx["root_link_bytes"], (
+        report["root_link_tx_bytes"], fx["root_link_bytes"])
+    print(f"[compare_innet] switch: windows={report['windows']} "
+          f"occupancy_peak={report['occupancy_peak']}/{cfg_fx.switch_slots} "
+          f"root_link_tx={report['root_link_tx_bytes']}")
+
+    dense_link = by_arm["dense"]["link_bytes"]
+    root = fx["root_link_bytes"]
+    print(f"[compare_innet] fxp32 root link = {root} bytes vs dense ring "
+          f"link {dense_link} ({root / dense_link:.3f}x)")
+    assert root < dense_link, (
+        "in-network root link did not beat the dense ring AllReduce: "
+        f"{root} >= {dense_link}")
+    if W > 2:
+        # At W=2 the ring factor 2(W-1)/W is exactly 1, a tie by
+        # construction; above it the tree beats the compressed ring too.
+        assert root < by_arm["compressed"]["link_bytes"]
+    return rows
+
+
+def write_normalized(path: str, rows: List[Dict]) -> None:
+    """Write the compact strategy -> metrics map CI drops at the repo
+    root (``BENCH_aggregation.json``) to track the perf trajectory
+    across PRs. Rows come from the ``--compare-rs`` / ``--compare-innet``
+    arms; later rows win when an arm (e.g. ``dense``) appears in both.
+    """
+    keep = ("rank_payload_bytes", "link_bytes", "root_link_bytes",
+            "exponent_bytes", "collective_ops", "wall_s", "workers",
+            "total_elems")
+    strategies = {}
+    for r in rows:
+        if "arm" not in r:
+            continue
+        entry = {k: r[k] for k in keep if k in r}
+        # byte/op fields are deterministic; wall_s is a per-machine
+        # snapshot — round it so the committed copy does not churn on
+        # sub-0.1ms timing noise (CI artifacts keep full precision in
+        # the --json dump).
+        if "wall_s" in entry:
+            entry["wall_s"] = round(entry["wall_s"], 4)
+        strategies[r["arm"]] = entry
+    payload = {"schema": 1, "strategies": strategies}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {path}")
+
+
 def _fmt(v):
     return v if isinstance(v, str) else f"{v:.4g}"
 
 
 def main(fracs=(0.02, 0.05, 0.10, 0.25, 0.60, 1.0),
          backends=("auto",), smoke=False, compare=False, compare_rs_flag=False,
-         json_path=None):
+         compare_innet_flag=False, json_path=None, normalized_path=None):
     """One CSV row per (size fraction, compute backend).
 
     ``--backends never always`` compares the jnp reference codec against
@@ -391,11 +577,15 @@ def main(fracs=(0.02, 0.05, 0.10, 0.25, 0.60, 1.0),
             print(",".join(_fmt(r[k]) for k in keys))
     bucket_rows = compare_bucketing(smoke=smoke) if compare else []
     rs_rows = compare_rs(smoke=smoke) if compare_rs_flag else []
+    innet_rows = compare_innet(smoke=smoke) if compare_innet_flag else []
     if json_path:
         with open(json_path, "w") as f:
             json.dump({"codec": rows, "bucketing": bucket_rows,
-                       "compare_rs": rs_rows}, f, indent=2)
+                       "compare_rs": rs_rows, "compare_innet": innet_rows},
+                      f, indent=2)
         print(f"wrote {json_path}")
+    if normalized_path:
+        write_normalized(normalized_path, rs_rows + innet_rows)
 
 
 if __name__ == "__main__":
@@ -412,9 +602,17 @@ if __name__ == "__main__":
     ap.add_argument("--compare-rs", action="store_true",
                     help="dense vs compressed vs emulated-RS vs native-RS "
                          "wire bytes, collective counts and wall time")
+    ap.add_argument("--compare-innet", action="store_true",
+                    help="dense vs compressed vs the in-network tree "
+                         "(f32 + fxp32 wires), incl. the emulated "
+                         "SwitchModel parity/occupancy pass")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="dump all rows as a JSON artifact")
+    ap.add_argument("--normalized-json", default=None, metavar="PATH",
+                    help="also write the compact strategy->metrics map "
+                         "(BENCH_aggregation.json at the repo root in CI)")
     args = ap.parse_args()
     main(tuple(args.fracs), tuple(args.backends), smoke=args.smoke,
          compare=args.compare_bucketing, compare_rs_flag=args.compare_rs,
-         json_path=args.json)
+         compare_innet_flag=args.compare_innet, json_path=args.json,
+         normalized_path=args.normalized_json)

@@ -30,6 +30,12 @@ whole gradient is packed into fixed-byte flat buckets
   older ``psum`` + local-slice emulation kept as the 0.4.x partial-auto
   fallback (AllReduce wire, per-rank peel compute only); the
   ``cfg.rs_wire`` knob forces either path.
+- :class:`CompressedInNetworkAggregator` — the in-network tier (PR 4):
+  the stream goes up an emulated worker->ToR->spine switch tree
+  (:mod:`repro.net`) once per worker — integer-add sketch (via the
+  fixed-point wire when ``cfg.wire_dtype='fxp32'``) and OR bitmap —
+  instead of around a ring, so the hottest (root) link carries ``1 x``
+  the payload per direction vs the ring's ``2(W-1)/W x``.
 
 All strategies run *inside* the outer train-step ``shard_map`` (manual DP
 axes). On JAX with nested partial-manual support, packing/unpacking runs
@@ -49,6 +55,7 @@ per-bucket view of those residuals.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Protocol, Sequence, Tuple, runtime_checkable
 
 import jax
@@ -56,12 +63,27 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
+from repro.net.fixedpoint import FixedPointWire
+from repro.net.topology import make_topology, tree_all_reduce
 from .config import CompressionConfig
 from .compressor import HomomorphicCompressor, CompressedLeaf
 from .bucketing import BucketPlan, make_bucket_plan
 from .collectives import (AggregationState, dense_all_reduce, linear_rank,
                           or_allreduce, or_reduce_scatter)
 from . import topk as topk_lib
+
+
+# One-time notices for configuration knobs a strategy cannot honor (the
+# alternative — silently ignoring cfg.overlap — is the ROADMAP bug this
+# fixes). Keyed so each (strategy, reason) pair warns once per process;
+# tests reset the set to re-arm.
+_OVERLAP_WARNED: set = set()
+
+
+def _warn_overlap_ignored(key: str, message: str) -> None:
+    if key not in _OVERLAP_WARNED:
+        _OVERLAP_WARNED.add(key)
+        warnings.warn(message, UserWarning, stacklevel=3)
 
 
 @runtime_checkable
@@ -188,10 +210,17 @@ class CompressedAggregator:
     def _n_workers(self) -> int:
         if not self.mean:
             return 1
-        n = 1
+        return self._dp_world()
+
+    def _dp_world(self) -> int:
+        W = 1
         for ax in self.dp_axes:
-            n *= self.mesh.shape[ax]
-        return n
+            W *= self.mesh.shape[ax]
+        return W
+
+    def _full_manual(self) -> bool:
+        return (self.outer_manual is not None
+                and compat.full_manual_region(self.outer_manual, self.mesh))
 
     def _manual_set(self, spec_leaves) -> set:
         """Axes the nested pack/unpack regions must take manual: the TP
@@ -374,23 +403,36 @@ class CompressedReduceScatterAggregator(CompressedAggregator):
     each value exactly once.
     """
 
+    def __post_init__(self):
+        # cfg.overlap cannot be honored on the native wire: per-bucket
+        # collective staging would scatter each bucket's *interior*
+        # across ranks instead of assigning whole buckets to their
+        # peeling rank (needs a strided wire format; ROADMAP open item).
+        # Say so once instead of silently running fused.
+        if self.cfg.overlap and self._native_wire_possible():
+            _warn_overlap_ignored(
+                "rs_native",
+                "cfg.overlap is ignored on the native reduce-scatter "
+                "wire: per-bucket collective staging would scatter each "
+                "bucket's interior across ranks instead of assigning "
+                "whole buckets to their peeling rank (needs a strided "
+                "wire format — see the ROADMAP open item); running the "
+                "fused one-shot psum_scatter + OR-Reduce-Scatter instead")
+
     # -- geometry / capability helpers ---------------------------------
 
-    def _dp_world(self) -> int:
-        W = 1
-        for ax in self.dp_axes:
-            W *= self.mesh.shape[ax]
-        return W
-
-    def _full_manual(self) -> bool:
-        return (self.outer_manual is not None
-                and compat.full_manual_region(self.outer_manual, self.mesh))
+    def _native_wire_possible(self) -> bool:
+        """The wire-selection predicate shared by :meth:`_native_wire`
+        and the construction-time overlap warning — one definition so
+        the warning can never drift from the actual path taken."""
+        return self.cfg.rs_wire != "emulate" and (
+            compat.SUPPORTS_PSUM_SCATTER or self._full_manual())
 
     def _native_wire(self) -> bool:
         """Whether phase II takes the psum_scatter/OR-RS wire path."""
         if self.cfg.rs_wire == "emulate":
             return False
-        ok = compat.SUPPORTS_PSUM_SCATTER or self._full_manual()
+        ok = self._native_wire_possible()
         if not ok and self.cfg.rs_wire == "native":
             raise ValueError(
                 "rs_wire='native' requires a JAX with psum_scatter in "
@@ -495,6 +537,80 @@ class CompressedReduceScatterAggregator(CompressedAggregator):
         return full[:plan.padded].reshape(plan.n_buckets, plan.bucket_elems)
 
 
+@dataclasses.dataclass(frozen=True)
+class CompressedInNetworkAggregator(CompressedAggregator):
+    """Bucketed compressed aggregation through an emulated in-network
+    tier (PR 4): the paper's "aggregate inside the switch" deployment.
+
+    Phase I (pack/sparsify/encode) is :class:`CompressedAggregator`'s.
+    Phase II ships the stream up a worker -> ToR -> spine reduction tree
+    (:mod:`repro.net.topology`, mapped onto the DP mesh axes by
+    ``cfg.topology``) instead of a ring, in one of two wire dtypes:
+
+    - ``cfg.wire_dtype == "fxp32"`` — the honest switch wire: the
+      sketch is quantized per bucket to shared-exponent int32
+      (:class:`repro.net.fixedpoint.FixedPointWire`, overflow-free for
+      this DP world size by construction), the per-bucket exponents are
+      agreed with a ``pmax`` (4 bytes/bucket of metadata), and both the
+      integer sketch and the uint32 bitmap ride
+      :func:`repro.net.topology.tree_all_reduce` — integer add + OR,
+      the only operations a programmable data plane has. Because
+      integer adds are exact in any association order, the result is
+      bit-identical to the documented codec roundtrip (and to the psum
+      fallback on legs whose partitioner cannot run ppermute in the
+      calling region — same gating as the reduce-scatter wire).
+    - ``cfg.wire_dtype == "f32"`` — an idealized float-capable
+      aggregation tier (e.g. host-based aggregation servers): reuses
+      the sketch-``psum`` + OR-AllReduce collectives, so it is
+      bit-for-bit :class:`CompressedAggregator` and serves as the
+      innet arm's parity baseline; the tree is wire-model only (a tree
+      of *float* adds would be order-sensitive and break that parity).
+
+    The wire/occupancy story of the physical tree (bounded switch SRAM,
+    streaming windows of ``cfg.switch_slots`` bucket chunks, per-port
+    counters, straggler retransmit) is modeled by
+    :class:`repro.net.switch.SwitchModel`, which the ``--compare-innet``
+    benchmark drives over the same streams and pins against this
+    strategy's output. ``cfg.overlap`` is inapplicable here and ignored
+    with a one-time warning: the tree reduces the fused stream in one
+    shot (per-window streaming lives in the switch model, not in the
+    collective schedule).
+    """
+
+    def __post_init__(self):
+        if self.cfg.overlap:
+            _warn_overlap_ignored(
+                "innet",
+                "cfg.overlap is ignored by compressed_innet: the "
+                "in-network tree reduces the fused bucket stream in one "
+                "shot (streaming happens in the emulated switch's slot "
+                "windows, not in the collective schedule)")
+
+    def _encode(self, buckets: jnp.ndarray, plan: BucketPlan,
+                comp: HomomorphicCompressor, dp_idx):
+        cfg = self.cfg
+        c = comp.compress(buckets.reshape(-1))
+        sk, words = c.sketch, c.index_words
+        if cfg.wire_dtype == "f32":
+            # Idealized float tier: same collectives (and bits) as
+            # CompressedAggregator; see class docstring.
+            make_topology(cfg.topology, self.mesh, self.dp_axes)  # validate
+            sk = jax.lax.psum(sk, tuple(self.dp_axes))
+            words = or_allreduce(words, self.dp_axes, axis_indices=dp_idx)
+            return sk, words
+        topo = make_topology(cfg.topology, self.mesh, self.dp_axes)
+        use_pp = True if self._full_manual() else None
+        wire = FixedPointWire(workers=self._dp_world())
+        sk_b = sk.reshape(plan.n_buckets, -1)
+        exp = wire.shared_exponents(sk_b, self.dp_axes)
+        q = wire.encode(sk_b, exp)
+        q = tree_all_reduce(q, topo, "add", axis_indices=dp_idx,
+                            use_ppermute=use_pp)
+        words = tree_all_reduce(words, topo, "or", axis_indices=dp_idx,
+                                use_ppermute=use_pp)
+        return wire.decode(q, exp).reshape(sk.shape), words
+
+
 # ----------------------------------------------------------------------
 # Registry
 # ----------------------------------------------------------------------
@@ -503,6 +619,7 @@ AGGREGATORS = {
     "dense": DenseAggregator,
     "compressed": CompressedAggregator,
     "compressed_rs": CompressedReduceScatterAggregator,
+    "compressed_innet": CompressedInNetworkAggregator,
 }
 
 

@@ -21,6 +21,11 @@ The knobs mirror the paper's design space:
                    collectives launch O(n_buckets) times instead of
                    O(n_leaves); ``overlap`` stages bucket *i*'s
                    collectives against bucket *i+1*'s encode.
+- ``wire_dtype`` / ``switch_slots`` / ``topology`` — the in-network
+                   aggregation tier (PR 4): the ``compressed_innet``
+                   strategy ships the sketch over an emulated
+                   programmable-switch tree (:mod:`repro.net`),
+                   optionally quantized to overflow-free fixed point.
 """
 
 from __future__ import annotations
@@ -70,6 +75,21 @@ class CompressionConfig:
                                  #             unsupported);
                                  # "emulate" — force the emulation (for
                                  #             parity tests / benchmarks)
+    wire_dtype: str = "f32"      # compressed_innet sketch wire (PR 4):
+                                 # "f32"   — idealized float-capable
+                                 #           aggregation tier (bit-parity
+                                 #           with 'compressed');
+                                 # "fxp32" — per-bucket shared-exponent
+                                 #           int32, overflow-free for the
+                                 #           DP world size — what a real
+                                 #           switch can sum (see
+                                 #           repro.net.fixedpoint)
+    switch_slots: int = 8        # emulated switch SRAM aggregation slots
+                                 # (bucket-chunks resident per streaming
+                                 # window; see repro.net.switch)
+    topology: str = "flat"       # in-network reduction tree: "flat" (one
+                                 # switch) | "tor_spine" (one tier per DP
+                                 # axis; see repro.net.topology)
     sketch_dtype: str = "float32"
 
     def __post_init__(self):
@@ -98,6 +118,17 @@ class CompressionConfig:
             raise ValueError(
                 f"rs_wire must be 'auto', 'native' or 'emulate', "
                 f"got {self.rs_wire!r}")
+        if self.wire_dtype not in ("f32", "fxp32"):
+            raise ValueError(
+                f"wire_dtype must be 'f32' or 'fxp32', got "
+                f"{self.wire_dtype!r}")
+        if self.switch_slots < 1:
+            raise ValueError(
+                f"switch_slots must be >= 1, got {self.switch_slots}")
+        if self.topology not in ("flat", "tor_spine"):
+            raise ValueError(
+                f"topology must be 'flat' or 'tor_spine', got "
+                f"{self.topology!r}")
 
     # ---- derived static geometry -------------------------------------
 
@@ -221,7 +252,20 @@ class CompressionConfig:
           bandwidth" claim is about.
         - ``link_bytes`` — bytes each rank *sends* under the standard
           bandwidth-optimal algorithms: ring AllReduce at
-          ``2(W-1)/W x`` payload, reduce-scatter at ``(W-1)/W x``.
+          ``2(W-1)/W x`` payload, reduce-scatter at ``(W-1)/W x``. The
+          in-network tree sends the payload exactly **once** up the
+          worker's access link (switches combine in flight), so its
+          ``link_bytes`` is ``1 x`` payload.
+        - ``root_link_bytes`` (``compressed_innet`` only) — what the
+          tree's root link carries per direction: the aggregated stream
+          crosses it once no matter how many workers hang below
+          (``payload/fanout`` per child, amortized), vs every ring
+          link carrying ``2(W-1)/W x`` payload. With
+          ``wire_dtype='fxp32'`` the payload additionally ships one
+          int32 shared exponent per bucket (``exponent_bytes``); the
+          per-tier switch ingress/occupancy numbers live in
+          :meth:`repro.net.topology.Topology.link_profile` and the
+          ``SwitchModel`` report, which need the concrete topology.
 
         The compressed payloads are those of the *bucket-padded* packed
         stream (``n_buckets x bucket_elems`` elements) — what the
@@ -291,4 +335,15 @@ class CompressionConfig:
             }
         else:
             out["compressed_rs_native"] = None
+        # In-network tree (PR 4): the bucket-padded stream goes up the
+        # tree once per worker and comes back once; no per-rank chunk
+        # padding (every rank receives the whole aggregate).
+        exp_bytes = nb * 4 if self.wire_dtype == "fxp32" else 0
+        innet = full + exp_bytes
+        out["compressed_innet"] = {
+            "rank_payload_bytes": innet,
+            "link_bytes": innet if W > 1 else 0,
+            "root_link_bytes": innet if W > 1 else 0,
+            "exponent_bytes": exp_bytes,
+        }
         return out

@@ -25,7 +25,8 @@ def main():
     ap.add_argument("--global-batch", type=int, default=8)
     ap.add_argument("--seq-len", type=int, default=128)
     ap.add_argument("--aggregator",
-                    choices=["dense", "compressed", "compressed_rs"],
+                    choices=["dense", "compressed", "compressed_rs",
+                             "compressed_innet"],
                     default=None)
     ap.add_argument("--compression-ratio", type=float, default=None)
     ap.add_argument("--lr", type=float, default=None)

@@ -1,0 +1,40 @@
+"""Emulated in-network aggregation tier (PR 4).
+
+The paper's headline deployment claim is that the sketch+bitmap stream
+is *homomorphic*: aggregation can happen inside the network, a switch
+summing sketches with integer adds and OR-ing bitmaps, never
+decompressing. This package closes that architectural gap for the
+reproduction, in three layers that share one wire contract:
+
+- :mod:`repro.net.fixedpoint` — the wire codec: per-bucket
+  shared-exponent int32 quantization of the f32 sketch, sized so a
+  ``W``-worker sum can never overflow a 32-bit switch register (the
+  bitmap is already switch-native uint32 OR).
+- :mod:`repro.net.topology` — worker -> ToR -> spine reduction trees
+  mapped onto mesh axes, with the in-mesh collective analogue
+  (``tree_all_reduce``: ppermute reduce-to-root + broadcast, integer
+  add / OR only) and the per-link wire model.
+- :mod:`repro.net.switch` — the device model: a ``SwitchModel`` with a
+  bounded SRAM slot pool, streaming window aggregation of bucket
+  chunks, per-port byte/occupancy counters, and straggler
+  timeout/retransmit via :class:`repro.ft.failures.SwitchRetransmitPolicy`.
+
+The training-path consumer is the ``compressed_innet`` strategy in
+:mod:`repro.core.aggregators` (select with ``tc.aggregator``, configure
+with ``CompressionConfig.wire_dtype/switch_slots/topology``); the
+benchmark arm is ``benchmarks/aggregation.py --compare-innet``, which
+also drives the ``SwitchModel`` over the same streams and pins it
+bit-for-bit against the in-mesh result.
+"""
+
+from .fixedpoint import FixedPointWire, ceil_log2, pow2
+from .switch import PortCounters, SwitchModel
+from .topology import (TOPOLOGIES, Topology, broadcast_from_root,
+                       make_topology, reduce_to_root, tree_all_reduce)
+
+__all__ = [
+    "FixedPointWire", "ceil_log2", "pow2",
+    "PortCounters", "SwitchModel",
+    "TOPOLOGIES", "Topology", "broadcast_from_root", "make_topology",
+    "reduce_to_root", "tree_all_reduce",
+]

@@ -1,0 +1,169 @@
+"""Fixed-point homomorphic wire codec for the sketch (PR 4).
+
+A programmable switch aggregates with *integer adds on bounded-width
+registers* (SwitchML, ATP; THC makes the same point for compressed
+streams): it cannot sum float32 sketch cells. The bitmap half of the
+paper's wire format is already switch-native (uint32 OR), but the f32
+sketch needs an integer representation whose sums are meaningful — this
+module is that representation.
+
+Scheme — per-bucket shared-exponent fixed point:
+
+- The fused sketch stream is viewed per aggregation *bucket*
+  (:class:`repro.core.bucketing.BucketPlan`), ``(n_buckets, K)`` with
+  ``K = blocks_per_bucket * rows * lanes`` cells.
+- Every worker derives a per-bucket exponent from its local slice
+  (:meth:`FixedPointWire.bucket_exponents`) and the aggregation tier
+  takes the elementwise **max** across workers (a 4-byte-per-bucket
+  metadata reduction — ``jax.lax.pmax`` in-mesh, a max over ports on
+  the emulated switch). All workers then quantize against the *same*
+  scale, which is what makes the integer sums homomorphic.
+- ``encode``: ``q = rint(y * 2^(M - e))`` as int32, where ``M =
+  mantissa_bits`` and ``e`` is the shared exponent of the bucket's
+  global max-magnitude cell.
+- ``decode``: ``float32(q) * 2^(e - M)``.
+
+Overflow-freedom by construction: ``frexp`` gives ``max|y| < 2^e``, so
+every quantized cell satisfies ``|q| <= 2^M``. With ``M = 30 -
+ceil_log2(W)`` a sum over ``W`` workers is bounded by ``W * 2^M <=
+2^30 < 2^31`` — no int32 add in the tree (or in a 32-bit switch
+register) can overflow, for any input values.
+
+Documented roundtrip (what the ``compressed_innet`` aggregator must
+reproduce exactly, and what the tests pin): aggregating worker sketches
+``y_w`` over this wire yields
+
+    decode(sum_w encode(y_w, e), e)   with   e = max_w exponents(y_w)
+
+where the integer sum is exact (order-free), so the only inexact steps
+are the two documented roundings: ``rint`` at encode, and the
+float32 cast of the summed integer at decode (exact when the sum fits
+24 mantissa bits — in particular, dyadic test values are round-tripped
+bit-exactly). Scales are powers of two built by exponent-field bit
+manipulation (:func:`pow2`), never ``exp2``/``ldexp``, so the scaling
+itself is always exact.
+
+Exponents are clamped to ``>= M - 126`` so the encode scale ``2^(M-e)``
+stays a normal float32: buckets whose global max magnitude is below
+``2^(M-126)`` (~1e-29 at W=2) quantize with a capped scale, losing only
+values below float32's own normal range.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def ceil_log2(n: int) -> int:
+    """Smallest k with 2**k >= n (n >= 1)."""
+    if n < 1:
+        raise ValueError(f"n must be >= 1, got {n}")
+    return int(n - 1).bit_length()
+
+
+def pow2(k: jnp.ndarray) -> jnp.ndarray:
+    """Exact float32 ``2**k`` for int32 ``k`` in [-126, 127].
+
+    Built by writing the biased exponent field directly —
+    ``exp2``/``ldexp`` are transcendental-lowered on some backends and
+    not guaranteed bit-exact, which would break the codec's homomorphism
+    contract.
+    """
+    k = jnp.asarray(k, jnp.int32)
+    return jax.lax.bitcast_convert_type((k + 127) << 23, jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedPointWire:
+    """Shared-exponent int32 wire for ``workers``-way sketch sums."""
+
+    workers: int
+
+    def __post_init__(self):
+        if self.workers < 1:
+            raise ValueError(f"workers must be >= 1, got {self.workers}")
+        if self.mantissa_bits < 2:
+            raise ValueError(
+                f"workers={self.workers} leaves {self.mantissa_bits} "
+                "mantissa bits; the fixed-point wire needs at least 2")
+
+    # ---- static geometry ---------------------------------------------
+
+    @property
+    def headroom_bits(self) -> int:
+        """Bits reserved so W-worker sums cannot overflow int32."""
+        return ceil_log2(self.workers)
+
+    @property
+    def mantissa_bits(self) -> int:
+        """M — value bits per worker: |q| <= 2^M, W*2^M <= 2^30."""
+        return 30 - self.headroom_bits
+
+    @property
+    def min_exponent(self) -> int:
+        """Exponent floor keeping the encode scale 2^(M-e) normal."""
+        return self.mantissa_bits - 126
+
+    # ---- codec --------------------------------------------------------
+
+    def bucket_exponents(self, buckets: jnp.ndarray) -> jnp.ndarray:
+        """Per-bucket exponent of this worker's slice: ``(nb, K) -> (nb,)``.
+
+        ``frexp`` semantics: ``max|y| < 2^e``, clamped to
+        :attr:`min_exponent`. An all-zero slice reports
+        :attr:`min_exponent` (NOT frexp's ``e = 0``): with top-k
+        sparsification a worker's slice of a bucket is often entirely
+        zero, and letting it report 0 would dominate the cross-worker
+        ``pmax`` and inflate the shared quantization step for every
+        bucket whose true global max is below 1.0. Aggregate across
+        workers with an elementwise max before encoding.
+        """
+        maxabs = jnp.max(jnp.abs(buckets.astype(jnp.float32)), axis=-1)
+        _, e = jnp.frexp(maxabs)
+        e = jnp.where(maxabs == 0, jnp.int32(self.min_exponent),
+                      e.astype(jnp.int32))
+        return jnp.maximum(e, jnp.int32(self.min_exponent))
+
+    def shared_exponents(self, buckets: jnp.ndarray,
+                         dp_axes: Sequence[str]) -> jnp.ndarray:
+        """Globally-agreed per-bucket exponents, inside ``shard_map``."""
+        return jax.lax.pmax(self.bucket_exponents(buckets), tuple(dp_axes))
+
+    def encode(self, buckets: jnp.ndarray,
+               exponents: jnp.ndarray) -> jnp.ndarray:
+        """``(nb, K) f32 -> (nb, K) int32`` against shared exponents."""
+        scale = pow2(self.mantissa_bits - exponents)[..., None]
+        return jnp.rint(buckets.astype(jnp.float32) * scale
+                        ).astype(jnp.int32)
+
+    def decode(self, q: jnp.ndarray, exponents: jnp.ndarray) -> jnp.ndarray:
+        """``(nb, K) int32 (summed) -> (nb, K) f32``."""
+        scale = pow2(exponents - self.mantissa_bits)[..., None]
+        return q.astype(jnp.float32) * scale
+
+    # ---- reference ----------------------------------------------------
+
+    def roundtrip_reference(self, worker_buckets) -> jnp.ndarray:
+        """The documented aggregate: shared-exponent quantize every
+        worker's ``(nb, K)`` sketch slice, integer-sum, dequantize.
+
+        This is the ground truth the ``compressed_innet`` aggregator's
+        fxp32 wire must match bit-for-bit (the in-mesh tree computes the
+        same integer sum, which is exact in any association order).
+        """
+        worker_buckets = [jnp.asarray(b, jnp.float32) for b in worker_buckets]
+        if len(worker_buckets) > self.workers:
+            raise ValueError(
+                f"{len(worker_buckets)} summands on a wire sized for "
+                f"{self.workers} workers (overflow bound would not hold)")
+        e = self.bucket_exponents(worker_buckets[0])
+        for b in worker_buckets[1:]:
+            e = jnp.maximum(e, self.bucket_exponents(b))
+        q = self.encode(worker_buckets[0], e)
+        for b in worker_buckets[1:]:
+            q = q + self.encode(b, e)
+        return self.decode(q, e)

@@ -1,0 +1,191 @@
+"""Emulated programmable aggregation switch (PR 4).
+
+:class:`SwitchModel` is the *device model* of the in-network tier: a
+single switch with ``ports`` children, a bounded pool of ``slots`` SRAM
+aggregation slots, and the only two operations a programmable data plane
+offers — 32-bit integer add and 32-bit OR. The in-mesh collective
+analogue (what ``compressed_innet`` actually runs under jit) is the tree
+schedule in :mod:`repro.net.topology`; this host-level model is what the
+benchmarks, tests, and fault-tolerance scenarios drive to account for
+what a real switch would do:
+
+- **Bounded SRAM, streaming windows.** A job's sketch stream is far
+  larger than switch SRAM (THC's core constraint). The stream arrives as
+  per-bucket *chunks*; the switch opens a window of at most ``slots``
+  chunks, aggregates every port's contribution into the resident slots,
+  emits the reduced chunks upstream, and recycles the slots for the next
+  window. ``report()["occupancy_peak"]`` is the high-water slot count —
+  never above ``slots`` by construction.
+- **Integer semantics only.** Chunk dtypes are enforced: int32 for the
+  sketch (quantized through :mod:`repro.net.fixedpoint`), uint32 for the
+  bitmap. Float chunks raise ``TypeError``. Register width is honest
+  too: a window whose integer sum would exceed int32 raises
+  ``OverflowError`` — unreachable when the stream was sized by
+  :class:`repro.net.fixedpoint.FixedPointWire` for this port count,
+  which is exactly the codec's contract.
+- **Per-port counters.** RX bytes/chunks per child port, TX bytes of the
+  broadcast back down, and the root-link bytes (the aggregated stream
+  crosses the uplink once per direction, regardless of port count).
+- **Straggler timeout/retransmit.** Optional per-chunk arrival times are
+  checked against a :class:`repro.ft.failures.SwitchRetransmitPolicy`:
+  late chunks cost retransmits (accounted on the port's RX counter and
+  recorded on the policy), and a port later than the retry budget raises
+  :class:`repro.ft.failures.SwitchStragglerTimeout`.
+
+Port numbering is the worker's rank-major linear index over the DP axes
+(:func:`repro.core.collectives.linear_rank`), matching the in-mesh tree.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.ft.failures import SwitchRetransmitPolicy
+
+_INT32_MAX = np.int64(2**31 - 1)
+_INT32_MIN = np.int64(-(2**31))
+
+
+@dataclasses.dataclass
+class PortCounters:
+    """Per-child-port byte/chunk accounting (one aggregation run)."""
+    rx_bytes: int = 0
+    tx_bytes: int = 0
+    rx_chunks: int = 0
+    retransmits: int = 0
+
+
+@dataclasses.dataclass
+class SwitchModel:
+    """One emulated aggregation switch (see module docstring)."""
+
+    ports: int
+    slots: int
+    policy: Optional[SwitchRetransmitPolicy] = None
+
+    def __post_init__(self):
+        if self.ports < 1:
+            raise ValueError(f"ports must be >= 1, got {self.ports}")
+        if self.slots < 1:
+            raise ValueError(f"slots must be >= 1, got {self.slots}")
+        self.reset()
+
+    def reset(self) -> None:
+        self.port_counters: List[PortCounters] = [
+            PortCounters() for _ in range(self.ports)]
+        self.root_tx_bytes = 0      # aggregated stream up the root link
+        self.root_rx_bytes = 0      # broadcast coming back down it
+        self.windows = 0
+        self.occupancy_peak = 0
+        if self.policy is not None:
+            self.policy.events.clear()  # counters and events are per run
+
+    # ------------------------------------------------------------------
+
+    @staticmethod
+    def _check_chunks(name: str, a: np.ndarray, dtype, ports: int):
+        if a.dtype != dtype:
+            raise TypeError(
+                f"{name} chunks must be {np.dtype(dtype).name} (a "
+                f"programmable switch has 32-bit integer registers "
+                f"only), got {a.dtype}; quantize the sketch through "
+                "repro.net.fixedpoint.FixedPointWire")
+        if a.ndim < 2 or a.shape[0] != ports:
+            raise ValueError(
+                f"{name} chunks must be (ports={ports}, n_chunks, ...), "
+                f"got shape {a.shape}")
+
+    def aggregate(self, sketch_chunks, bitmap_chunks,
+                  arrival_s=None,
+                  metadata_bytes: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+        """Stream ``(ports, n_chunks, ...)`` chunk arrays through the
+        slot pool; returns the (int-summed sketch, OR'd bitmap) chunks.
+
+        ``arrival_s``: optional per-port arrival delays in seconds,
+        shaped ``(ports,)`` or ``(ports, n_chunks)``, measured from each
+        window's open — fed to the straggler policy when one is set.
+
+        ``metadata_bytes``: per-stream metadata riding the same links
+        once per direction — e.g. the fxp32 shared-exponent vector
+        (``n_buckets * 4`` bytes), which every child sends up and the
+        broadcast carries back down. Counted on each port's RX/TX and on
+        the root link so the switch report reconciles exactly with
+        ``CompressionConfig.strategy_wire_bytes``'s tree accounting.
+        """
+        sk = np.asarray(sketch_chunks)
+        bm = np.asarray(bitmap_chunks)
+        self._check_chunks("sketch", sk, np.int32, self.ports)
+        self._check_chunks("bitmap", bm, np.uint32, self.ports)
+        if sk.shape[1] != bm.shape[1]:
+            raise ValueError(
+                f"sketch has {sk.shape[1]} chunks, bitmap {bm.shape[1]}")
+        n_chunks = sk.shape[1]
+        if arrival_s is not None:
+            arrival_s = np.broadcast_to(
+                np.asarray(arrival_s, np.float64).reshape(self.ports, -1),
+                (self.ports, n_chunks))
+
+        if metadata_bytes < 0:
+            raise ValueError(
+                f"metadata_bytes must be >= 0, got {metadata_bytes}")
+        if metadata_bytes:
+            for pc in self.port_counters:
+                pc.rx_bytes += metadata_bytes
+                pc.tx_bytes += metadata_bytes
+            self.root_tx_bytes += metadata_bytes
+            self.root_rx_bytes += metadata_bytes
+
+        out_sk = np.zeros(sk.shape[1:], np.int32)
+        out_bm = np.zeros(bm.shape[1:], np.uint32)
+        for w0 in range(0, n_chunks, self.slots):
+            w1 = min(w0 + self.slots, n_chunks)
+            window = self.windows
+            self.windows += 1
+            self.occupancy_peak = max(self.occupancy_peak, w1 - w0)
+            up_bytes = out_sk[w0:w1].nbytes + out_bm[w0:w1].nbytes
+            for p in range(self.ports):
+                pc = self.port_counters[p]
+                chunk_bytes = sk[p, w0:w1].nbytes + bm[p, w0:w1].nbytes
+                retries = 0
+                if self.policy is not None and arrival_s is not None:
+                    retries = self.policy.on_window(
+                        window, p, float(arrival_s[p, w0:w1].max()),
+                        chunk_bytes)
+                pc.rx_bytes += chunk_bytes * (1 + retries)
+                pc.rx_chunks += w1 - w0
+                pc.retransmits += retries
+                pc.tx_bytes += up_bytes       # broadcast back down
+            # A real switch accumulates port by port, so every *running*
+            # partial sum must fit the 32-bit register, not just the
+            # final one. (FixedPointWire-sized streams satisfy this for
+            # any port subset: |partial| <= W * 2^M <= 2^30.)
+            partials = np.cumsum(sk[:, w0:w1].astype(np.int64), axis=0)
+            if partials.size and (partials.max(initial=0) > _INT32_MAX
+                                  or partials.min(initial=0) < _INT32_MIN):
+                raise OverflowError(
+                    f"window {window}: a running {self.ports}-port sum "
+                    "overflows a 32-bit switch register — the stream was "
+                    "not sized by FixedPointWire for this port count")
+            out_sk[w0:w1] = partials[-1].astype(np.int32)
+            out_bm[w0:w1] = np.bitwise_or.reduce(bm[:, w0:w1], axis=0)
+            self.root_tx_bytes += up_bytes
+            self.root_rx_bytes += up_bytes
+        return out_sk, out_bm
+
+    # ------------------------------------------------------------------
+
+    def report(self) -> Dict[str, object]:
+        return {
+            "ports": self.ports,
+            "slots": self.slots,
+            "windows": self.windows,
+            "occupancy_peak": self.occupancy_peak,
+            "root_link_tx_bytes": self.root_tx_bytes,
+            "root_link_rx_bytes": self.root_rx_bytes,
+            "per_port": [dataclasses.asdict(pc) for pc in self.port_counters],
+            "retransmit_events": (list(self.policy.events)
+                                  if self.policy is not None else []),
+        }

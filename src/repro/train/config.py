@@ -19,6 +19,10 @@ class TrainConfig:
                                          # | "compressed_rs" (peel only
                                          #   this DP-rank's bucket range;
                                          #   pairs with zero1)
+                                         # | "compressed_innet" (emulated
+                                         #   in-network switch tree —
+                                         #   repro.net; wire via
+                                         #   compression.wire_dtype)
     compression: CompressionConfig = dataclasses.field(
         default_factory=CompressionConfig)
     optimizer: OptimizerConfig = dataclasses.field(
@@ -30,5 +34,8 @@ class TrainConfig:
     seed: int = 0
 
     def __post_init__(self):
-        if self.aggregator not in ("dense", "compressed", "compressed_rs"):
-            raise ValueError(self.aggregator)
+        from repro.core.aggregators import AGGREGATORS  # avoid import cycle
+        if self.aggregator not in AGGREGATORS:
+            raise ValueError(
+                f"unknown aggregator {self.aggregator!r}; have "
+                f"{sorted(AGGREGATORS)}")

@@ -9,11 +9,16 @@ The step is organised exactly like the paper's Algorithm 1 deployment:
      arm), ``"compressed"`` (the paper's pipeline over fixed-size
      gradient buckets: ONE sketch encode + ONE stacked sketch-``psum`` +
      ONE index OR-AllReduce for the whole pytree, optionally pipelined
-     per bucket via ``cfg.overlap``), or ``"compressed_rs"`` (the
+     per bucket via ``cfg.overlap``), ``"compressed_rs"`` (the
      reduce-scatter wire: ``psum_scatter`` sketch + OR-Reduce-Scatter
      bitmap where supported, so each DP rank receives and peels only its
      own 1/W bucket range — the natural partner of the ZeRO-1 sharded
-     optimizer; emulated by psum + slice on 0.4.x partial-auto);
+     optimizer; emulated by psum + slice on 0.4.x partial-auto), or
+     ``"compressed_innet"`` (the emulated in-network tier of PR 4: the
+     stream rides a worker->ToR->spine switch tree from ``repro.net``
+     once per worker — integer-add sketch over the fixed-point wire
+     when ``compression.wire_dtype='fxp32'``, OR bitmap — so the
+     hottest link carries 1x the payload vs the ring's 2(W-1)/W x);
   3. the optimizer applies the aggregated gradient — replicated, or
      ZeRO-1-sharded across the DP axes (slice-update-allgather).
 

@@ -24,6 +24,15 @@ Validates, on a (2, 2, 2) pod/data/model mesh:
      full-manual region so it runs on BOTH JAX legs) is bit-identical to
      the emulated psum+slice wire and to CompressedAggregator over 3
      error-feedback steps.
+  8. the in-network tier (PR 4): tree_all_reduce (ppermute reduce-to-root
+     + broadcast) == psum / numpy-OR on pow2 and non-pow2 axes for both
+     topology kinds and on the no-ppermute fallback wire; compressed_innet
+     with wire_dtype=f32 is bit-identical to CompressedAggregator over 3
+     EF steps; with wire_dtype=fxp32 it equals BOTH the f32 path (dyadic
+     values round-trip the fixed-point wire exactly) and an independent
+     host-side replay of the documented codec roundtrip
+     (shared-exponent quantize -> integer sum -> dequantize -> peel),
+     for the flat and tor_spine topologies.
 """
 import os
 os.environ.setdefault(
@@ -178,8 +187,9 @@ def dyadic_tree(seed):
     return out
 
 
-def run_ef(overlap, name="compressed", rs_wire="auto"):
-    cfg = dataclasses.replace(cfg_ef, overlap=overlap, rs_wire=rs_wire)
+def run_ef(overlap, name="compressed", rs_wire="auto", **overrides):
+    cfg = dataclasses.replace(cfg_ef, overlap=overlap, rs_wire=rs_wire,
+                              **overrides)
     # The region below takes every mesh axis manual, so declare it:
     # full-manual callers unlock the native RS wire on every JAX leg.
     agg = make_aggregator(name, cfg, mesh, ("pod", "data"), (),
@@ -349,6 +359,126 @@ for step in range(3):
         assert np.array_equal(got_rs_native[step][1][k],
                               got_rs_emul[step][1][k])
 print("OK native RS wire == emulated RS == CompressedAggregator, 3 EF steps")
+
+# ---- 8. in-network tier: tree collectives + compressed_innet ---------
+from repro.core.bucketing import make_bucket_plan
+from repro.core.compressor import HomomorphicCompressor, CompressedLeaf
+from repro.net import FixedPointWire, make_topology, tree_all_reduce
+
+# tree_all_reduce == psum / numpy OR, both topology kinds, (2,2)-axes
+ints8 = rng.integers(-2**20, 2**20, size=(W, 257), dtype=np.int32)
+wordsT = rng.integers(0, 2**32, size=(W, 123), dtype=np.uint32)
+for kind in ("flat", "tor_spine"):
+    topoK = make_topology(kind, mesh, ("pod", "data"))
+
+    def tree_fn(a, w, topoK=topoK, use_ppermute=True):
+        idx = {ax: jax.lax.axis_index(ax) for ax in ("pod", "data")}
+        return (tree_all_reduce(a[0, 0], topoK, "add", axis_indices=idx,
+                                use_ppermute=use_ppermute),
+                tree_all_reduce(w[0, 0], topoK, "or", axis_indices=idx,
+                                use_ppermute=use_ppermute))
+
+    for use_pp in (True, False):   # ppermute tree vs psum/OR fallback
+        gi, gw = jax.jit(shard_map(
+            lambda a, w, t=topoK, u=use_pp: tree_fn(a, w, t, u),
+            mesh=mesh,
+            in_specs=(P("pod", "data", None), P("pod", "data", None)),
+            out_specs=(P(), P()), axis_names={"pod", "data", "model"},
+            check_vma=False))(
+            jax.device_put(jnp.asarray(ints8.reshape(2, 2, -1)),
+                           NamedSharding(mesh, P("pod", "data", None))),
+            jax.device_put(jnp.asarray(wordsT.reshape(2, 2, -1)),
+                           NamedSharding(mesh, P("pod", "data", None))))
+        assert np.array_equal(np.asarray(gi), ints8.sum(0)), (kind, use_pp)
+        assert np.array_equal(np.asarray(gw),
+                              np.bitwise_or.reduce(wordsT, 0)), (kind, use_pp)
+    print(f"OK tree_all_reduce == psum/OR ({kind}, tree + fallback)")
+
+# non-pow2 inner axis on the 6-device mesh
+ints6 = rng.integers(-2**20, 2**20, size=(6, 37), dtype=np.int32)
+topo6 = make_topology("tor_spine", mesh6, ("pod", "data"))
+g6 = jax.jit(shard_map(
+    lambda a: tree_all_reduce(a[0, 0], topo6, "add", use_ppermute=True),
+    mesh=mesh6, in_specs=P("pod", "data", None), out_specs=P(),
+    axis_names={"pod", "data"}, check_vma=False))(
+    jax.device_put(jnp.asarray(ints6.reshape(2, 3, -1)),
+                   NamedSharding(mesh6, P("pod", "data", None))))
+assert np.array_equal(np.asarray(g6), ints6.sum(0)), "tree non-pow2"
+print("OK tree_all_reduce non-pow2 inner axis")
+
+# compressed_innet, f32 wire: bit-identical to CompressedAggregator
+got_in = run_ef(overlap=False, name="compressed_innet")
+for step in range(3):
+    for k in ef_shapes:
+        assert np.array_equal(got_ef[step][0][k], got_in[step][0][k]), \
+            f"innet f32 diverged from compressed at step {step} leaf {k}"
+        assert np.array_equal(got_ef[step][1][k], got_in[step][1][k]), \
+            f"innet f32 residuals diverged at step {step} leaf {k}"
+print("OK compressed_innet f32 == CompressedAggregator, 3 EF steps")
+
+# fxp32 wire: the dyadic values (sign * 2^e, |e| <= 2) sit far inside
+# the fixed-point mantissa budget, so the documented quantize -> integer
+# sum -> dequantize roundtrip is *exact* here and the fxp32 output must
+# equal the f32 path bit-for-bit — for both topology kinds.
+got_fx = run_ef(overlap=False, name="compressed_innet",
+                wire_dtype="fxp32")
+got_fx_ts = run_ef(overlap=False, name="compressed_innet",
+                   wire_dtype="fxp32", topology="tor_spine")
+for step in range(3):
+    for k in ef_shapes:
+        assert np.array_equal(got_ef[step][0][k], got_fx[step][0][k]), \
+            f"innet fxp32 diverged at step {step} leaf {k}"
+        assert np.array_equal(got_fx[step][0][k], got_fx_ts[step][0][k]), \
+            f"tor_spine diverged from flat at step {step} leaf {k}"
+        assert np.array_equal(got_ef[step][1][k], got_fx[step][1][k])
+        assert np.array_equal(got_fx[step][1][k], got_fx_ts[step][1][k])
+print("OK innet fxp32 (flat & tor_spine) == f32 on dyadic data, 3 EF steps")
+
+# Independent host replay of the documented codec roundtrip: per-worker
+# sparsify (the same per-leaf EF reference as section 3) -> pack ->
+# compress -> shared-exponent quantize -> int32 sum -> dequantize -> OR
+# bitmaps -> peel -> unpack/W. Must match the in-mesh fxp32 wire
+# bit-for-bit at every step.
+cfg_fx = dataclasses.replace(cfg_ef, wire_dtype="fxp32")
+comp_fx = HomomorphicCompressor(cfg_fx)
+plan_fx = make_bucket_plan(
+    {k: np.zeros(sh, np.float32) for k, sh in ef_shapes.items()}, cfg_fx)
+wire_fx = FixedPointWire(workers=n_workers)
+res_fx = {k: np.zeros((n_workers, int(np.prod(sh))), np.float32)
+          for k, sh in ef_shapes.items()}
+for step in range(3):
+    per_w = [dyadic_tree(100 + 10 * step + w) for w in range(n_workers)]
+    sks, wrds = [], []
+    for w in range(n_workers):
+        sp_tree = {}
+        for k, sh in ef_shapes.items():
+            n = int(np.prod(sh))
+            kk = max(1, int(n * cfg_fx.topk_ratio))
+            sp, nr = topk_lib.apply_error_feedback(
+                jnp.asarray(per_w[w][k].reshape(-1)),
+                jnp.asarray(res_fx[k][w]), kk, exact=True)
+            sp_tree[k] = np.asarray(sp).reshape(sh)
+            res_fx[k][w] = np.asarray(nr)
+        c = comp_fx.compress(plan_fx.pack(
+            jax.tree.map(jnp.asarray, sp_tree)).reshape(-1))
+        sks.append(np.asarray(c.sketch))
+        wrds.append(np.asarray(c.index_words))
+    dec = wire_fx.roundtrip_reference(
+        [s.reshape(plan_fx.n_buckets, -1) for s in sks])
+    w_or = wrds[0]
+    for wd in wrds[1:]:
+        w_or = w_or | wd
+    rec = comp_fx.recover(
+        CompressedLeaf(sketch=jnp.asarray(dec).reshape(sks[0].shape),
+                       index_words=jnp.asarray(w_or)), plan_fx.padded)
+    ref_tree = plan_fx.unpack(
+        jnp.asarray(rec).reshape(plan_fx.n_buckets, plan_fx.bucket_elems)
+        / n_workers)
+    out_fx = got_fx[step][0]
+    for k in ef_shapes:
+        assert np.array_equal(out_fx[k], np.asarray(ref_tree[k])), \
+            f"fxp32 wire != documented codec roundtrip, step {step} leaf {k}"
+print("OK innet fxp32 == host replay of the documented codec roundtrip")
 
 # ---- 4. reduce-scatter aggregator on the TP-sharded tree -------------
 got_rs = jax.jit(shard_map(

@@ -94,6 +94,21 @@ l_rs = run(TrainConfig(aggregator="compressed_rs", optimizer=opt,
 print("comp rs+z1   :", [round(x, 4) for x in l_rs])
 l_tk = run(tc_comp_tk)
 print("comp topk+EF :", [round(x, 4) for x in l_tk])
+# in-network tier (PR 4): f32 wire reuses the AllReduce collectives and
+# must match the lossless compressed run exactly; the fxp32 switch wire
+# adds only the documented ~2^-29-relative quantization, so the curve
+# must stay on track.
+import dataclasses
+l_in = run(TrainConfig(aggregator="compressed_innet", optimizer=opt,
+                       compression=tc_comp_ll.compression,
+                       sharding=ShardingProfile(zero1=True), remat="block"))
+print("comp innet   :", [round(x, 4) for x in l_in])
+l_in_fx = run(TrainConfig(
+    aggregator="compressed_innet", optimizer=opt,
+    compression=dataclasses.replace(tc_comp_ll.compression,
+                                    wire_dtype="fxp32"),
+    sharding=ShardingProfile(zero1=True), remat="block"))
+print("comp innet fx:", [round(x, 4) for x in l_in_fx])
 
 assert l_dense[-1] < l_dense[0], "dense loss must decrease"
 assert all(abs(a - b) < 1e-4 for a, b in zip(l_dense, l_dz)), \
@@ -106,4 +121,9 @@ assert all(abs(a - b) < 1e-4 for a, b in zip(l_ll, l_rs)), \
     f"reduce-scatter aggregator diverged from lossless: {l_ll} vs {l_rs}"
 assert l_tk[-1] < l_tk[0] and l_tk[-1] < 5.0, \
     f"topk+EF compressed failed to converge: {l_tk}"
+assert all(abs(a - b) < 1e-4 for a, b in zip(l_ll, l_in)), \
+    f"in-network f32 wire diverged from lossless: {l_ll} vs {l_in}"
+assert all(abs(a - b) < 0.05 for a, b in zip(l_ll, l_in_fx)), \
+    f"in-network fxp32 wire off-track: {l_ll} vs {l_in_fx}"
+assert l_in_fx[-1] < l_in_fx[0], "fxp32 training loss must decrease"
 print("ALL OK")

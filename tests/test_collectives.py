@@ -14,6 +14,7 @@ OR is chunk-invariant, and ``compressed_all_reduce`` forwards
 ``outer_manual`` so fully-manual callers reach the native RS wire.
 """
 import dataclasses
+import warnings
 
 import numpy as np
 import jax
@@ -215,3 +216,132 @@ def test_rs_wire_config_validation():
         CompressionConfig(rs_wire="sometimes")
     for ok in ("auto", "native", "emulate"):
         assert CompressionConfig(rs_wire=ok).rs_wire == ok
+
+
+@pytest.mark.parametrize("workers", [3, 6])
+def test_strategy_wire_bytes_padding_non_power_of_two(workers):
+    """Non-power-of-two worker counts: the native-RS chunk padding must
+    round n_buckets up to the next multiple of W (and ONLY the native
+    arm pays it); every other strategy ships the bucket-padded stream
+    unpadded. Exact byte accounting, derived independently here."""
+    cfg = CompressionConfig(ratio=1.0, lanes=128, rows=6,
+                            bucket_bytes=768 * 4)
+    assert cfg.block_elems == 768 and cfg.bucket_quantum == 768
+    nb = 7                                    # 7 buckets: ceil(7/3)*3 = 9,
+    n = 768 * nb                              # ceil(7/6)*6 = 12
+    acc = cfg.strategy_wire_bytes(n, workers=workers, grad_bytes_per_elem=4)
+
+    per_bucket = 768 * 4 + (768 // 32) * 4    # ratio=1 sketch + bitmap
+    full = nb * per_bucket
+    nb_p = -(-nb // workers) * workers
+    ring = 2 * (workers - 1) / workers
+    rs = (workers - 1) / workers
+
+    assert acc["dense"]["rank_payload_bytes"] == n * 4
+    assert acc["dense"]["link_bytes"] == int(n * 4 * ring)
+    assert acc["compressed"]["rank_payload_bytes"] == full
+    assert acc["compressed"]["link_bytes"] == int(full * ring)
+    assert acc["compressed_rs_emulated"] == acc["compressed"]
+    nat = acc["compressed_rs_native"]
+    assert nat["rank_payload_bytes"] == nb_p * per_bucket // workers
+    assert nat["link_bytes"] == int(nb_p * per_bucket * rs)
+    # chunk padding never erases the win for this bucket count
+    assert nat["rank_payload_bytes"] < full
+    # innet: bucket-padded stream once up the tree, no chunk padding;
+    # fxp32 additionally ships one int32 exponent per bucket
+    innet = acc["compressed_innet"]
+    assert innet["rank_payload_bytes"] == full
+    assert innet["link_bytes"] == full
+    assert innet["root_link_bytes"] == full
+    assert innet["exponent_bytes"] == 0
+    fx = dataclasses.replace(cfg, wire_dtype="fxp32")
+    innet_fx = fx.strategy_wire_bytes(n, workers,
+                                      grad_bytes_per_elem=4)[
+        "compressed_innet"]
+    assert innet_fx["exponent_bytes"] == nb * 4
+    assert innet_fx["rank_payload_bytes"] == full + nb * 4
+    assert innet_fx["root_link_bytes"] == full + nb * 4
+    # the tree's hottest link beats every ring link at W >= 3
+    assert innet_fx["root_link_bytes"] < acc["compressed"]["link_bytes"]
+    assert innet_fx["root_link_bytes"] < acc["dense"]["link_bytes"]
+
+
+def test_strategy_wire_bytes_innet_single_worker_no_wire():
+    cfg = CompressionConfig(ratio=1.0, lanes=128, rows=6,
+                            bucket_bytes=768 * 4, wire_dtype="fxp32")
+    acc = cfg.strategy_wire_bytes(768 * 2, workers=1)
+    assert acc["compressed_innet"]["link_bytes"] == 0
+    assert acc["compressed_innet"]["root_link_bytes"] == 0
+    # the aggregate a rank holds is still the full (metadata-bearing) one
+    assert acc["compressed_innet"]["rank_payload_bytes"] > 0
+
+
+# ----------------------------------------------------------------------
+# make_aggregator: unknown strategies must name the valid ones
+# ----------------------------------------------------------------------
+
+def test_make_aggregator_unknown_strategy_names_valid_ones():
+    from repro.core.aggregators import AGGREGATORS, make_aggregator
+    cfg = CompressionConfig(ratio=0.5, lanes=8, rows=3)
+    mesh = make_mesh((1,), ("data",))
+    with pytest.raises(ValueError) as ei:
+        make_aggregator("compresed", cfg, mesh, ("data",))
+    msg = str(ei.value)
+    assert "compresed" in msg
+    for name in ("dense", "compressed", "compressed_rs",
+                 "compressed_innet"):
+        assert name in msg, f"error message should offer {name!r}: {msg}"
+    assert set(AGGREGATORS) == {"dense", "compressed", "compressed_rs",
+                                "compressed_innet"}
+
+
+# ----------------------------------------------------------------------
+# cfg.overlap on wires that cannot stage per bucket: one-time warning
+# ----------------------------------------------------------------------
+
+def _arm_overlap_warning(monkeypatch):
+    import repro.core.aggregators as agg_mod
+    monkeypatch.setattr(agg_mod, "_OVERLAP_WARNED", set())
+    return agg_mod
+
+
+def test_native_rs_overlap_warns_once(monkeypatch):
+    """ROADMAP open item: cfg.overlap used to be *silently* ignored on
+    the native RS wire. It must now say so (naming the strided-wire
+    reason), exactly once per process."""
+    agg_mod = _arm_overlap_warning(monkeypatch)
+    cfg = CompressionConfig(ratio=1.0, lanes=128, rows=6, overlap=True,
+                            bucket_bytes=768 * 4)
+    mesh = make_mesh((1,), ("data",))
+    with pytest.warns(UserWarning, match="overlap.*strided wire"):
+        agg_mod.make_aggregator("compressed_rs", cfg, mesh, ("data",),
+                                outer_manual=("data",))
+    # one-time: a second construction stays quiet
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        agg_mod.make_aggregator("compressed_rs", cfg, mesh, ("data",),
+                                outer_manual=("data",))
+
+
+def test_emulated_rs_overlap_does_not_warn(monkeypatch):
+    """The emulated wire *does* honor overlap — no warning there."""
+    agg_mod = _arm_overlap_warning(monkeypatch)
+    cfg = CompressionConfig(ratio=1.0, lanes=128, rows=6, overlap=True,
+                            rs_wire="emulate", bucket_bytes=768 * 4)
+    mesh = make_mesh((1,), ("data",))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        agg_mod.make_aggregator("compressed_rs", cfg, mesh, ("data",),
+                                outer_manual=("data",))
+
+
+def test_innet_overlap_warns_once(monkeypatch):
+    agg_mod = _arm_overlap_warning(monkeypatch)
+    cfg = CompressionConfig(ratio=1.0, lanes=128, rows=6, overlap=True,
+                            bucket_bytes=768 * 4)
+    mesh = make_mesh((1,), ("data",))
+    with pytest.warns(UserWarning, match="compressed_innet"):
+        agg_mod.make_aggregator("compressed_innet", cfg, mesh, ("data",))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        agg_mod.make_aggregator("compressed_innet", cfg, mesh, ("data",))

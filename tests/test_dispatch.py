@@ -2,9 +2,9 @@
 roundtrip must be bit-for-bit identical between ``use_pallas="always"``
 (Pallas kernels, interpret mode on CPU) and ``"never"`` (jnp reference) —
 both at the compressor level and through the bucketed aggregator layer
-(fused and overlap-pipelined, plain and reduce-scatter strategies, the
-latter over both its native psum_scatter/OR-RS wire and the psum+slice
-emulation).
+(fused and overlap-pipelined; plain, reduce-scatter — over both its
+native psum_scatter/OR-RS wire and the psum+slice emulation — and the
+in-network tree, over both its f32 and fixed-point wires).
 
 Test values are dyadic (sign * 2^e, small e) so every floating-point sum
 along either backend's reduction order is exact — bitwise equality then
@@ -135,7 +135,8 @@ def _run_aggregator(cfg, name, steps=1):
     return outs, jax.tree.map(np.asarray, res)
 
 
-@pytest.mark.parametrize("name", ["compressed", "compressed_rs"])
+@pytest.mark.parametrize("name", ["compressed", "compressed_rs",
+                                  "compressed_innet"])
 @pytest.mark.parametrize("overlap", [False, True], ids=["fused", "overlap"])
 def test_bucketed_aggregate_backend_parity(name, overlap):
     cfg_n = dataclasses.replace(AGG_BASE, use_pallas="never", overlap=overlap)
@@ -179,6 +180,24 @@ def test_rs_matches_plain_bitwise():
         dataclasses.replace(AGG_BASE, use_pallas="never"), "compressed_rs")
     for k in plain:
         assert np.array_equal(plain[k], rs[k]), k
+
+
+# The innet f32 wire reuses the AllReduce collectives (bit-parity by
+# construction); the fxp32 wire quantizes through the fixed-point codec,
+# whose roundtrip is *exact* on these dyadic test values (sign * 2^e,
+# |e| <= 2, far inside the mantissa budget) — so both wire dtypes must
+# reproduce the plain strategy bit-for-bit here, on both backends.
+@pytest.mark.parametrize("wire_dtype", ["f32", "fxp32"])
+@pytest.mark.parametrize("backend", ["never", "always"])
+def test_innet_wires_match_plain_bitwise(wire_dtype, backend):
+    (plain,), res_p = _run_aggregator(
+        dataclasses.replace(AGG_BASE, use_pallas=backend), "compressed")
+    (innet,), res_i = _run_aggregator(
+        dataclasses.replace(AGG_BASE, use_pallas=backend,
+                            wire_dtype=wire_dtype), "compressed_innet")
+    for k in plain:
+        assert np.array_equal(plain[k], innet[k]), (wire_dtype, k)
+        assert np.array_equal(res_p[k], res_i[k]), (wire_dtype, k)
 
 
 # The harness mesh has only the (manual) "data" axis, so the region is

@@ -1,0 +1,470 @@
+"""Unit coverage for the in-network aggregation tier (PR 4):
+``repro.net.fixedpoint`` (the overflow-free shared-exponent int32 wire),
+``repro.net.switch`` (bounded-SRAM streaming SwitchModel + straggler
+retransmit), ``repro.net.topology`` (tree construction, validation, wire
+model), and the ``compressed_innet`` aggregator's single-rank semantics.
+
+The multi-worker semantics — tree_all_reduce == psum/OR on real fake
+devices, innet == CompressedAggregator over 3 EF steps, fxp32 == the
+documented codec roundtrip — live in
+``tests/drivers/collectives_driver.py``.
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import make_mesh, shard_map
+from repro.core import CompressionConfig, HomomorphicCompressor, CompressedLeaf
+from repro.core.aggregators import make_aggregator
+from repro.core.bucketing import make_bucket_plan
+from repro.core.collectives import AggregationState, init_aggregation_state
+from repro.ft.failures import SwitchRetransmitPolicy, SwitchStragglerTimeout
+from repro.net import (FixedPointWire, SwitchModel, Topology, ceil_log2,
+                       make_topology, pow2, tree_all_reduce)
+
+
+# ----------------------------------------------------------------------
+# fixedpoint: geometry, overflow bound, roundtrip
+# ----------------------------------------------------------------------
+
+def test_ceil_log2():
+    assert [ceil_log2(n) for n in (1, 2, 3, 4, 5, 8, 9)] == \
+        [0, 1, 2, 2, 3, 3, 4]
+    with pytest.raises(ValueError):
+        ceil_log2(0)
+
+
+def test_pow2_exact_across_range():
+    ks = np.arange(-126, 128, dtype=np.int32)
+    got = np.asarray(pow2(jnp.asarray(ks)))
+    np.testing.assert_array_equal(got, np.exp2(ks.astype(np.float64))
+                                  .astype(np.float32))
+
+
+@pytest.mark.parametrize("workers,mantissa", [(1, 30), (2, 29), (3, 28),
+                                              (4, 28), (8, 27), (100, 23)])
+def test_mantissa_headroom_split(workers, mantissa):
+    w = FixedPointWire(workers=workers)
+    assert w.mantissa_bits == mantissa
+    assert w.headroom_bits + w.mantissa_bits == 30
+
+
+def test_wire_validation():
+    with pytest.raises(ValueError, match="workers"):
+        FixedPointWire(workers=0)
+    with pytest.raises(ValueError, match="mantissa"):
+        FixedPointWire(workers=1 << 29)
+
+
+@pytest.mark.parametrize("workers", [1, 2, 7, 16])
+def test_encode_bound_and_sum_never_overflows(workers):
+    """|q| <= 2^M per worker, so the W-way sum provably fits int32 —
+    checked against an int64 reference on adversarial inputs (huge,
+    tiny, mixed-sign, all-equal-to-max)."""
+    w = FixedPointWire(workers=workers)
+    r = np.random.default_rng(workers)
+    cases = [
+        r.standard_normal((5, 64)).astype(np.float32) * 1e30,
+        r.standard_normal((5, 64)).astype(np.float32) * 1e-30,
+        np.full((2, 64), 3.14e7, np.float32),
+        np.zeros((2, 64), np.float32),
+    ]
+    for x in cases:
+        e = w.bucket_exponents(jnp.asarray(x))
+        qs = [np.asarray(w.encode(jnp.asarray(x), e))
+              for _ in range(workers)]
+        for q in qs:
+            assert np.abs(q).max(initial=0) <= 2 ** w.mantissa_bits
+        total64 = np.sum([q.astype(np.int64) for q in qs], axis=0)
+        assert total64.max(initial=0) <= 2**31 - 1
+        assert total64.min(initial=0) >= -(2**31)
+        total32 = np.sum(qs, axis=0, dtype=np.int32)
+        np.testing.assert_array_equal(total32, total64.astype(np.int32))
+
+
+def test_roundtrip_exact_on_dyadic():
+    """Dyadic values well inside the mantissa budget round-trip
+    bit-exactly — the property the EF parity tests lean on."""
+    r = np.random.default_rng(0)
+    x = (r.choice([-1.0, 1.0], size=(4, 128))
+         * np.exp2(r.integers(-2, 3, size=(4, 128)))).astype(np.float32)
+    x[:, ::3] = 0.0
+    w = FixedPointWire(workers=4)
+    got = np.asarray(w.roundtrip_reference([jnp.asarray(x)] * 4))
+    np.testing.assert_array_equal(got, 4.0 * x)
+
+
+def test_roundtrip_error_within_half_ulp_of_scale():
+    r = np.random.default_rng(1)
+    x = r.standard_normal((3, 256)).astype(np.float32)
+    w = FixedPointWire(workers=2)
+    e = w.bucket_exponents(jnp.asarray(x))
+    dec = np.asarray(w.decode(w.encode(jnp.asarray(x), e), e))
+    # one quantization step is 2^(e-M); rint is within half a step
+    step = np.exp2(np.asarray(e, np.float64) - w.mantissa_bits)
+    assert (np.abs(dec - x) <= 0.5 * step[:, None] + 1e-12).all()
+
+
+def test_tiny_buckets_clamp_not_inf():
+    # 1e-35 is a *normal* float32 whose frexp exponent (-116) sits below
+    # the clamp floor; without the clamp the encode scale 2^(M - e)
+    # would overflow to inf. (True subnormals come back from jnp.frexp
+    # with exponent 0 — harmless, they just quantize to 0.)
+    w = FixedPointWire(workers=2)
+    x = jnp.full((1, 8), 1e-35, jnp.float32)
+    e = w.bucket_exponents(x)
+    assert int(e[0]) == w.min_exponent
+    q = w.encode(x, e)
+    assert np.isfinite(np.asarray(w.decode(q, e))).all()
+    assert np.abs(np.asarray(q)).max() <= 2 ** w.mantissa_bits
+    sub = jnp.full((1, 8), 1e-40, jnp.float32)
+    es = w.bucket_exponents(sub)
+    assert (np.asarray(w.encode(sub, es)) == 0).all()
+
+
+def test_all_zero_slice_does_not_inflate_shared_exponent():
+    """With top-k sparsification a worker's slice of a bucket is often
+    all zeros; it must report the exponent *floor*, not frexp's 0 —
+    otherwise the pmax-shared exponent (and so the quantization step)
+    jumps to 1.0-scale for every sub-1.0 bucket the moment any worker
+    goes quiet there."""
+    w = FixedPointWire(workers=2)
+    small = jnp.full((1, 64), 2.0**-11, jnp.float32)   # true exponent -10
+    zeros = jnp.zeros((1, 64), jnp.float32)
+    e_small = w.bucket_exponents(small)
+    e_zero = w.bucket_exponents(zeros)
+    assert int(e_zero[0]) == w.min_exponent
+    shared = jnp.maximum(e_small, e_zero)
+    assert int(shared[0]) == int(e_small[0]) == -10
+    # the roundtrip at the shared exponent is exact for this power of two
+    got = np.asarray(w.roundtrip_reference([small, zeros]))
+    np.testing.assert_array_equal(got, np.asarray(small))
+
+
+def test_roundtrip_reference_rejects_oversubscription():
+    w = FixedPointWire(workers=2)
+    x = jnp.ones((1, 8), jnp.float32)
+    with pytest.raises(ValueError, match="overflow"):
+        w.roundtrip_reference([x, x, x])
+
+
+# ----------------------------------------------------------------------
+# switch: streaming windows, counters, integer-only semantics
+# ----------------------------------------------------------------------
+
+def _chunks(ports=3, n_chunks=7, k=16, seed=0):
+    r = np.random.default_rng(seed)
+    sk = r.integers(-2**20, 2**20, size=(ports, n_chunks, k),
+                    dtype=np.int32)
+    bm = r.integers(0, 2**32, size=(ports, n_chunks, k // 2),
+                    dtype=np.uint32)
+    return sk, bm
+
+
+def test_switch_aggregate_matches_numpy():
+    sk, bm = _chunks()
+    sw = SwitchModel(ports=3, slots=2)
+    osk, obm = sw.aggregate(sk, bm)
+    np.testing.assert_array_equal(osk, sk.sum(0, dtype=np.int32))
+    np.testing.assert_array_equal(obm, np.bitwise_or.reduce(bm, 0))
+
+
+def test_switch_streaming_windows_and_counters():
+    sk, bm = _chunks(ports=3, n_chunks=7)
+    sw = SwitchModel(ports=3, slots=2)
+    sw.aggregate(sk, bm)
+    rep = sw.report()
+    assert rep["windows"] == 4                  # ceil(7 / 2)
+    assert rep["occupancy_peak"] == 2           # never above the pool
+    stream_bytes = sk[0].nbytes + bm[0].nbytes
+    for pc in rep["per_port"]:
+        assert pc["rx_bytes"] == stream_bytes   # each child sends once
+        assert pc["tx_bytes"] == stream_bytes   # broadcast back down
+        assert pc["retransmits"] == 0
+    # aggregated stream crosses the root link once per direction
+    assert rep["root_link_tx_bytes"] == stream_bytes
+    assert rep["root_link_rx_bytes"] == stream_bytes
+
+
+def test_switch_metadata_bytes_reconcile_with_wire_model():
+    """The fxp32 shared-exponent vector rides the same links: with
+    ``metadata_bytes`` the switch's root-link counters must equal the
+    stream payload + metadata — the exact number
+    ``strategy_wire_bytes["compressed_innet"]["root_link_bytes"]``
+    models."""
+    sk, bm = _chunks(ports=2, n_chunks=4)
+    sw = SwitchModel(ports=2, slots=2)
+    sw.aggregate(sk, bm, metadata_bytes=16)
+    rep = sw.report()
+    stream_bytes = sk[0].nbytes + bm[0].nbytes
+    assert rep["root_link_tx_bytes"] == stream_bytes + 16
+    assert rep["root_link_rx_bytes"] == stream_bytes + 16
+    for pc in rep["per_port"]:
+        assert pc["rx_bytes"] == stream_bytes + 16
+        assert pc["tx_bytes"] == stream_bytes + 16
+    with pytest.raises(ValueError, match="metadata_bytes"):
+        sw.aggregate(sk, bm, metadata_bytes=-1)
+
+
+def test_switch_reset_clears_policy_events():
+    sk, bm = _chunks(ports=2, n_chunks=2)
+    pol = SwitchRetransmitPolicy(timeout_s=0.1, max_retries=3)
+    sw = SwitchModel(ports=2, slots=4, policy=pol)
+    sw.aggregate(sk, bm, arrival_s=np.array([[0.0, 0.0], [0.25, 0.25]]))
+    assert sw.report()["retransmit_events"]
+    sw.reset()
+    assert sw.report()["retransmit_events"] == []
+    assert pol.events == []
+
+
+def test_switch_slot_pool_bounds_occupancy():
+    sk, bm = _chunks(ports=2, n_chunks=5)
+    big = SwitchModel(ports=2, slots=100)
+    big.aggregate(sk, bm)
+    assert big.report()["occupancy_peak"] == 5  # whole stream resident
+    assert big.report()["windows"] == 1
+
+
+def test_switch_rejects_floats_and_bad_shapes():
+    sk, bm = _chunks(ports=2)
+    sw = SwitchModel(ports=2, slots=2)
+    with pytest.raises(TypeError, match="int32"):
+        sw.aggregate(sk.astype(np.float32), bm)
+    with pytest.raises(TypeError, match="uint32"):
+        sw.aggregate(sk, bm.astype(np.int32))
+    with pytest.raises(ValueError, match="ports"):
+        sw.aggregate(sk[:1], bm[:1])
+    with pytest.raises(ValueError, match="chunks"):
+        sw.aggregate(sk, bm[:, :1])
+    with pytest.raises(ValueError, match="slots"):
+        SwitchModel(ports=2, slots=0)
+
+
+def test_switch_register_overflow_raises():
+    sk = np.full((2, 1, 4), 2**30, np.int32)    # 2 * 2^30 > int32
+    bm = np.zeros((2, 1, 2), np.uint32)
+    with pytest.raises(OverflowError, match="32-bit"):
+        SwitchModel(ports=2, slots=1).aggregate(sk, bm)
+
+
+def test_switch_intermediate_overflow_raises():
+    """A port-by-port accumulator overflows on the *running* sum even
+    when the final sum is back in range — the register is 32-bit at
+    every step, not just at the end."""
+    sk = np.array([2**30, 2**30, -(2**30)], np.int32).reshape(3, 1, 1)
+    bm = np.zeros((3, 1, 1), np.uint32)
+    with pytest.raises(OverflowError, match="running"):
+        SwitchModel(ports=3, slots=1).aggregate(sk, bm)
+
+
+# ----------------------------------------------------------------------
+# switch straggler timeout / retransmit (the ft hook)
+# ----------------------------------------------------------------------
+
+def test_switch_straggler_retransmit_accounting():
+    sk, bm = _chunks(ports=2, n_chunks=4)
+    pol = SwitchRetransmitPolicy(timeout_s=0.1, max_retries=3)
+    sw = SwitchModel(ports=2, slots=2, policy=pol)
+    # port 1 arrives 0.25s late on every chunk: 2 elapsed timeout
+    # periods -> 2 retransmits per window
+    arrivals = np.array([[0.01] * 4, [0.25] * 4])
+    osk, obm = sw.aggregate(sk, bm, arrival_s=arrivals)
+    np.testing.assert_array_equal(osk, sk.sum(0, dtype=np.int32))
+    rep = sw.report()
+    stream_bytes = sk[0].nbytes + bm[0].nbytes
+    assert rep["per_port"][0]["retransmits"] == 0
+    assert rep["per_port"][1]["retransmits"] == 4      # 2 per window x 2
+    assert rep["per_port"][1]["rx_bytes"] == 3 * stream_bytes
+    assert len(rep["retransmit_events"]) == 2          # one per window
+    assert all(ev["port"] == 1 for ev in rep["retransmit_events"])
+
+
+def test_switch_straggler_past_budget_raises():
+    sk, bm = _chunks(ports=2, n_chunks=2)
+    pol = SwitchRetransmitPolicy(timeout_s=0.1, max_retries=1)
+    sw = SwitchModel(ports=2, slots=4, policy=pol)
+    arrivals = np.array([[0.0, 0.0], [0.45, 0.45]])    # 4 periods late
+    with pytest.raises(SwitchStragglerTimeout, match="port 1"):
+        sw.aggregate(sk, bm, arrival_s=arrivals)
+
+
+def test_retransmit_policy_validation():
+    with pytest.raises(ValueError, match="timeout_s"):
+        SwitchRetransmitPolicy(timeout_s=0.0)
+    with pytest.raises(ValueError, match="max_retries"):
+        SwitchRetransmitPolicy(max_retries=-1)
+    pol = SwitchRetransmitPolicy(timeout_s=0.1, max_retries=5)
+    assert pol.retries_for(0.05) == 0
+    assert pol.retries_for(0.1) == 0
+    assert pol.retries_for(0.11) == 1
+    assert pol.retries_for(0.35) == 3
+
+
+# ----------------------------------------------------------------------
+# topology: construction, validation, wire model
+# ----------------------------------------------------------------------
+
+def test_make_topology_flat_and_tor_spine():
+    mesh = make_mesh((1,), ("data",))
+    flat = make_topology("flat", mesh, ("data",))
+    assert flat.levels == ("data",) and flat.fanouts == (1,)
+    with pytest.raises(ValueError, match="tor_spine"):
+        make_topology("tor_spine", mesh, ("data",))
+    with pytest.raises(ValueError, match="unknown topology"):
+        make_topology("clos", mesh, ("data",))
+    with pytest.raises(ValueError, match="no axes"):
+        make_topology("flat", mesh, ("pod",))
+    with pytest.raises(ValueError, match="at least one"):
+        make_topology("flat", mesh, ())
+
+
+def test_topology_tree_accounting():
+    # a 3x4 pod/data world: ToRs group the ICI-near inner axis
+    topo = Topology(kind="tor_spine", levels=("data", "pod"), sizes=(4, 3))
+    assert topo.workers == 12
+    assert topo.fanouts == (4, 3)
+    assert topo.switches_per_level() == (3, 1)
+    prof = topo.link_profile(1000)
+    assert prof["worker_link_bytes"] == 1000
+    assert prof["root_link_bytes"] == 1000      # aggregated stream, once
+    assert prof["switch_ingress_bytes"] == (4000, 3000)
+    flat = Topology(kind="flat", levels=("data", "pod"), sizes=(4, 3))
+    assert flat.fanouts == (12,)
+    assert flat.switches_per_level() == (1,)
+    assert flat.link_profile(1000)["switch_ingress_bytes"] == (12000,)
+
+
+def test_topology_single_worker_no_wire():
+    topo = Topology(kind="flat", levels=("data",), sizes=(1,))
+    prof = topo.link_profile(1000)
+    assert prof["worker_link_bytes"] == 0
+    assert prof["root_link_bytes"] == 0
+
+
+def test_tree_all_reduce_identity_on_one_rank():
+    mesh = make_mesh((1,), ("data",))
+    topo = make_topology("flat", mesh, ("data",))
+    ints = jnp.asarray(np.arange(-8, 8, dtype=np.int32))
+    words = jnp.asarray(np.arange(16, dtype=np.uint32))
+
+    def f(a, w):
+        return (tree_all_reduce(a, topo, "add"),
+                tree_all_reduce(w, topo, "or"))
+
+    gi, gw = jax.jit(shard_map(f, mesh=mesh, in_specs=(P(), P()),
+                               out_specs=(P(), P()), axis_names={"data"},
+                               check_vma=False))(ints, words)
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(ints))
+    np.testing.assert_array_equal(np.asarray(gw), np.asarray(words))
+
+
+def test_tree_all_reduce_rejects_floats_and_bad_combine():
+    mesh = make_mesh((1,), ("data",))
+    topo = make_topology("flat", mesh, ("data",))
+    with pytest.raises(TypeError, match="integer adds only"):
+        tree_all_reduce(jnp.zeros((4,), jnp.float32), topo, "add")
+    with pytest.raises(TypeError, match="unsigned"):
+        tree_all_reduce(jnp.zeros((4,), jnp.int32), topo, "or")
+    with pytest.raises(ValueError, match="combine"):
+        tree_all_reduce(jnp.zeros((4,), jnp.int32), topo, "xor")
+    with pytest.raises(ValueError, match="axis_indices is missing"):
+        tree_all_reduce(jnp.zeros((4,), jnp.int32), topo, "add",
+                        axis_indices={})
+
+
+# ----------------------------------------------------------------------
+# compressed_innet aggregator (single-rank semantics; multi-rank parity
+# is in the collectives driver)
+# ----------------------------------------------------------------------
+
+_CFG = CompressionConfig(ratio=1.0, lanes=128, rows=6, rounds=10,
+                         chunk_blocks=8, bucket_bytes=768 * 4)
+
+
+def _sparse_tree(seed=0):
+    r = np.random.default_rng(seed)
+    out = {}
+    for k, n in (("a", 2000), ("b", 300)):
+        g = np.zeros(n, np.float32)
+        idx = r.choice(n, size=n // 20, replace=False)
+        g[idx] = r.standard_normal(idx.size).astype(np.float32)
+        out[k] = g
+    return out
+
+
+def _run_innet(cfg, grads):
+    mesh = make_mesh((1,), ("data",))
+    specs = {k: P() for k in grads}
+    agg = make_aggregator("compressed_innet", cfg, mesh, ("data",), (),
+                          outer_manual=("data",))
+
+    def fn(g):
+        st = init_aggregation_state(g, cfg)
+        out, _ = agg(g, st, specs)
+        return out
+
+    out = jax.jit(shard_map(fn, mesh=mesh, in_specs=(specs,),
+                            out_specs=specs, axis_names={"data"},
+                            check_vma=False))(
+        jax.tree.map(jnp.asarray, grads))
+    return jax.tree.map(np.asarray, out)
+
+
+def test_innet_f32_wire_is_lossless_single_rank():
+    grads = _sparse_tree()
+    out = _run_innet(_CFG, grads)
+    for k in grads:
+        np.testing.assert_allclose(out[k], grads[k], atol=1e-6)
+
+
+def test_innet_fxp32_matches_codec_roundtrip_single_rank():
+    """Even at W=1 the fxp32 wire quantizes — the output must equal the
+    documented host-side roundtrip exactly, not the float input."""
+    cfg = dataclasses.replace(_CFG, wire_dtype="fxp32")
+    grads = _sparse_tree()
+    out = _run_innet(cfg, grads)
+
+    comp = HomomorphicCompressor(cfg)
+    plan = make_bucket_plan(grads, cfg)
+    wire = FixedPointWire(workers=1)
+    c = comp.compress(plan.pack(jax.tree.map(jnp.asarray, grads)
+                                ).reshape(-1))
+    dec = wire.roundtrip_reference(
+        [np.asarray(c.sketch).reshape(plan.n_buckets, -1)])
+    rec = comp.recover(
+        CompressedLeaf(sketch=jnp.asarray(dec).reshape(c.sketch.shape),
+                       index_words=c.index_words), plan.padded)
+    ref = jax.tree.map(np.asarray, plan.unpack(
+        jnp.asarray(rec).reshape(plan.n_buckets, plan.bucket_elems)))
+    for k in grads:
+        np.testing.assert_array_equal(out[k], ref[k])
+
+
+def test_innet_tor_spine_raises_on_single_axis_mesh():
+    cfg = dataclasses.replace(_CFG, topology="tor_spine")
+    with pytest.raises(ValueError, match="tor_spine"):
+        _run_innet(cfg, _sparse_tree())
+
+
+def test_innet_config_validation():
+    with pytest.raises(ValueError, match="wire_dtype"):
+        CompressionConfig(wire_dtype="int8")
+    with pytest.raises(ValueError, match="switch_slots"):
+        CompressionConfig(switch_slots=0)
+    with pytest.raises(ValueError, match="topology"):
+        CompressionConfig(topology="butterfly")
+    cfg = CompressionConfig(wire_dtype="fxp32", switch_slots=4,
+                            topology="tor_spine")
+    assert cfg.wire_dtype == "fxp32"
+
+
+def test_train_config_accepts_innet():
+    from repro.train.config import TrainConfig
+    assert TrainConfig(aggregator="compressed_innet").aggregator == \
+        "compressed_innet"
+    with pytest.raises(ValueError, match="compressed_innet"):
+        TrainConfig(aggregator="nope")
