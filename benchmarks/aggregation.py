@@ -41,12 +41,21 @@ streams and asserts the switch's integer aggregate is bit-identical to
 the in-mesh fxp32 arm. CI fails if the fxp32 root-link bytes are not
 strictly below the dense ring AllReduce's per-link bytes.
 
+``--compare-overlap`` (PR 5) sweeps the shared stream scheduler's
+wire-chunk counts per strategy (AllReduce chunks incl. a non-divisible
+grid, per-rank-aligned native-RS chunks, innet switch windows), pins
+every chunked output bit-identical to the fused wire, and reports
+collective *launches* (scan trip counts included) — CI fails if the
+overlapped native RS launch count is not affine in ``n_chunks`` with a
+positive slope, i.e. if the per-chunk scatter schedule secretly fused.
+
 ``--smoke`` shrinks every size for CI; ``--json PATH`` dumps all rows as
 a JSON artifact so the perf trajectory accumulates across CI runs;
 ``--normalized-json PATH`` additionally writes a compact
-strategy -> {payload/link bytes, collective ops, wall} map (the
-``BENCH_aggregation.json`` the CI smoke step drops at the repo root to
-track the perf trajectory across PRs).
+strategy -> {payload/link bytes, collective ops, wall} map plus the
+per-chunk overlap sweep rows (the ``BENCH_aggregation.json`` the CI
+smoke step drops at the repo root to track the perf trajectory across
+PRs).
 """
 
 from __future__ import annotations
@@ -63,7 +72,8 @@ from typing import Dict, List
 # in-network comparisons need >1 device so the psum / OR-AllReduce /
 # psum_scatter / ppermute-tree launches are real collectives.
 if ("--compare-bucketing" in sys.argv or "--compare-rs" in sys.argv
-        or "--compare-innet" in sys.argv) and \
+        or "--compare-innet" in sys.argv
+        or "--compare-overlap" in sys.argv) and \
         "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
     os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
                                + " --xla_force_host_platform_device_count=2")
@@ -159,6 +169,28 @@ def _count_collectives(obj, counts: Dict[str, int]):
                 if hasattr(sub, "eqns") or hasattr(sub, "jaxpr"):
                     _count_collectives(sub, counts)
     return counts
+
+
+def _count_collective_launches(obj, weight: int = 1) -> int:
+    """Total runtime collective *launches*: like :func:`_count_collectives`
+    but a collective inside a ``lax.scan`` body counts once per trip —
+    the number that must scale as O(n_chunks) for the streamed wire
+    schedules (the static eqn count stays O(1) there, hiding the
+    pipeline). ``while_loop`` bodies keep weight 1 (trip count unknown;
+    no collective runs inside the peel loops)."""
+    jaxpr = getattr(obj, "jaxpr", obj)
+    total = 0
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if any(name.startswith(p) for p in _COLLECTIVE_PREFIXES):
+            total += weight
+        sub_w = weight * int(eqn.params.get("length", 1)) \
+            if name == "scan" else weight
+        for v in eqn.params.values():
+            for sub in (v if isinstance(v, (list, tuple)) else (v,)):
+                if hasattr(sub, "eqns") or hasattr(sub, "jaxpr"):
+                    total += _count_collective_launches(sub, sub_w)
+    return total
 
 
 def _model_tree(n_leaves: int, width: int, seed: int = 0):
@@ -380,6 +412,129 @@ def compare_rs(smoke: bool = False) -> List[Dict]:
 
 
 # ----------------------------------------------------------------------
+# Stream-scheduler chunk-count sweep (PR 5)
+# ----------------------------------------------------------------------
+
+def compare_overlap(smoke: bool = False) -> List[Dict]:
+    """The overlap story: sweep wire-chunk counts per strategy through
+    the shared stream scheduler (``core/streams.py``) and report, per
+    (strategy, n_chunks): collective *launches* (scan trip counts
+    included — the static op count is O(1) inside a pipeline), static
+    ops, per-chunk payload bytes, and wall time — with every chunked
+    output pinned bit-identical to the fused one.
+
+    CI gate: the overlapped **native RS** wire must issue per-chunk
+    scatter collectives — its launch count must scale as O(n_chunks)
+    per the wire model (affine in the chunk count with a positive
+    slope). A schedule that secretly fuses the wire back into one shot
+    would fail it.
+    """
+    W = jax.device_count()
+    mesh = compat.make_mesh((W,), ("data",))
+    width = 32 if smoke else 128
+    iters = 1 if smoke else 3
+    cfg = CompressionConfig(
+        ratio=0.3, lanes=128, rows=6, rounds=10, chunk_blocks=64,
+        use_pallas="never",
+        bucket_bytes=(8 << 10) if smoke else (256 << 10))
+    tree = _model_tree(24, width)
+    put, in_specs, out_specs, total = _stacked_inputs(tree, mesh, W)
+    nb = cfg.num_buckets(total)
+    per_rank = -(-nb // W)
+
+    # native RS chunk counts must divide the per-rank bucket count:
+    # fused, a middle divisor, and the finest (per-rank-chunk) grid
+    divs = [d for d in range(1, per_rank + 1) if per_rank % d == 0]
+    rs_counts = sorted({divs[0], divs[len(divs) // 2], divs[-1]})
+    # AllReduce wire: fused, a non-divisible grid, and per-bucket
+    ar_counts = sorted({1, 3 if nb % 3 else 2, nb})
+    # innet: slots per window -> window counts
+    innet_slots = sorted({nb, max(nb // 3, 1), 1}, reverse=True)
+
+    arms = (
+        ("compressed", "compressed", {},
+         [("stream_chunks", c) for c in ar_counts]),
+        ("compressed_rs_native", "compressed_rs", {"rs_wire": "native"},
+         [("stream_chunks", c) for c in rs_counts]),
+        ("compressed_innet_fxp32", "compressed_innet",
+         {"wire_dtype": "fxp32"},
+         [("switch_slots", s) for s in innet_slots]),
+    )
+    rows = []
+    launches_by_arm: Dict[str, Dict[int, int]] = {}
+    for arm, name, base_over, sweep in arms:
+        baseline = None
+        for knob, val in sweep:
+            over = dict(base_over)
+            if knob == "stream_chunks":
+                if val > 1:
+                    over["stream_chunks"] = val
+            else:
+                over["switch_slots"] = val
+                over["overlap"] = val < nb   # >1 window -> streamed
+            cfg_a = dataclasses.replace(cfg, **over)
+            agg = make_aggregator(name, cfg_a, mesh, ("data",), (),
+                                  outer_manual=("data",))
+
+            def path(grads, agg=agg, cfg_a=cfg_a):
+                specs = jax.tree.map(lambda _: P(), grads)
+                res = coll.init_aggregation_state(grads, cfg_a).residual
+                out, _ = agg(grads, AggregationState(residual=res), specs)
+                return out
+
+            fn = jax.jit(compat.shard_map(
+                lambda st, path=path: path(
+                    jax.tree.map(lambda a: a[0], st)),
+                mesh=mesh, in_specs=(in_specs,), out_specs=out_specs,
+                axis_names={"data"}, check_vma=False))
+            jaxpr = jax.make_jaxpr(fn)(put)
+            out = jax.tree.map(np.asarray, fn(put))
+            if baseline is None:
+                baseline = out
+            else:
+                for k in baseline:  # chunking must be bit-invisible
+                    assert np.array_equal(baseline[k], out[k]), (arm, k)
+            n_chunks = val if knob == "stream_chunks" else -(-nb // val)
+            acc = cfg_a.strategy_wire_bytes(total, W,
+                                            grad_bytes_per_elem=4)
+            wire = acc[arm] if arm in acc else acc[name]
+            row = {"case": "compare_overlap", "arm": arm,
+                   "workers": W, "total_elems": total, "n_buckets": nb,
+                   "n_chunks": n_chunks,
+                   "chunk_payload_bytes":
+                       -(-wire["rank_payload_bytes"] // max(n_chunks, 1)),
+                   "link_bytes": wire["link_bytes"],
+                   "collective_ops": sum(
+                       _count_collectives(jaxpr, {}).values()),
+                   "collective_launches": _count_collective_launches(jaxpr),
+                   "wall_s": _time_jitted(fn, (put,), iters)}
+            rows.append(row)
+            launches_by_arm.setdefault(arm, {})[n_chunks] = \
+                row["collective_launches"]
+            print(f"[compare_overlap] {arm} n_chunks={n_chunks}: "
+                  f"launches={row['collective_launches']} "
+                  f"static_ops={row['collective_ops']} "
+                  f"wall={row['wall_s']:.4f}s")
+
+    # ---- CI gate: native RS launches scale as O(n_chunks) ------------
+    pts = sorted(launches_by_arm["compressed_rs_native"].items())
+    assert len(pts) >= 2, "need >= 2 native-RS chunk counts to fit a slope"
+    (c0, l0), (c1, l1) = pts[0], pts[-1]
+    slope = (l1 - l0) / (c1 - c0)
+    assert slope > 0, (
+        "overlapped native RS did not issue per-chunk collectives: "
+        f"launches {dict(pts)}")
+    for (ca, la), (cb, lb) in zip(pts, pts[1:]):
+        s = (lb - la) / (cb - ca)
+        assert s == slope, (
+            "native RS launch count is not affine in n_chunks (the wire "
+            f"model demands O(n_chunks) scatter launches): {dict(pts)}")
+    print(f"[compare_overlap] native RS launches affine in n_chunks "
+          f"(slope {slope:.1f}/chunk) — O(n_chunks) wire confirmed")
+    return rows
+
+
+# ----------------------------------------------------------------------
 # Dense vs compressed vs in-network tree (PR 4)
 # ----------------------------------------------------------------------
 
@@ -521,11 +676,15 @@ def compare_innet(smoke: bool = False) -> List[Dict]:
     return rows
 
 
-def write_normalized(path: str, rows: List[Dict]) -> None:
+def write_normalized(path: str, rows: List[Dict],
+                     overlap_rows: List[Dict] = ()) -> None:
     """Write the compact strategy -> metrics map CI drops at the repo
     root (``BENCH_aggregation.json``) to track the perf trajectory
     across PRs. Rows come from the ``--compare-rs`` / ``--compare-innet``
     arms; later rows win when an arm (e.g. ``dense``) appears in both.
+    ``overlap_rows`` (the ``--compare-overlap`` chunk-count sweep, PR 5)
+    land under ``"overlap"`` as per-chunk wire/launch/wall rows keyed by
+    strategy arm.
     """
     keep = ("rank_payload_bytes", "link_bytes", "root_link_bytes",
             "exponent_bytes", "collective_ops", "wall_s", "workers",
@@ -542,7 +701,16 @@ def write_normalized(path: str, rows: List[Dict]) -> None:
         if "wall_s" in entry:
             entry["wall_s"] = round(entry["wall_s"], 4)
         strategies[r["arm"]] = entry
-    payload = {"schema": 1, "strategies": strategies}
+    overlap: Dict[str, List[Dict]] = {}
+    for r in overlap_rows:
+        overlap.setdefault(r["arm"], []).append({
+            "n_chunks": r["n_chunks"],
+            "chunk_payload_bytes": r["chunk_payload_bytes"],
+            "link_bytes": r["link_bytes"],
+            "collective_launches": r["collective_launches"],
+            "wall_s": round(r["wall_s"], 4),
+        })
+    payload = {"schema": 2, "strategies": strategies, "overlap": overlap}
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
         f.write("\n")
@@ -555,7 +723,8 @@ def _fmt(v):
 
 def main(fracs=(0.02, 0.05, 0.10, 0.25, 0.60, 1.0),
          backends=("auto",), smoke=False, compare=False, compare_rs_flag=False,
-         compare_innet_flag=False, json_path=None, normalized_path=None):
+         compare_innet_flag=False, compare_overlap_flag=False,
+         json_path=None, normalized_path=None):
     """One CSV row per (size fraction, compute backend).
 
     ``--backends never always`` compares the jnp reference codec against
@@ -578,14 +747,18 @@ def main(fracs=(0.02, 0.05, 0.10, 0.25, 0.60, 1.0),
     bucket_rows = compare_bucketing(smoke=smoke) if compare else []
     rs_rows = compare_rs(smoke=smoke) if compare_rs_flag else []
     innet_rows = compare_innet(smoke=smoke) if compare_innet_flag else []
+    overlap_rows = compare_overlap(smoke=smoke) if compare_overlap_flag \
+        else []
     if json_path:
         with open(json_path, "w") as f:
             json.dump({"codec": rows, "bucketing": bucket_rows,
-                       "compare_rs": rs_rows, "compare_innet": innet_rows},
+                       "compare_rs": rs_rows, "compare_innet": innet_rows,
+                       "compare_overlap": overlap_rows},
                       f, indent=2)
         print(f"wrote {json_path}")
     if normalized_path:
-        write_normalized(normalized_path, rs_rows + innet_rows)
+        write_normalized(normalized_path, rs_rows + innet_rows,
+                         overlap_rows)
 
 
 if __name__ == "__main__":
@@ -606,6 +779,11 @@ if __name__ == "__main__":
                     help="dense vs compressed vs the in-network tree "
                          "(f32 + fxp32 wires), incl. the emulated "
                          "SwitchModel parity/occupancy pass")
+    ap.add_argument("--compare-overlap", action="store_true",
+                    help="sweep stream-scheduler wire-chunk counts per "
+                         "strategy: collective launches (must scale "
+                         "O(n_chunks) on the native RS wire — CI "
+                         "gate), per-chunk payload, wall time")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="dump all rows as a JSON artifact")
     ap.add_argument("--normalized-json", default=None, metavar="PATH",
@@ -614,5 +792,6 @@ if __name__ == "__main__":
     args = ap.parse_args()
     main(tuple(args.fracs), tuple(args.backends), smoke=args.smoke,
          compare=args.compare_bucketing, compare_rs_flag=args.compare_rs,
-         compare_innet_flag=args.compare_innet, json_path=args.json,
+         compare_innet_flag=args.compare_innet,
+         compare_overlap_flag=args.compare_overlap, json_path=args.json,
          normalized_path=args.normalized_json)

@@ -6,6 +6,8 @@ form across a TPU mesh."""
 from .config import CompressionConfig, GAMMA
 from .blocks import LeafPlan, make_plan, to_blocks, from_blocks
 from .bucketing import BucketPlan, BucketSegment, make_bucket_plan
+from .streams import (StreamPlan, make_stream_plan, stream_schedule,
+                      zero1_gather_skip, zero_slice_dim)
 from .compressor import HomomorphicCompressor, CompressedLeaf, RecoveryStats
 from .sketch import encode_blocks, estimate_blocks
 from .peeling import peel_blocks, PeelResult
@@ -16,6 +18,8 @@ from . import topk
 __all__ = [
     "CompressionConfig", "GAMMA", "LeafPlan", "make_plan", "to_blocks",
     "from_blocks", "BucketPlan", "BucketSegment", "make_bucket_plan",
+    "StreamPlan", "make_stream_plan", "stream_schedule",
+    "zero1_gather_skip", "zero_slice_dim",
     "HomomorphicCompressor", "CompressedLeaf", "RecoveryStats",
     "encode_blocks", "estimate_blocks", "peel_blocks", "PeelResult",
     "index", "hashing", "topk",

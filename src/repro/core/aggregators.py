@@ -11,10 +11,11 @@ whole gradient is packed into fixed-byte flat buckets
   baseline arm);
 - :class:`CompressedAggregator`         — ONE sketch encode over the packed
   stream, ONE stacked sketch-``psum`` and ONE OR-AllReduce for *all*
-  buckets. With ``cfg.overlap`` the per-bucket collectives are staged
-  against the next bucket's encode via a ``lax.scan`` double-buffer carry,
-  so on hardware with async collectives bucket *i*'s wire time hides
-  bucket *i+1*'s encode;
+  buckets. With ``cfg.overlap`` / ``cfg.stream_chunks`` the wire is cut
+  into whole-bucket chunks and driven through the shared
+  :func:`repro.core.streams.stream_schedule` double-buffer pipeline, so
+  on hardware with async collectives chunk *i*'s wire time hides chunk
+  *i+1*'s encode;
 - :class:`CompressedReduceScatterAggregator` — the native reduce-scatter
   wire path (PR 3): the sketch reduces with ``jax.lax.psum_scatter`` and
   the bitmap with the ppermute-ring
@@ -29,7 +30,13 @@ whole gradient is packed into fixed-byte flat buckets
   ``compat.SUPPORTS_PSUM_SCATTER`` / a full-manual caller, with the
   older ``psum`` + local-slice emulation kept as the 0.4.x partial-auto
   fallback (AllReduce wire, per-rank peel compute only); the
-  ``cfg.rs_wire`` knob forces either path.
+  ``cfg.rs_wire`` knob forces either path. Overlap is honored on the
+  native wire too: the stream scheduler stages per-chunk
+  ``psum_scatter``/OR-Reduce-Scatter calls over chunks of whole
+  per-rank bucket runs, and when the chunk grid aligns with the ZeRO-1
+  optimizer slices (``zero1_dims``) the per-rank recovered chunks feed
+  the optimizer shards directly and the recovered-chunk all_gather is
+  skipped entirely.
 - :class:`CompressedInNetworkAggregator` — the in-network tier (PR 4):
   the stream goes up an emulated worker->ToR->spine switch tree
   (:mod:`repro.net`) once per worker — integer-add sketch (via the
@@ -55,7 +62,6 @@ per-bucket view of those residuals.
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Any, Protocol, Sequence, Tuple, runtime_checkable
 
 import jax
@@ -68,22 +74,12 @@ from repro.net.topology import make_topology, tree_all_reduce
 from .config import CompressionConfig
 from .compressor import HomomorphicCompressor, CompressedLeaf
 from .bucketing import BucketPlan, make_bucket_plan
-from .collectives import (AggregationState, dense_all_reduce, linear_rank,
-                          or_allreduce, or_reduce_scatter)
+from .collectives import (AggregationState, dense_all_reduce,
+                          gather_chunk_slices, linear_rank, or_allreduce,
+                          or_reduce_scatter)
+from .streams import (StreamPlan, make_stream_plan, stream_schedule,
+                      zero1_gather_skip)
 from . import topk as topk_lib
-
-
-# One-time notices for configuration knobs a strategy cannot honor (the
-# alternative — silently ignoring cfg.overlap — is the ROADMAP bug this
-# fixes). Keyed so each (strategy, reason) pair warns once per process;
-# tests reset the set to re-arm.
-_OVERLAP_WARNED: set = set()
-
-
-def _warn_overlap_ignored(key: str, message: str) -> None:
-    if key not in _OVERLAP_WARNED:
-        _OVERLAP_WARNED.add(key)
-        warnings.warn(message, UserWarning, stacklevel=3)
 
 
 @runtime_checkable
@@ -115,6 +111,7 @@ class DenseAggregator:
     tp_axes: Tuple[str, ...] = ()
     mean: bool = True
     outer_manual: Any = None
+    zero1_dims: Any = None
 
     def __call__(self, grads, state: AggregationState, param_specs=None):
         return dense_all_reduce(grads, self.dp_axes, mean=self.mean), state
@@ -204,6 +201,12 @@ class CompressedAggregator:
     # rejects, so per-rank slicing needs either new JAX or a full-manual
     # caller (the 0.4.x train step is full-manual; see compat).
     outer_manual: Any = None
+    # Per-leaf ZeRO-1 slice dims (from streams.zero_slice_dim, in
+    # flattened-leaf order; None entries = unsliced leaves). Only the
+    # reduce-scatter variant consults it — when the stream chunk grid
+    # aligns with these slices, its recovered-chunk all_gather is
+    # skipped and each rank feeds its optimizer shard directly.
+    zero1_dims: Any = None
 
     # -- construction helpers ------------------------------------------
 
@@ -233,57 +236,69 @@ class CompressedAggregator:
 
     # -- phase I/II bucket codec (runs on shard-local buckets) ---------
 
+    def _stream_plan(self, plan: BucketPlan) -> StreamPlan:
+        """The wire-chunk grid for this strategy (subclasses align it to
+        their wire's boundaries — per-rank RS chunks, switch windows)."""
+        return make_stream_plan(plan, self.cfg)
+
+    def _reduce_allreduce(self, dp_idx):
+        """The AllReduce wire for one (sketch, words) payload chunk."""
+        def red(payload):
+            sk, words = payload
+            return (jax.lax.psum(sk, tuple(self.dp_axes)),
+                    or_allreduce(words, self.dp_axes, axis_indices=dp_idx))
+        return red
+
+    def _encode_streamed(self, buckets, splan: StreamPlan,
+                         comp: HomomorphicCompressor, reduce_fn):
+        """Per-chunk encode + wire through the shared scheduler.
+
+        Returns the reduced per-chunk payloads stacked on a leading
+        ``n_chunks`` dim (whatever shapes ``reduce_fn`` emits).
+        Bit-identical to the fused path: each chunk encodes under the
+        stream's global hash plan via ``block_offset``, the bitmap
+        slices exactly per bucket, and padding buckets are zeros end to
+        end.
+        """
+        def enc(i, chunk):
+            c = comp.compress(chunk.reshape(-1),
+                              block_offset=splan.chunk_start_block(i))
+            return c.sketch, c.index_words
+
+        return stream_schedule(splan.chunk_view(buckets), enc, reduce_fn)
+
+    def _trim_fused(self, stacked_sk, stacked_words, plan: BucketPlan,
+                    splan: StreamPlan):
+        """Stacked per-chunk (sketch, words) -> fused full-stream views,
+        padding chunks dropped."""
+        cfg = self.cfg
+        sk = stacked_sk.reshape(-1, cfg.rows, cfg.lanes)
+        words = stacked_words.reshape(-1)
+        return (sk[:plan.n_buckets * splan.blocks_per_bucket],
+                words[:plan.n_buckets * splan.words_per_bucket])
+
     def _encode(self, buckets: jnp.ndarray, plan: BucketPlan,
                 comp: HomomorphicCompressor, dp_idx):
         """(n_buckets, E) local buckets -> aggregated (sketch, words)."""
-        if self.cfg.overlap and plan.n_buckets > 1:
-            return self._encode_overlapped(buckets, plan, comp, dp_idx)
-        c = comp.compress(buckets.reshape(-1))
-        sk = jax.lax.psum(c.sketch, tuple(self.dp_axes))
-        words = or_allreduce(c.index_words, self.dp_axes,
-                             axis_indices=dp_idx)
-        return sk, words
-
-    def _encode_overlapped(self, buckets, plan: BucketPlan,
-                           comp: HomomorphicCompressor, dp_idx):
-        """Double-buffered staging: bucket i's collectives are issued in
-        the same scan step as bucket i+1's encode, with no data
-        dependence between them — async-collective backends overlap the
-        wire with the MXU encode. Bit-identical to the fused path (same
-        global block ids via block_offset; bitmap index slices exactly
-        per bucket)."""
-        cfg = self.cfg
-        nbpb = plan.bucket_elems // cfg.block_elems   # blocks per bucket
-        wpb = plan.bucket_elems // 32                 # bitmap words/bucket
-
-        def enc(i, bucket):
-            c = comp.compress(bucket, block_offset=i * nbpb)
-            return c.sketch, c.index_words
-
-        def reduce_one(sk, words):
-            return (jax.lax.psum(sk, tuple(self.dp_axes)),
-                    or_allreduce(words, self.dp_axes, axis_indices=dp_idx))
-
-        sk0, w0 = enc(jnp.int32(0), buckets[0])
-
-        def body(carry, xs):
-            i, bucket = xs
-            agg = reduce_one(*carry)
-            return enc(i, bucket), agg
-
-        idx = jnp.arange(1, plan.n_buckets, dtype=jnp.int32)
-        (sk_l, w_l), (sks, ws) = jax.lax.scan(body, (sk0, w0),
-                                              (idx, buckets[1:]))
-        sk_last, w_last = reduce_one(sk_l, w_l)
-        sk = jnp.concatenate([sks, sk_last[None]], axis=0)
-        words = jnp.concatenate([ws, w_last[None]], axis=0)
-        # (n_buckets, nbpb, rows, lanes) / (n_buckets, wpb) -> fused views
-        return (sk.reshape(plan.n_buckets * nbpb, cfg.rows, cfg.lanes),
-                words.reshape(plan.n_buckets * wpb))
+        splan = self._stream_plan(plan)
+        if not splan.streamed:
+            c = comp.compress(buckets.reshape(-1))
+            sk = jax.lax.psum(c.sketch, tuple(self.dp_axes))
+            words = or_allreduce(c.index_words, self.dp_axes,
+                                 axis_indices=dp_idx)
+            return sk, words
+        sks, ws = self._encode_streamed(buckets, splan, comp,
+                                        self._reduce_allreduce(dp_idx))
+        return self._trim_fused(sks, ws, plan, splan)
 
     def _recover(self, sk, words, plan: BucketPlan,
-                 comp: HomomorphicCompressor, dp_idx, dp_rank):
-        """Aggregated (sketch, words) -> recovered (n_buckets, E)."""
+                 comp: HomomorphicCompressor, dp_idx, dp_rank,
+                 spec_leaves=None):
+        """Aggregated (sketch, words) -> recovered (n_buckets, E).
+
+        ``spec_leaves``: the leaves' DP-stripped PartitionSpecs — only
+        the reduce-scatter subclass consults them (the gather-skip path
+        must know whether the packed stream is a TP-local view)."""
         rec = comp.recover(CompressedLeaf(sketch=sk, index_words=words),
                            plan.padded)
         return rec.reshape(plan.n_buckets, plan.bucket_elems)
@@ -353,7 +368,8 @@ class CompressedAggregator:
             buckets, new_res = pack_stage(grads, res_tree)
 
         sk, words = self._encode(buckets, plan, comp, dp_idx)
-        rec = self._recover(sk, words, plan, comp, dp_idx, dp_rank)
+        rec = self._recover(sk, words, plan, comp, dp_idx, dp_rank,
+                            spec_leaves=spec_leaves)
 
         if nested:
             dec = compat.shard_map(
@@ -385,46 +401,46 @@ class CompressedReduceScatterAggregator(CompressedAggregator):
     with a manual-axis ``all_gather`` in full-manual regions, else the
     zero-pad + ``psum`` ZeRO-1 gather trick (Shardy un-shards auto TP
     axes around a partial-auto manual-axis all_gather; see
-    train/step.py). ``cfg.overlap`` is inapplicable here and ignored:
-    per-bucket collective staging would scatter each bucket's *interior*
-    across ranks instead of assigning whole buckets to their peeling
-    rank (a strided wire format; ROADMAP open item).
+    train/step.py).
+
+    ``cfg.overlap`` / ``cfg.stream_chunks`` are honored on the native
+    wire (PR 5): the shared stream scheduler cuts the payload into
+    chunks of whole *per-rank bucket runs* (``chunk_buckets = k * W``,
+    so every per-chunk ``psum_scatter`` / OR-Reduce-Scatter lands whole
+    buckets on their peeling rank — the chunk count must divide
+    ``ceil(n_buckets/W)``, ValueError otherwise), pipelines chunk
+    ``i``'s scatter against chunk ``i+1``'s encode, and peels each
+    received slice at its global block offset. Reassembly restores the
+    exact one-shot stream
+    (:func:`~repro.core.collectives.gather_chunk_slices`) — unless the
+    chunk grid aligns with the ZeRO-1 optimizer slices (``zero1_dims``;
+    :func:`repro.core.streams.zero1_gather_skip`), in which case each
+    rank already holds every gradient value its optimizer shard
+    consumes, the recovered-chunk all_gather is skipped, and the
+    returned leaves are exact inside this rank's owned coordinates and
+    zero outside (the train step reduces the grad-norm across ranks on
+    that path; ``strategy_wire_bytes`` shows the saved gather wire).
 
     **Emulated** (the 0.4.x partial-auto fallback, or
     ``rs_wire="emulate"``): full ``psum`` + OR-AllReduce, then a local
     slice — AllReduce wire cost, but still only 1/W of the peel compute
     per rank. On 0.4.x partial-auto callers that did not declare
     ``outer_manual`` it further degrades to all-ranks peeling (the rank
-    index cannot be lowered there).
+    index cannot be lowered there). Overlap on this wire is plain
+    AllReduce chunking (the base class schedule).
 
-    Both paths are bit-identical to :class:`CompressedAggregator`: the
-    per-range peel runs the same ops on the same sketch slice, and the
-    disjoint-chunk gather (all_gather, or psum onto zeros) reproduces
-    each value exactly once.
+    All paths are bit-identical to :class:`CompressedAggregator` (modulo
+    the gather-skip output contract above): the per-range peel runs the
+    same ops on the same sketch slice, and the disjoint-chunk gather
+    (all_gather, or psum onto zeros) reproduces each value exactly once.
     """
-
-    def __post_init__(self):
-        # cfg.overlap cannot be honored on the native wire: per-bucket
-        # collective staging would scatter each bucket's *interior*
-        # across ranks instead of assigning whole buckets to their
-        # peeling rank (needs a strided wire format; ROADMAP open item).
-        # Say so once instead of silently running fused.
-        if self.cfg.overlap and self._native_wire_possible():
-            _warn_overlap_ignored(
-                "rs_native",
-                "cfg.overlap is ignored on the native reduce-scatter "
-                "wire: per-bucket collective staging would scatter each "
-                "bucket's interior across ranks instead of assigning "
-                "whole buckets to their peeling rank (needs a strided "
-                "wire format — see the ROADMAP open item); running the "
-                "fused one-shot psum_scatter + OR-Reduce-Scatter instead")
 
     # -- geometry / capability helpers ---------------------------------
 
     def _native_wire_possible(self) -> bool:
         """The wire-selection predicate shared by :meth:`_native_wire`
-        and the construction-time overlap warning — one definition so
-        the warning can never drift from the actual path taken."""
+        and :meth:`_stream_plan` — one definition so the chunk grid can
+        never drift from the actual wire path taken."""
         return self.cfg.rs_wire != "emulate" and (
             compat.SUPPORTS_PSUM_SCATTER or self._full_manual())
 
@@ -450,19 +466,75 @@ class CompressedReduceScatterAggregator(CompressedAggregator):
     def _rs_geometry(self, plan: BucketPlan):
         """(W, blocks/bucket, words/bucket, n_buckets padded to W)."""
         W = self._dp_world()
-        nbpb = plan.bucket_elems // self.cfg.block_elems
-        wpb = plan.bucket_elems // 32
+        nbpb = plan.blocks_per_bucket(self.cfg)
+        wpb = plan.words_per_bucket
         nb_p = -(-plan.n_buckets // W) * W
         return W, nbpb, wpb, nb_p
+
+    def _stream_plan(self, plan: BucketPlan) -> StreamPlan:
+        """Per-rank-aligned scatter grid on the native wire (chunks of
+        whole per-rank bucket runs); the base AllReduce grid elsewhere
+        (the emulated wire ships the whole stream anyway, and a 1-rank
+        'scatter' is a no-op)."""
+        if self._native_wire() and self._dp_world() > 1:
+            return make_stream_plan(plan, self.cfg,
+                                    workers=self._dp_world(), scatter=True)
+        return super()._stream_plan(plan)
+
+    def _gather_skip(self, plan: BucketPlan, splan: StreamPlan,
+                     spec_leaves=None) -> bool:
+        """Static: does the chunk grid align with the ZeRO-1 slices so
+        the recovered-chunk all_gather can be skipped?
+
+        ``spec_leaves`` (DP-stripped specs): on a JAX with nested
+        shard_map, a leaf actually sharded on a non-DP axis makes the
+        packed stream a TP-*local* view while the ZeRO-1 slices are
+        global — the alignment math does not apply, keep the gather.
+        (On 0.4.x the packed stream is the auto-sharded global view, so
+        TP sharding does not disturb the stream coordinates.)"""
+        if self.zero1_dims is None:
+            return False
+        if compat.SUPPORTS_NESTED_SHARD_MAP and spec_leaves is not None \
+                and any(_spec_axes(s) for s in spec_leaves):
+            return False
+        return zero1_gather_skip(splan, plan, tuple(self.zero1_dims))
+
+    def gather_skip_active(self, grads, param_specs=None) -> bool:
+        """Static answer (no tracing): will aggregating gradients shaped
+        like ``grads`` (sharded as ``param_specs``; None = replicated)
+        skip the recovered-chunk all_gather? The train step consults
+        this to switch the grad-norm to a cross-rank reduction on the
+        skip path; tests pin it against the wire accounting
+        (``strategy_wire_bytes(..., zero1_aligned=...)``)."""
+        if not (self._native_wire() and self._dp_world() > 1):
+            return False
+        plan = make_bucket_plan(grads, self.cfg)
+        splan = self._stream_plan(plan)
+        spec_leaves = None
+        if param_specs is not None:
+            dp_set = set(self.dp_axes)
+            spec_leaves = [_tp_only(s, dp_set) for s in
+                           plan.treedef.flatten_up_to(param_specs)]
+        return splan.streamed and self._gather_skip(plan, splan,
+                                                    spec_leaves)
 
     # -- phase II ------------------------------------------------------
 
     def _encode(self, buckets: jnp.ndarray, plan: BucketPlan,
                 comp: HomomorphicCompressor, dp_idx):
         self._check_bitmap()
-        if not self._native_wire():
+        if not self._native_wire() or self._dp_world() == 1:
+            if self._native_wire() and not self._stream_plan(plan).streamed:
+                # 1-rank native wire: nothing to scatter or reduce.
+                c = comp.compress(buckets.reshape(-1))
+                return c.sketch, c.index_words
             return super()._encode(buckets, plan, comp, dp_idx)
-        # Fused encode only (see class docstring on cfg.overlap).
+        splan = self._stream_plan(plan)
+        if splan.streamed:
+            return self._encode_streamed(buckets, splan, comp,
+                                         self._reduce_scatter(dp_idx))
+        # One-shot native wire: a single psum_scatter + OR-RS over the
+        # whole stream, padded to whole per-rank chunks.
         c = comp.compress(buckets.reshape(-1))
         W, nbpb, wpb, nb_p = self._rs_geometry(plan)
         sk, words = c.sketch, c.index_words
@@ -471,24 +543,36 @@ class CompressedReduceScatterAggregator(CompressedAggregator):
             # zero sketch blocks / zero index words peel to exact zeros
             sk = jnp.pad(sk, ((0, pad_b * nbpb), (0, 0), (0, 0)))
             words = jnp.pad(words, (0, pad_b * wpb))
-        if W == 1:
-            return sk, words
-        sk_loc = jax.lax.psum_scatter(
-            sk, tuple(self.dp_axes), scatter_dimension=0, tiled=True)
-        w_loc = or_reduce_scatter(
-            words, self.dp_axes, axis_indices=dp_idx,
-            use_ppermute=True if self._full_manual() else None)
-        return sk_loc, w_loc
+        return self._reduce_scatter(dp_idx)((sk, words))
+
+    def _reduce_scatter(self, dp_idx):
+        """The native wire for one (sketch, words) payload chunk: each
+        rank receives its own fully-reduced whole-bucket slice."""
+        def red(payload):
+            sk, words = payload
+            sk_loc = jax.lax.psum_scatter(
+                sk, tuple(self.dp_axes), scatter_dimension=0, tiled=True)
+            w_loc = or_reduce_scatter(
+                words, self.dp_axes, axis_indices=dp_idx,
+                use_ppermute=True if self._full_manual() else None)
+            return sk_loc, w_loc
+        return red
 
     def _recover(self, sk, words, plan: BucketPlan,
-                 comp: HomomorphicCompressor, dp_idx, dp_rank):
+                 comp: HomomorphicCompressor, dp_idx, dp_rank,
+                 spec_leaves=None):
         cfg = self.cfg
         self._check_bitmap()
         W, nbpb, wpb, nb_p = self._rs_geometry(plan)
         chunk_b = nb_p // W                      # buckets per rank
         chunk_elems = chunk_b * plan.bucket_elems
         if self._native_wire():
-            # (sk, words) are already this rank's reduced 1/W slice.
+            splan = self._stream_plan(plan)
+            if W > 1 and splan.streamed:
+                return self._recover_streamed(sk, words, plan, splan, comp,
+                                              dp_idx, dp_rank, spec_leaves)
+            # (sk, words) are already this rank's reduced 1/W slice (the
+            # whole stream at W == 1).
             rec_loc = comp.recover(
                 CompressedLeaf(sketch=sk, index_words=words), chunk_elems,
                 block_offset=dp_rank * chunk_b * nbpb)
@@ -513,6 +597,40 @@ class CompressedReduceScatterAggregator(CompressedAggregator):
             CompressedLeaf(sketch=sk_loc, index_words=w_loc), chunk_elems,
             block_offset=dp_rank * chunk_b * nbpb)
         return self._gather_chunks(rec_loc, plan, nb_p, chunk_elems, dp_rank)
+
+    def _recover_streamed(self, sk, words, plan: BucketPlan,
+                          splan: StreamPlan, comp: HomomorphicCompressor,
+                          dp_idx, dp_rank, spec_leaves=None):
+        """Streamed native wire: ``(sk, words)`` are the per-chunk
+        reduced slices stacked on a leading ``n_chunks`` dim — peel each
+        at its global block offset (still 1/W of the recovery compute),
+        then reassemble (or skip the gather when the chunk grid aligns
+        with the ZeRO-1 slices: each rank keeps its recovered values in
+        place in a zero stream — exact inside its owned coordinates)."""
+        slice_elems = splan.rank_chunk_buckets * plan.bucket_elems
+
+        def peel(args):
+            j, sk_j, w_j = args
+            return comp.recover(
+                CompressedLeaf(sketch=sk_j, index_words=w_j), slice_elems,
+                block_offset=splan.rank_slice_start_block(j, dp_rank))
+
+        idx = jnp.arange(splan.n_chunks, dtype=jnp.int32)
+        rec = jax.lax.map(peel, (idx, sk, words))  # (n_chunks, slice_elems)
+        if self._gather_skip(plan, splan, spec_leaves):
+            full = jnp.zeros((splan.n_chunks, splan.chunk_elems), rec.dtype)
+            full = jax.lax.dynamic_update_slice(
+                full, rec, (jnp.int32(0), dp_rank * slice_elems))
+        else:
+            # Same gate as _gather_chunks: the manual-axis all_gather
+            # only in full-manual regions — partial-auto keeps the
+            # zero-pad + psum trick so Shardy does not un-shard the
+            # auto TP axes around the gather.
+            full = gather_chunk_slices(
+                rec, tuple(self.dp_axes), axis_indices=dp_idx,
+                use_all_gather=self._full_manual())
+        stream = full.reshape(-1)[:plan.padded]
+        return stream.reshape(plan.n_buckets, plan.bucket_elems)
 
     def _gather_chunks(self, rec_loc, plan: BucketPlan, nb_p: int,
                        chunk_elems: int, dp_rank):
@@ -571,44 +689,66 @@ class CompressedInNetworkAggregator(CompressedAggregator):
     counters, straggler retransmit) is modeled by
     :class:`repro.net.switch.SwitchModel`, which the ``--compare-innet``
     benchmark drives over the same streams and pins against this
-    strategy's output. ``cfg.overlap`` is inapplicable here and ignored
-    with a one-time warning: the tree reduces the fused stream in one
-    shot (per-window streaming lives in the switch model, not in the
-    collective schedule).
+    strategy's output. The in-mesh collective streams the same windows
+    (PR 5): the fxp32 tree reduces ``switch_slots`` buckets at a time
+    (``tree_all_reduce(..., window_slots=...)``, matching the switch's
+    slot pool window for window), and with ``cfg.overlap`` /
+    ``cfg.stream_chunks`` the shared stream scheduler additionally
+    pipelines window ``i``'s tree against window ``i+1``'s encode (the
+    chunk grid spans whole switch windows; a forced ``stream_chunks``
+    that cannot raises ``ValueError``).
     """
 
-    def __post_init__(self):
-        if self.cfg.overlap:
-            _warn_overlap_ignored(
-                "innet",
-                "cfg.overlap is ignored by compressed_innet: the "
-                "in-network tree reduces the fused bucket stream in one "
-                "shot (streaming happens in the emulated switch's slot "
-                "windows, not in the collective schedule)")
+    def _stream_plan(self, plan: BucketPlan) -> StreamPlan:
+        """Chunks span whole ``switch_slots`` bucket windows, so the
+        collective schedule and the SwitchModel slot pool agree."""
+        return make_stream_plan(plan, self.cfg,
+                                window_buckets=self.cfg.switch_slots)
 
     def _encode(self, buckets: jnp.ndarray, plan: BucketPlan,
                 comp: HomomorphicCompressor, dp_idx):
         cfg = self.cfg
-        c = comp.compress(buckets.reshape(-1))
-        sk, words = c.sketch, c.index_words
         if cfg.wire_dtype == "f32":
             # Idealized float tier: same collectives (and bits) as
-            # CompressedAggregator; see class docstring.
+            # CompressedAggregator — including the streamed schedule,
+            # whose chunks here span whole switch windows; see class
+            # docstring. The tree is wire-model only on this dtype.
             make_topology(cfg.topology, self.mesh, self.dp_axes)  # validate
-            sk = jax.lax.psum(sk, tuple(self.dp_axes))
-            words = or_allreduce(words, self.dp_axes, axis_indices=dp_idx)
-            return sk, words
+            return super()._encode(buckets, plan, comp, dp_idx)
         topo = make_topology(cfg.topology, self.mesh, self.dp_axes)
         use_pp = True if self._full_manual() else None
         wire = FixedPointWire(workers=self._dp_world())
-        sk_b = sk.reshape(plan.n_buckets, -1)
-        exp = wire.shared_exponents(sk_b, self.dp_axes)
-        q = wire.encode(sk_b, exp)
-        q = tree_all_reduce(q, topo, "add", axis_indices=dp_idx,
-                            use_ppermute=use_pp)
-        words = tree_all_reduce(words, topo, "or", axis_indices=dp_idx,
-                                use_ppermute=use_pp)
-        return wire.decode(q, exp).reshape(sk.shape), words
+        splan = self._stream_plan(plan)
+
+        def tree_window(sk_buckets, words_buckets):
+            """One chunk (whole buckets) over the fxp32 tree, window by
+            window: pmax-agree exponents, quantize, integer tree."""
+            exp = wire.shared_exponents(sk_buckets, self.dp_axes)
+            q = tree_all_reduce(wire.encode(sk_buckets, exp), topo, "add",
+                                axis_indices=dp_idx, use_ppermute=use_pp,
+                                window_slots=cfg.switch_slots)
+            w = tree_all_reduce(words_buckets, topo, "or",
+                                axis_indices=dp_idx, use_ppermute=use_pp,
+                                window_slots=cfg.switch_slots)
+            return wire.decode(q, exp), w
+
+        if not splan.streamed:
+            c = comp.compress(buckets.reshape(-1))
+            sk, words = c.sketch, c.index_words
+            sk_b, w_b = tree_window(
+                sk.reshape(plan.n_buckets, -1),
+                words.reshape(plan.n_buckets, splan.words_per_bucket))
+            return sk_b.reshape(sk.shape), w_b.reshape(-1)
+
+        def red(payload):
+            sk, words = payload          # one chunk's local payload
+            sk_b, w_b = tree_window(
+                sk.reshape(splan.chunk_buckets, -1),
+                words.reshape(splan.chunk_buckets, splan.words_per_bucket))
+            return sk_b.reshape(sk.shape), w_b.reshape(words.shape)
+
+        sks, ws = self._encode_streamed(buckets, splan, comp, red)
+        return self._trim_fused(sks, ws, plan, splan)
 
 
 # ----------------------------------------------------------------------
@@ -626,11 +766,14 @@ AGGREGATORS = {
 def make_aggregator(name: str, cfg: CompressionConfig, mesh,
                     dp_axes: Sequence[str],
                     tp_axes: Sequence[str] = ("model",),
-                    mean: bool = True, outer_manual=None) -> Aggregator:
+                    mean: bool = True, outer_manual=None,
+                    zero1_dims=None) -> Aggregator:
     """Build the named strategy (see :data:`AGGREGATORS`).
 
     ``outer_manual``: the axis set the calling shard_map takes manual
-    (see :class:`CompressedAggregator.outer_manual`).
+    (see :class:`CompressedAggregator.outer_manual`). ``zero1_dims``:
+    per-leaf ZeRO-1 slice dims enabling the reduce-scatter gather-skip
+    path (see :class:`CompressedAggregator.zero1_dims`).
     """
     if isinstance(dp_axes, str):
         dp_axes = (dp_axes,)
@@ -644,4 +787,5 @@ def make_aggregator(name: str, cfg: CompressionConfig, mesh,
     return cls(cfg=cfg, mesh=mesh, dp_axes=tuple(dp_axes),
                tp_axes=tuple(tp_axes), mean=mean,
                outer_manual=None if outer_manual is None
-               else tuple(outer_manual))
+               else tuple(outer_manual),
+               zero1_dims=None if zero1_dims is None else tuple(zero1_dims))

@@ -73,6 +73,17 @@ class BucketPlan:
     def pad(self) -> int:
         return self.padded - self.total
 
+    def blocks_per_bucket(self, cfg: CompressionConfig) -> int:
+        """Whole sketch blocks per bucket — exact by construction
+        (``bucket_elems`` is a multiple of the bucket quantum). The one
+        definition the aggregators and the stream scheduler share."""
+        return self.bucket_elems // cfg.block_elems
+
+    @property
+    def words_per_bucket(self) -> int:
+        """Whole packed-bitmap uint32 words per bucket (exact, ditto)."""
+        return self.bucket_elems // 32
+
     # ------------------------------------------------------------------
     # pack / unpack (pure, jittable)
     # ------------------------------------------------------------------

@@ -316,6 +316,53 @@ def or_reduce_scatter(x: jnp.ndarray, axis_names: Sequence[str],
     return x
 
 
+def gather_chunk_slices(local: jnp.ndarray, axis_names: Sequence[str],
+                        axis_indices: Optional[dict] = None,
+                        use_all_gather: bool = True) -> jnp.ndarray:
+    """Reassemble per-chunk reduce-scatter slices across ranks.
+
+    The inverse of a *per-chunk* ``psum_scatter`` / :func:`or_reduce_scatter`
+    schedule (the streamed native RS wire, see :mod:`repro.core.streams`):
+    ``local`` is ``(n_chunks, S, ...)`` — this rank's fully-reduced slice
+    of each wire chunk.  Returns ``(n_chunks, W * S, ...)`` where every
+    chunk's leading dim is the rank-major concatenation of all ranks'
+    slices, i.e. chunk ``j`` restored exactly as the one-shot wire would
+    have delivered it.  One collective for all chunks.
+
+    ``use_all_gather=True`` (full-manual regions, and new-JAX
+    partial-auto) uses a manual-axis ``all_gather``; ``False`` keeps the
+    zero-pad + ``psum`` ZeRO-1 gather trick for partial-auto regions
+    where Shardy would un-shard the auto TP axes around a manual-axis
+    all_gather (2x the all_gather ring's wire, bit-identical values —
+    each slice lands exactly once either way).
+    """
+    if isinstance(axis_names, str):
+        axis_names = (axis_names,)
+    axis_names = tuple(axis_names)
+    _check_axis_indices(axis_names, axis_indices)
+    W = 1
+    for ax in axis_names:
+        W *= compat.axis_size(ax)
+    if W == 1:
+        return local
+    n_chunks, s = local.shape[0], local.shape[1]
+    if use_all_gather:
+        # (W, n_chunks, S, ...) stacked rank-major over the axis tuple,
+        # the same linearization as linear_rank / psum_scatter tiling.
+        ag = jax.lax.all_gather(local, axis_names, axis=0, tiled=False)
+        if ag.ndim == local.ndim + len(axis_names):
+            # multi-axis all_gather stacks one dim per axis (outer axis
+            # first == rank-major): merge them into the single W dim
+            ag = ag.reshape((W,) + local.shape)
+        perm = (1, 0, 2) + tuple(range(3, ag.ndim))
+        return ag.transpose(perm).reshape(
+            (n_chunks, W * s) + local.shape[2:])
+    rank = linear_rank(axis_names, axis_indices)
+    full = jnp.zeros((n_chunks, W * s) + local.shape[2:], local.dtype)
+    full = jax.lax.dynamic_update_slice_in_dim(full, local, rank * s, axis=1)
+    return jax.lax.psum(full, axis_names)
+
+
 # ----------------------------------------------------------------------
 # Dense baseline (the "NCCL AllReduce" arm of the paper's evaluation)
 # ----------------------------------------------------------------------

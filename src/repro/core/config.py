@@ -64,8 +64,23 @@ class CompressionConfig:
     bucket_bytes: int = 4 << 20  # target f32 bytes per aggregation bucket
                                  # (rounded to block/word alignment; see
                                  # bucketing.BucketPlan)
-    overlap: bool = False        # pipeline bucket i's collectives against
-                                 # bucket i+1's encode (lax.scan staging)
+    overlap: bool = False        # pipeline chunk i's collectives against
+                                 # chunk i+1's encode through the shared
+                                 # stream scheduler (core/streams.py);
+                                 # the default grid is the finest aligned
+                                 # one (per bucket on the AllReduce wire,
+                                 # per rank-chunk on the native RS wire,
+                                 # per switch window on the innet tree)
+    stream_chunks: Optional[int] = None
+                                 # explicit wire-chunk count for the
+                                 # stream scheduler (implies overlap).
+                                 # Must respect the strategy's alignment
+                                 # constraints: divide ceil(n_buckets/W)
+                                 # on the native RS wire, span whole
+                                 # switch_slots windows on the innet
+                                 # tree (ValueError otherwise); any
+                                 # count is valid on the AllReduce wire
+                                 # (non-divisible grids zero-pad).
     rs_wire: str = "auto"        # reduce-scatter strategy wire path:
                                  # "auto"    — native psum_scatter + OR-RS
                                  #             when the JAX leg / region
@@ -110,10 +125,15 @@ class CompressionConfig:
         if self.bucket_bytes < 4:
             raise ValueError(
                 f"bucket_bytes must be >= 4, got {self.bucket_bytes}")
-        if self.overlap and self.index != "bitmap":
-            # Per-bucket OR-AllReduce slices the packed bitmap by bucket;
+        if (self.overlap or self.stream_chunks is not None) \
+                and self.index != "bitmap":
+            # Per-chunk OR collectives slice the packed bitmap by bucket;
             # a Bloom filter is one global structure and cannot be sliced.
-            raise ValueError("overlap=True requires index='bitmap'")
+            raise ValueError(
+                "overlap/stream_chunks require index='bitmap'")
+        if self.stream_chunks is not None and self.stream_chunks < 1:
+            raise ValueError(
+                f"stream_chunks must be >= 1, got {self.stream_chunks}")
         if self.rs_wire not in ("auto", "native", "emulate"):
             raise ValueError(
                 f"rs_wire must be 'auto', 'native' or 'emulate', "
@@ -235,7 +255,8 @@ class CompressionConfig:
         }
 
     def strategy_wire_bytes(self, n: int, workers: int,
-                            grad_bytes_per_elem: int = 2) -> dict:
+                            grad_bytes_per_elem: int = 2,
+                            zero1_aligned: bool = False) -> dict:
         """Per-rank wire accounting for each aggregation strategy.
 
         For a stream of ``n`` elements reduced across ``workers`` (W)
@@ -277,11 +298,18 @@ class CompressionConfig:
         *native* collectives; on a 0.4.x partial-auto leg the
         OR-AllReduce is psum-emulated at 32x the bitmap's wire volume
         (``or_emulated_factor`` is provided to scale index traffic for
-        that leg), and ``compressed_rs``'s native path additionally
-        all-gathers the recovered per-rank gradient chunks
-        (``rs_gather_link_bytes``; the psum-trick fallback ships 2x
-        that) — a cost the ZeRO-1 optimizer path absorbs when it
-        consumes the per-rank chunks directly.
+        that leg).
+
+        ``compressed_rs``'s native path reports the recovered-chunk
+        all_gather separately: ``link_bytes_with_gather`` counts it,
+        ``link_bytes_no_gather`` does not (the psum-trick fallback ships
+        2x ``rs_gather_link_bytes``), and ``link_bytes`` — the number
+        the ``--compare-rs`` CI gate measures — picks between them by
+        ``zero1_aligned``: pass True when the stream chunk grid aligns
+        with the ZeRO-1 optimizer slices
+        (:func:`repro.core.streams.zero1_gather_skip`), where the
+        aggregator feeds the per-rank recovered chunks straight into the
+        optimizer shards and the gather is skipped entirely.
         """
         if workers < 1:
             raise ValueError(f"workers must be >= 1, got {workers}")
@@ -328,10 +356,15 @@ class CompressionConfig:
             },
         }
         if idx_p is not None:
+            rs_link = int((sketch_p + idx_p) * rs)
+            gather = int(nb_p * be * 4 * rs)
             out["compressed_rs_native"] = {
                 "rank_payload_bytes": (sketch_p + idx_p) // W,
-                "link_bytes": int((sketch_p + idx_p) * rs),
-                "rs_gather_link_bytes": int(nb_p * be * 4 * rs),
+                "rs_gather_link_bytes": gather,
+                "link_bytes_with_gather": rs_link + gather,
+                "link_bytes_no_gather": rs_link,
+                "zero1_aligned": zero1_aligned,
+                "link_bytes": rs_link + (0 if zero1_aligned else gather),
             }
         else:
             out["compressed_rs_native"] = None

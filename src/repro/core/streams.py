@@ -1,0 +1,347 @@
+"""Wire-chunk scheduling: ONE overlap engine for every strategy (PR 5).
+
+The paper's throughput win depends on keeping the homomorphic stream
+*moving*: workers should be encoding bucket ``i+1`` while bucket ``i`` is
+on the wire, and switches aggregate bounded windows of the stream rather
+than one monolithic payload (PAPER.md §5; THC and ScaleCom make the same
+streaming-aggregation argument).  Before this module the repo had three
+divergent half-implementations of that idea — ``CompressedAggregator``'s
+private ``lax.scan`` double-buffer, a native reduce-scatter wire that
+ignored ``cfg.overlap`` entirely, and ``SwitchModel`` windows that never
+reached the in-mesh collective.  ``streams`` is the one scheduling layer
+they all share now:
+
+- :class:`StreamPlan` — the static chunk grid.  The fused sketch+bitmap
+  payload of a :class:`~repro.core.bucketing.BucketPlan` is partitioned
+  into ``n_chunks`` wire chunks of ``chunk_buckets`` whole buckets each
+  (zero-padded past the real bucket count; zero buckets encode to zero
+  sketch blocks / zero bitmap words, reduce to zeros, and peel to zeros,
+  so chunking is bit-invisible).  The grid is aligned simultaneously to
+
+  * whole buckets (always — a bucket is the codec's atomic unit),
+  * per-rank reduce-scatter boundaries when the chunks feed per-chunk
+    ``psum_scatter`` / OR-Reduce-Scatter calls (``scatter=True``): each
+    chunk holds ``chunk_buckets = k * W`` buckets so the scatter lands
+    *whole buckets* on their peeling rank — the "strided wire format"
+    the ROADMAP open item asked for, spelled as a chunk grid instead of
+    a strided element layout, and
+  * ``switch_slots`` streaming windows for the in-network tier
+    (``window_buckets``): each chunk is a whole number of switch SRAM
+    windows, so the collective schedule and the
+    :class:`~repro.net.switch.SwitchModel` slot pool agree.
+
+  Unsatisfiable grids (a forced ``cfg.stream_chunks`` that would split a
+  per-rank RS boundary or a switch window) raise ``ValueError`` naming
+  the violated alignment constraint — they are never silently ignored
+  (the old one-time-warning behaviour this layer retires).
+
+- :func:`stream_schedule` — the single double-buffered ``lax.scan``
+  pipeline driver.  Chunk ``i``'s wire collectives are issued in the
+  same scan step as chunk ``i+1``'s encode, with no data dependence
+  between them, so backends with async collectives overlap the wire
+  with the MXU encode.  Every aggregator strategy drives its wire
+  through this function; none rolls its own scan.
+
+- :func:`zero1_gather_skip` — the static predicate for the ZeRO-1
+  fast path: when every parameter leaf's per-rank optimizer slice lies
+  inside that rank's recovered chunk slices, the reduce-scatter
+  aggregator can feed the optimizer shards directly and skip the
+  recovered-chunk all_gather entirely (see
+  ``CompressionConfig.strategy_wire_bytes`` for the wire it saves).
+
+:func:`zero_slice_dim` also lives here — the one definition of "which
+dim does ZeRO-1 slice" shared by ``train/step.py`` and the gather-skip
+predicate, so the two can never disagree.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .bucketing import BucketPlan
+from .config import CompressionConfig
+
+
+# ----------------------------------------------------------------------
+# The static chunk grid
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StreamPlan:
+    """Static partition of a bucket stream into wire chunks.
+
+    ``workers > 1`` marks a reduce-scatter grid: every chunk's
+    ``chunk_buckets`` divide by ``workers`` and each per-chunk scatter
+    hands rank ``r`` the chunk's ``r``-th run of
+    :attr:`rank_chunk_buckets` whole buckets.
+    """
+
+    n_buckets: int        # real buckets in the BucketPlan
+    bucket_elems: int     # E — f32 elements per bucket
+    blocks_per_bucket: int
+    words_per_bucket: int
+    workers: int          # W the chunks scatter across (1 = AllReduce wire)
+    n_chunks: int
+    chunk_buckets: int    # whole buckets per wire chunk
+
+    def __post_init__(self):
+        if self.chunk_buckets % max(self.workers, 1):
+            raise ValueError(
+                f"chunk_buckets={self.chunk_buckets} not divisible by "
+                f"workers={self.workers}")
+        if self.padded_buckets < self.n_buckets:
+            raise ValueError(
+                f"chunk grid covers {self.padded_buckets} buckets, "
+                f"stream has {self.n_buckets}")
+
+    # -- derived geometry ----------------------------------------------
+
+    @property
+    def padded_buckets(self) -> int:
+        return self.n_chunks * self.chunk_buckets
+
+    @property
+    def pad_buckets(self) -> int:
+        """Zero buckets appended so the grid tiles the stream exactly."""
+        return self.padded_buckets - self.n_buckets
+
+    @property
+    def chunk_elems(self) -> int:
+        return self.chunk_buckets * self.bucket_elems
+
+    @property
+    def rank_chunk_buckets(self) -> int:
+        """Whole buckets each rank receives from one chunk's scatter."""
+        return self.chunk_buckets // self.workers
+
+    @property
+    def streamed(self) -> bool:
+        return self.n_chunks > 1
+
+    def chunk_start_block(self, chunk):
+        """Global hash-plan block id of a chunk's first block (``chunk``
+        may be a traced int32 — used inside the scan pipeline)."""
+        return chunk * (self.chunk_buckets * self.blocks_per_bucket)
+
+    def rank_slice_start_block(self, chunk, rank):
+        """Global block id of the slice rank ``rank`` receives from
+        ``chunk``'s scatter (both args may be traced)."""
+        return self.chunk_start_block(chunk) + \
+            rank * (self.rank_chunk_buckets * self.blocks_per_bucket)
+
+    def rank_intervals(self, rank: int) -> Tuple[Tuple[int, int], ...]:
+        """Flat-stream element intervals rank ``rank`` owns after the
+        per-chunk scatters (static Python ints; used by the gather-skip
+        predicate and tests)."""
+        cbw = self.rank_chunk_buckets * self.bucket_elems
+        out = []
+        for j in range(self.n_chunks):
+            lo = j * self.chunk_elems + rank * cbw
+            out.append((lo, lo + cbw))
+        return tuple(out)
+
+    def chunk_view(self, buckets: jnp.ndarray) -> jnp.ndarray:
+        """``(n_buckets, E) -> (n_chunks, chunk_buckets, E)``, zero-padding
+        the tail chunk (padding peels to exact zeros)."""
+        if buckets.shape != (self.n_buckets, self.bucket_elems):
+            raise ValueError(
+                f"buckets shape {buckets.shape} != "
+                f"({self.n_buckets}, {self.bucket_elems})")
+        if self.pad_buckets:
+            buckets = jnp.pad(buckets, ((0, self.pad_buckets), (0, 0)))
+        return buckets.reshape(
+            self.n_chunks, self.chunk_buckets, self.bucket_elems)
+
+
+def make_stream_plan(plan: BucketPlan, cfg: CompressionConfig, *,
+                     workers: int = 1, scatter: bool = False,
+                     window_buckets: Optional[int] = None) -> StreamPlan:
+    """Resolve the chunk grid for one aggregation pass.
+
+    ``scatter=True`` builds a reduce-scatter grid over ``workers`` ranks:
+    the chunk count must divide the per-rank bucket count
+    ``ceil(n_buckets / workers)`` so no chunk splits a per-rank RS
+    boundary.  ``window_buckets`` aligns chunks to in-network switch
+    windows instead (each chunk = a whole number of windows).  With
+    neither, any chunk count in ``[1, n_buckets]`` is valid (the
+    AllReduce wire has no boundary to respect; non-divisible counts are
+    zero-padded).
+
+    The chunk count comes from ``cfg.stream_chunks`` when set; otherwise
+    ``cfg.overlap`` picks the finest aligned grid (per bucket / per rank
+    chunk / per switch window) and ``False`` means one fused chunk.
+
+    A requested count whose grid would schedule chunks made *entirely*
+    of zero-pad buckets (e.g. 4 chunks of 2 over a 5-bucket stream)
+    shrinks to the largest count that still covers the stream — empty
+    chunks would spend real collective rounds on all-zero payloads.
+    """
+    if workers < 1:
+        raise ValueError(f"workers must be >= 1, got {workers}")
+    nb = plan.n_buckets
+    nbpb = plan.blocks_per_bucket(cfg)
+    wpb = plan.words_per_bucket
+    streaming = cfg.overlap or cfg.stream_chunks is not None
+
+    def drop_empty(n_chunks: int, cb: int) -> int:
+        """Largest chunk count (<= n_chunks) with no all-padding chunk."""
+        return min(n_chunks, max(1, -(-nb // cb)))
+
+    if scatter and workers > 1:
+        per_rank = -(-nb // workers)           # ceil(n_buckets / W)
+        req = cfg.stream_chunks if cfg.stream_chunks is not None \
+            else (per_rank if streaming else 1)
+        if req < 1 or per_rank % req:
+            raise ValueError(
+                f"stream_chunks={req} splits a per-rank reduce-scatter "
+                f"boundary: the native RS wire scatters whole buckets to "
+                f"their peeling rank, so the chunk count must divide the "
+                f"per-rank bucket count ceil(n_buckets/W) = "
+                f"ceil({nb}/{workers}) = {per_rank} "
+                f"(valid counts: divisors of {per_rank})")
+        cb = (per_rank // req) * workers
+        return StreamPlan(
+            n_buckets=nb, bucket_elems=plan.bucket_elems,
+            blocks_per_bucket=nbpb, words_per_bucket=wpb, workers=workers,
+            n_chunks=drop_empty(req, cb), chunk_buckets=cb)
+
+    if window_buckets is not None:
+        if window_buckets < 1:
+            raise ValueError(
+                f"window_buckets must be >= 1, got {window_buckets}")
+        windows = -(-nb // window_buckets)
+        if cfg.stream_chunks is not None:
+            n_chunks = cfg.stream_chunks
+            if n_chunks < 1 or n_chunks > windows:
+                raise ValueError(
+                    f"stream_chunks={n_chunks} misaligns the switch "
+                    f"windows: in-network chunks span whole switch_slots="
+                    f"{window_buckets} bucket windows and the stream has "
+                    f"ceil(n_buckets/switch_slots) = ceil({nb}/"
+                    f"{window_buckets}) = {windows} window(s); use "
+                    f"stream_chunks <= {windows}")
+        else:
+            n_chunks = windows if streaming else 1
+        # fused grid covers the raw stream; streamed chunks span whole
+        # switch windows (zero-padded past the real bucket count)
+        cb = nb if n_chunks == 1 else \
+            -(-windows // n_chunks) * window_buckets
+        return StreamPlan(
+            n_buckets=nb, bucket_elems=plan.bucket_elems,
+            blocks_per_bucket=nbpb, words_per_bucket=wpb, workers=1,
+            n_chunks=drop_empty(n_chunks, cb), chunk_buckets=cb)
+
+    req = cfg.stream_chunks if cfg.stream_chunks is not None \
+        else (nb if streaming else 1)
+    if req < 1:
+        raise ValueError(f"stream_chunks must be >= 1, got {req}")
+    n_chunks = min(req, nb)
+    cb = -(-nb // n_chunks)
+    return StreamPlan(
+        n_buckets=nb, bucket_elems=plan.bucket_elems,
+        blocks_per_bucket=nbpb, words_per_bucket=wpb, workers=1,
+        n_chunks=drop_empty(n_chunks, cb), chunk_buckets=cb)
+
+
+# ----------------------------------------------------------------------
+# The double-buffered pipeline driver
+# ----------------------------------------------------------------------
+
+def stream_schedule(xs: Any, encode, reduce) -> Any:
+    """Drive per-chunk (encode -> wire) through a double-buffered scan.
+
+    ``xs``: pytree of arrays with leading dim ``n_chunks`` — the
+    per-chunk inputs (e.g. the :meth:`StreamPlan.chunk_view` buckets).
+    ``encode(i, x_i) -> payload`` produces chunk ``i``'s wire payload
+    (``i`` is a traced int32; payloads must be shape-uniform across
+    chunks).  ``reduce(payload) -> reduced`` issues the chunk's wire
+    collectives.  Chunk ``i``'s ``reduce`` is staged in the same scan
+    step as chunk ``i+1``'s ``encode`` with no data dependence between
+    them, so async-collective backends overlap wire and compute.
+
+    Returns the reduced payloads stacked on a leading ``n_chunks`` dim.
+    Bit-identical to ``reduce(encode(i))`` chunk by chunk (the schedule
+    only reorders independent work).
+    """
+    leaves = jax.tree.leaves(xs)
+    if not leaves:
+        raise ValueError("stream_schedule needs at least one input array")
+    n = leaves[0].shape[0]
+    first = encode(jnp.int32(0), jax.tree.map(lambda a: a[0], xs))
+    if n == 1:
+        return jax.tree.map(lambda a: a[None], reduce(first))
+
+    def body(carry, inp):
+        i, x = inp
+        return encode(i, x), reduce(carry)
+
+    idx = jnp.arange(1, n, dtype=jnp.int32)
+    rest = jax.tree.map(lambda a: a[1:], xs)
+    last_carry, aggs = jax.lax.scan(body, first, (idx, rest))
+    last = reduce(last_carry)
+    return jax.tree.map(
+        lambda s, l: jnp.concatenate([s, l[None]], axis=0), aggs, last)
+
+
+# ----------------------------------------------------------------------
+# ZeRO-1 alignment (the gather-skip fast path)
+# ----------------------------------------------------------------------
+
+def zero_slice_dim(shape: Sequence[int], spec, dp: int) -> Optional[int]:
+    """Dim ZeRO-1 slices for a leaf: the largest unsharded dim divisible
+    by ``dp``.  THE definition — ``train/step.py``'s optimizer sharding
+    and the gather-skip predicate both call this, so the slice the
+    optimizer consumes and the slice the aggregator checks can never
+    drift apart."""
+    cands = []
+    for i, size in enumerate(shape):
+        taken = spec[i] if i < len(spec) else None
+        if taken is None and size % dp == 0 and size >= dp:
+            cands.append((size, i))
+    if not cands:
+        return None
+    return max(cands)[1]
+
+
+def zero1_gather_skip(splan: StreamPlan, plan: BucketPlan,
+                      zero1_dims: Optional[Sequence[Optional[int]]]) -> bool:
+    """True when the chunk grid aligns with the ZeRO-1 optimizer slices.
+
+    Alignment means: for every leaf, the per-rank optimizer slice is
+    flat-contiguous (slice dim 0, or only size-1 dims before it) and
+    rank ``r``'s slice of the leaf lies entirely inside one of rank
+    ``r``'s recovered chunk slices (:meth:`StreamPlan.rank_intervals`).
+    Then each rank already holds every gradient value its optimizer
+    shard consumes, and the recovered-chunk all_gather is pure waste —
+    the reduce-scatter aggregator skips it (returning leaves that are
+    exact inside this rank's owned coordinates and zero outside; the
+    train step reduces the grad-norm across ranks instead of reading
+    off-slice values).  Static Python — evaluated at trace time.
+    """
+    W = splan.workers
+    if W == 1 or zero1_dims is None:
+        return False
+    dims = tuple(zero1_dims)
+    if len(dims) != len(plan.sizes):
+        return False
+    E = splan.bucket_elems
+    cb, cbw = splan.chunk_buckets, splan.rank_chunk_buckets
+    for off, n, d, shape in zip(plan.offsets, plan.sizes, dims, plan.shapes):
+        if d is None or n == 0:
+            return False
+        if any(s != 1 for s in shape[:d]):
+            return False                    # slice along d is not flat-contig
+        if shape[d] % W or n % W:
+            return False
+        per = n // W
+        for r in range(W):
+            start = off + r * per
+            j = start // (cb * E)
+            lo = (j * cb + r * cbw) * E
+            if not (lo <= start and start + per <= lo + cbw * E):
+                return False
+    return True

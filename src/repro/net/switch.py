@@ -80,6 +80,11 @@ class SwitchModel:
         self.root_rx_bytes = 0      # broadcast coming back down it
         self.windows = 0
         self.occupancy_peak = 0
+        # Per-window log: (resident chunks, root-link bytes) per window,
+        # in stream order — what the streamed in-mesh tree's static
+        # accounting (Topology.window_profile) is pinned against.
+        self.window_chunks: List[int] = []
+        self.window_root_bytes: List[int] = []
         if self.policy is not None:
             self.policy.events.clear()  # counters and events are per run
 
@@ -146,6 +151,8 @@ class SwitchModel:
             self.windows += 1
             self.occupancy_peak = max(self.occupancy_peak, w1 - w0)
             up_bytes = out_sk[w0:w1].nbytes + out_bm[w0:w1].nbytes
+            self.window_chunks.append(w1 - w0)
+            self.window_root_bytes.append(up_bytes)
             for p in range(self.ports):
                 pc = self.port_counters[p]
                 chunk_bytes = sk[p, w0:w1].nbytes + bm[p, w0:w1].nbytes
@@ -183,6 +190,8 @@ class SwitchModel:
             "slots": self.slots,
             "windows": self.windows,
             "occupancy_peak": self.occupancy_peak,
+            "window_chunks": tuple(self.window_chunks),
+            "window_root_bytes": tuple(self.window_root_bytes),
             "root_link_tx_bytes": self.root_tx_bytes,
             "root_link_rx_bytes": self.root_rx_bytes,
             "per_port": [dataclasses.asdict(pc) for pc in self.port_counters],

@@ -106,6 +106,36 @@ class Topology:
                 f * payload_bytes for f in self.fanouts),
         }
 
+    def window_profile(self, chunk_bytes: int, n_chunks: int,
+                       slots: int) -> Dict[str, object]:
+        """Per-window wire accounting of the *streamed* tree (PR 5).
+
+        The collective schedule reduces the stream in windows of at most
+        ``slots`` bucket chunks (``tree_all_reduce(...,
+        window_slots=slots)``), exactly as the emulated
+        :class:`repro.net.switch.SwitchModel` streams its bounded SRAM
+        slot pool — this static profile and the switch's runtime
+        ``report()`` must agree window for window (``windows``,
+        ``occupancy_peak``, ``window_chunks``, ``window_root_bytes``,
+        and the per-direction root-link total), which the tests pin.
+        ``chunk_bytes``: wire bytes of one chunk (int32 sketch + uint32
+        bitmap words for one bucket on the fxp32 wire).
+        """
+        if chunk_bytes < 0 or n_chunks < 0:
+            raise ValueError("chunk_bytes/n_chunks must be >= 0")
+        if slots < 1:
+            raise ValueError(f"slots must be >= 1, got {slots}")
+        window_chunks = tuple(min(slots, n_chunks - w0)
+                              for w0 in range(0, n_chunks, slots))
+        return {
+            "windows": len(window_chunks),
+            "occupancy_peak": max(window_chunks, default=0),
+            "window_chunks": window_chunks,
+            "window_root_bytes": tuple(c * chunk_bytes
+                                       for c in window_chunks),
+            "root_link_bytes": n_chunks * chunk_bytes,
+        }
+
 
 def make_topology(kind: str, mesh, dp_axes: Sequence[str]) -> Topology:
     """Map ``kind`` onto the mesh's DP axes.
@@ -200,7 +230,8 @@ def broadcast_from_root(x: jnp.ndarray, axis_name: str,
 
 def tree_all_reduce(x: jnp.ndarray, topo: Topology, combine: str,
                     axis_indices: Optional[dict] = None,
-                    use_ppermute: Optional[bool] = None) -> jnp.ndarray:
+                    use_ppermute: Optional[bool] = None,
+                    window_slots: Optional[int] = None) -> jnp.ndarray:
     """Reduce-to-root + broadcast over the topology's levels.
 
     The in-mesh analogue of in-network aggregation: each level's axis is
@@ -216,6 +247,14 @@ def tree_all_reduce(x: jnp.ndarray, topo: Topology, combine: str,
     follows ``compat.SUPPORTS_PARTIAL_AUTO_PPERMUTE``; full-manual
     callers on 0.4.x should pass True).
 
+    ``window_slots`` is the windowed mode (PR 5): the leading dim of
+    ``x`` is a stream of chunks (e.g. buckets) and the tree reduces at
+    most ``window_slots`` of them per round, window by window, exactly
+    as a real switch streams its bounded SRAM slot pool
+    (:class:`repro.net.switch.SwitchModel`; per-window traffic in
+    :meth:`Topology.window_profile`). Bit-identical to the one-shot
+    reduction — windowing only splits the schedule.
+
     ``axis_indices``: {axis: this shard's index} — required complete (or
     None), as in :func:`repro.core.collectives.or_allreduce`.
     """
@@ -223,6 +262,18 @@ def tree_all_reduce(x: jnp.ndarray, topo: Topology, combine: str,
     if combine not in ("add", "or"):
         raise ValueError(f"combine must be 'add' or 'or', got {combine!r}")
     _combine_fn(combine, x.dtype)  # dtype gate even on the fallback wire
+    if window_slots is not None:
+        if window_slots < 1:
+            raise ValueError(
+                f"window_slots must be >= 1, got {window_slots}")
+        n = x.shape[0]
+        if n > window_slots:
+            parts = [
+                tree_all_reduce(x[w0:w0 + window_slots], topo, combine,
+                                axis_indices=axis_indices,
+                                use_ppermute=use_ppermute)
+                for w0 in range(0, n, window_slots)]
+            return jnp.concatenate(parts, axis=0)
     if use_ppermute is None:
         use_ppermute = compat.SUPPORTS_PARTIAL_AUTO_PPERMUTE
     if not use_ppermute:

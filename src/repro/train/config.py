@@ -31,6 +31,16 @@ class TrainConfig:
         default_factory=ShardingProfile)
     remat: str = "block"                 # "none" | "block" | "dots"
     accum_steps: int = 1                 # microbatch gradient accumulation
+    rs_gather_skip: bool = True          # with compressed_rs + zero1:
+                                         # when the stream chunk grid
+                                         # aligns with the ZeRO-1 slices
+                                         # (streams.zero1_gather_skip),
+                                         # feed per-rank recovered chunks
+                                         # straight into the optimizer
+                                         # shards and skip the recovered-
+                                         # chunk all_gather (the saving
+                                         # shows in strategy_wire_bytes);
+                                         # False forces the full gather
     seed: int = 0
 
     def __post_init__(self):

@@ -9,11 +9,17 @@ The step is organised exactly like the paper's Algorithm 1 deployment:
      arm), ``"compressed"`` (the paper's pipeline over fixed-size
      gradient buckets: ONE sketch encode + ONE stacked sketch-``psum`` +
      ONE index OR-AllReduce for the whole pytree, optionally pipelined
-     per bucket via ``cfg.overlap``), ``"compressed_rs"`` (the
-     reduce-scatter wire: ``psum_scatter`` sketch + OR-Reduce-Scatter
-     bitmap where supported, so each DP rank receives and peels only its
-     own 1/W bucket range — the natural partner of the ZeRO-1 sharded
-     optimizer; emulated by psum + slice on 0.4.x partial-auto), or
+     per wire chunk through the shared stream scheduler —
+     ``cfg.overlap`` / ``cfg.stream_chunks``, ``core/streams.py``),
+     ``"compressed_rs"`` (the reduce-scatter wire: ``psum_scatter``
+     sketch + OR-Reduce-Scatter bitmap where supported, so each DP rank
+     receives and peels only its own 1/W bucket range — the natural
+     partner of the ZeRO-1 sharded optimizer, including the PR 5
+     gather-skip path: when the stream chunk grid aligns with the
+     ZeRO-1 slices, per-rank recovered chunks feed the optimizer
+     shards directly and the recovered-chunk all_gather disappears
+     (``tc.rs_gather_skip``); emulated by psum + slice on 0.4.x
+     partial-auto), or
      ``"compressed_innet"`` (the emulated in-network tier of PR 4: the
      stream rides a worker->ToR->spine switch tree from ``repro.net``
      once per worker — integer-add sketch over the fixed-point wire
@@ -43,6 +49,7 @@ from jax.sharding import PartitionSpec as P, NamedSharding
 from repro import compat
 from repro.core import aggregators as agg_lib
 from repro.core import collectives as coll
+from repro.core import streams as streams_lib
 from repro.models.registry import ModelAPI
 from repro.parallel import sharding as shd
 from repro.parallel.hints import logical_axis_rules
@@ -94,16 +101,14 @@ def init_train_state(api: ModelAPI, tc: TrainConfig, mesh, key) -> TrainState:
 # Sharding trees for the state / batch
 # ----------------------------------------------------------------------
 
-def _zero_slice_dim(shape, spec: P, dp: int, stacked_dim0: bool) -> Optional[int]:
-    """Dim to slice for ZeRO-1: largest unsharded dim divisible by dp."""
-    cands = []
-    for i, size in enumerate(shape):
-        taken = spec[i] if i < len(spec) else None
-        if taken is None and size % dp == 0 and size >= dp:
-            cands.append((size, i))
-    if not cands:
-        return None
-    return max(cands)[1]
+# The ZeRO-1 slice-dim rule lives in core/streams.py: the reduce-scatter
+# aggregator's gather-skip predicate checks alignment against the exact
+# same definition, so the slice the optimizer consumes and the slice the
+# aggregator validates can never drift apart.
+def _zero_slice_dim(shape, spec: P, dp: int,
+                    stacked_dim0: bool = False) -> Optional[int]:
+    del stacked_dim0
+    return streams_lib.zero_slice_dim(shape, spec, dp)
 
 
 def state_specs(state: TrainState, tc: TrainConfig, mesh) -> Dict[str, Any]:
@@ -261,26 +266,35 @@ def build_train_step(api: ModelAPI, tc: TrainConfig, mesh):
     manual_all_gather = bool(dp_axes) and \
         compat.full_manual_region(step_manual, mesh)
 
-    def aggregate(grads, residual, pspecs):
-        if isinstance(aggregator, agg_lib.DenseAggregator):
-            return coll.dense_all_reduce(grads, dp_axes), residual
-        res_local = jax.tree.map(
-            lambda r: r[0] if r.ndim > 1 else r, residual)
-        agg, new_state = aggregator(
-            grads, coll.AggregationState(residual=res_local), pspecs)
-        new_res = jax.tree.map(
-            lambda old, r: r[None] if old.ndim > 1 else old,
-            residual, new_state.residual)
-        return agg, new_res
+    def make_aggregate(agg):
+        def aggregate(grads, residual, pspecs):
+            if isinstance(agg, agg_lib.DenseAggregator):
+                return coll.dense_all_reduce(grads, dp_axes), residual
+            res_local = jax.tree.map(
+                lambda r: r[0] if r.ndim > 1 else r, residual)
+            out, new_state = agg(
+                grads, coll.AggregationState(residual=res_local), pspecs)
+            new_res = jax.tree.map(
+                lambda old, r: r[None] if old.ndim > 1 else old,
+                residual, new_state.residual)
+            return out, new_res
+        return aggregate
 
     def _dp_rank():
         # Rank-major linearization shared with the collectives layer so
         # ZeRO-1 slice placement matches psum_scatter/all_gather tiling.
         return coll.linear_rank(dp_axes)
 
-    def apply_updates(params, opt, grads, step, pspecs):
+    def apply_updates(params, opt, grads, step, pspecs, norm_psum=False):
         lr = opt_lib.lr_schedule(step, ocfg)
         gnorm = opt_lib.global_grad_norm(grads)
+        if norm_psum:
+            # Gather-skip path: each rank holds a disjoint piece of the
+            # aggregated gradient (exact inside its owned coordinates,
+            # zero outside), so the global norm is the cross-rank psum
+            # of the per-rank squared norms — every coordinate counted
+            # exactly once.
+            gnorm = jnp.sqrt(jax.lax.psum(gnorm * gnorm, tuple(dp_axes)))
         if ocfg.grad_clip:
             grads = opt_lib.clip_grads(grads, gnorm, ocfg.grad_clip)
         moms = list(opt.keys())
@@ -335,11 +349,30 @@ def build_train_step(api: ModelAPI, tc: TrainConfig, mesh):
         specs = state_specs(state, tc, mesh)
         pspecs = specs["pspecs"]
 
+        # ZeRO-1 gather-skip (PR 5): hand the reduce-scatter aggregator
+        # the per-leaf slice dims the optimizer will consume. When the
+        # stream chunk grid aligns with them, the aggregator feeds each
+        # rank's optimizer shard directly and skips the recovered-chunk
+        # all_gather; the step then reduces the grad-norm across ranks
+        # (the only consumer of off-shard gradient values).
+        aggregator_use, norm_psum = aggregator, False
+        if (prof.zero1 and tc.rs_gather_skip and dp > 1 and isinstance(
+                aggregator, agg_lib.CompressedReduceScatterAggregator)):
+            p_leaves, treedef = jax.tree.flatten(state.params)
+            spec_leaves = treedef.flatten_up_to(pspecs)
+            dims = tuple(_zero_slice_dim(p.shape, s, dp)
+                         for p, s in zip(p_leaves, spec_leaves))
+            aggregator_use = dataclasses.replace(aggregator,
+                                                 zero1_dims=dims)
+            norm_psum = aggregator_use.gather_skip_active(state.params,
+                                                          pspecs)
+        aggregate = make_aggregate(aggregator_use)
+
         def inner(params, opt, residual, step, batch):
             loss, metrics, grads = local_grads(params, batch, pspecs)
             grads, residual = aggregate(grads, residual, pspecs)
             params, opt, gnorm = apply_updates(params, opt, grads, step,
-                                               pspecs)
+                                               pspecs, norm_psum=norm_psum)
             # cross-worker metric reduction
             loss = jax.lax.psum(loss, dp_axes) / dp if dp_axes else loss
             metrics = {k: (jax.lax.psum(v, dp_axes) / dp if dp_axes else v)

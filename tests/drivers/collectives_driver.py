@@ -33,6 +33,17 @@ Validates, on a (2, 2, 2) pod/data/model mesh:
      host-side replay of the documented codec roundtrip
      (shared-exponent quantize -> integer sum -> dequantize -> peel),
      for the flat and tor_spine topologies.
+  9. the stream scheduler (PR 5): chunked wire grids — per-bucket and
+     non-divisible AllReduce chunks, per-rank-aligned native-RS chunks
+     (per-chunk psum_scatter/OR-RS), emulated-RS chunks, and innet
+     switch-window chunks (f32 + fxp32) — are ALL bit-identical to the
+     fused wire over 3 EF steps; dense ignores the knob; a grid that
+     splits a per-rank RS boundary raises ValueError naming the
+     constraint; tree_all_reduce's windowed mode == one-shot.
+ 10. the ZeRO-1 gather-skip: on a chunk grid aligned with the ZeRO-1
+     slices the native-RS aggregator skips the recovered-chunk
+     all_gather (pinned on the jaxpr), each rank's slice is bit-exact
+     vs the full wire, off-slice values are zero, residuals identical.
 """
 import os
 os.environ.setdefault(
@@ -479,6 +490,185 @@ for step in range(3):
         assert np.array_equal(out_fx[k], np.asarray(ref_tree[k])), \
             f"fxp32 wire != documented codec roundtrip, step {step} leaf {k}"
 print("OK innet fxp32 == host replay of the documented codec roundtrip")
+
+# ---- 9. stream scheduler (PR 5): chunked == unchunked, all strategies
+# The 5-bucket EF stream over W=4 ranks: per-rank bucket count is
+# ceil(5/4) = 2, so the native RS wire admits chunk grids {1, 2};
+# stream_chunks=3 on the AllReduce wire is non-divisible (pads to 6);
+# switch_slots=2 gives the innet tree 3 windows. Every grid must be
+# bit-invisible over 3 EF steps.
+stream_arms = [
+    ("compressed overlap=per-bucket", dict(overlap=True)),
+    ("compressed chunks=3 (non-divisible)",
+     dict(overlap=False, stream_chunks=3)),
+    ("compressed_rs native overlap=per-rank-chunk",
+     dict(overlap=True, name="compressed_rs", rs_wire="native")),
+    ("compressed_rs native chunks=2",
+     dict(overlap=False, name="compressed_rs", rs_wire="native",
+          stream_chunks=2)),
+    ("compressed_rs emulated chunks=3",
+     dict(overlap=False, name="compressed_rs", rs_wire="emulate",
+          stream_chunks=3)),
+    ("compressed_innet f32 windows=2",
+     dict(overlap=True, name="compressed_innet", switch_slots=2)),
+    ("compressed_innet fxp32 windows=2",
+     dict(overlap=True, name="compressed_innet", wire_dtype="fxp32",
+          switch_slots=2)),
+]
+for label, kw in stream_arms:
+    got_s = run_ef(**kw)
+    for step in range(3):
+        for k in ef_shapes:
+            assert np.array_equal(got_ef[step][0][k], got_s[step][0][k]), \
+                f"[{label}] diverged at step {step} leaf {k}"
+            assert np.array_equal(got_ef[step][1][k], got_s[step][1][k]), \
+                f"[{label}] residuals diverged at step {step} leaf {k}"
+    print(f"OK stream scheduler: {label} == fused, 3 EF steps")
+
+# dense ignores the chunk knob entirely (no wire chunks to cut)
+got_d1 = run_ef(overlap=False, name="dense")
+got_d2 = run_ef(overlap=False, name="dense", stream_chunks=3)
+for step in range(3):
+    for k in ef_shapes:
+        assert np.array_equal(got_d1[step][0][k], got_d2[step][0][k])
+print("OK stream scheduler: dense chunked == unchunked")
+
+# forcing a grid that splits a per-rank RS boundary names the constraint
+try:
+    run_ef(overlap=False, name="compressed_rs", rs_wire="native",
+           stream_chunks=3)
+except ValueError as e:
+    assert "ceil(n_buckets/W)" in str(e), e
+else:
+    raise AssertionError("boundary-splitting stream_chunks did not raise")
+print("OK stream scheduler: RS boundary split raises ValueError")
+
+# windowed tree mode == one-shot tree == psum/OR (both combiners)
+topoW = make_topology("flat", mesh, ("pod", "data"))
+giW, gwW = jax.jit(shard_map(
+    lambda a, w: (
+        tree_all_reduce(a[0, 0], topoW, "add",
+                        axis_indices={ax: jax.lax.axis_index(ax)
+                                      for ax in ("pod", "data")},
+                        use_ppermute=True, window_slots=3),
+        tree_all_reduce(w[0, 0], topoW, "or",
+                        axis_indices={ax: jax.lax.axis_index(ax)
+                                      for ax in ("pod", "data")},
+                        use_ppermute=True, window_slots=3)),
+    mesh=mesh,
+    in_specs=(P("pod", "data", None), P("pod", "data", None)),
+    out_specs=(P(), P()), axis_names={"pod", "data", "model"},
+    check_vma=False))(
+    jax.device_put(jnp.asarray(ints8.reshape(2, 2, -1)),
+                   NamedSharding(mesh, P("pod", "data", None))),
+    jax.device_put(jnp.asarray(wordsT.reshape(2, 2, -1)),
+                   NamedSharding(mesh, P("pod", "data", None))))
+assert np.array_equal(np.asarray(giW), ints8.sum(0))
+assert np.array_equal(np.asarray(gwW), np.bitwise_or.reduce(wordsT, 0))
+print("OK tree_all_reduce windowed mode == one-shot")
+
+# ---- 10. ZeRO-1 gather-skip: aligned chunk grid feeds optimizer shards
+# Two 4-bucket leaves (8-bucket stream), W=4: with stream_chunks=2 the
+# grid is 2 chunks x 4 buckets, rank r owns bucket r of each chunk —
+# exactly each leaf's dim-0 ZeRO-1 slice r. The aggregator must skip
+# the recovered-chunk all_gather, return leaves exact inside this
+# rank's slice (zero outside), and keep residuals bit-identical.
+E_skip = 1536  # cfg_ef bucket_elems (2 blocks)
+skip_shapes = {"wa": (4 * E_skip,), "wb": (4 * E_skip,)}
+skip_specs = {k: P() for k in skip_shapes}
+
+
+def skip_tree(seed):
+    r = np.random.default_rng(seed)
+    out = {}
+    for k, sh in skip_shapes.items():
+        n = int(np.prod(sh))
+        g = np.zeros(n, np.float32)
+        nz = max(1, int(n * 0.2))
+        idx = r.choice(n, size=nz, replace=False)
+        g[idx] = (r.choice([-1.0, 1.0], size=nz)
+                  * np.exp2(r.integers(-2, 3, size=nz))).astype(np.float32)
+        out[k] = g.reshape(sh)
+    return out
+
+
+def run_skip(name, zero1_dims=None, **overrides):
+    cfg = dataclasses.replace(cfg_ef, **overrides)
+    agg = make_aggregator(name, cfg, mesh, ("pod", "data"), (),
+                          outer_manual=("pod", "data", "model"),
+                          zero1_dims=zero1_dims)
+
+    def ef_step(gs, rs):
+        g = jax.tree.map(lambda a: a[0], gs)
+        r = jax.tree.map(lambda a: a[0], rs)
+        out, st = agg(g, AggregationState(residual=r), skip_specs)
+        # keep per-rank outputs visible (the skip path returns
+        # rank-local data): stack on the dp axes
+        return (jax.tree.map(lambda a: a[None], out),
+                jax.tree.map(lambda a: a[None], st.residual))
+
+    ris = {k: P(("pod", "data")) for k in skip_shapes}
+    jfn = jax.jit(shard_map(
+        ef_step, mesh=mesh, in_specs=(ris, ris), out_specs=(ris, ris),
+        axis_names={"pod", "data", "model"}, check_vma=False))
+    res = {k: jnp.zeros((n_workers,) + sh, jnp.float32)
+           for k, sh in skip_shapes.items()}
+    outs = []
+    for step in range(3):
+        per_w = [skip_tree(500 + 10 * step + w) for w in range(n_workers)]
+        stacked = {k: jnp.asarray(np.stack([pw[k] for pw in per_w]))
+                   for k in skip_shapes}
+        stacked = jax.tree.map(
+            lambda a, s: jax.device_put(a, NamedSharding(mesh, s)),
+            stacked, ris)
+        out, res = jfn(stacked, res)
+        outs.append((jax.tree.map(np.asarray, out),
+                     jax.tree.map(np.asarray, res)))
+    return agg, jfn, outs
+
+
+agg_skip, jfn_skip, got_skip = run_skip(
+    "compressed_rs", zero1_dims=(0, 0), rs_wire="native", stream_chunks=2)
+assert agg_skip.gather_skip_active(
+    {k: np.zeros(sh, np.float32) for k, sh in skip_shapes.items()}), \
+    "aligned grid did not activate the gather skip"
+# misaligned (fused) grid and missing zero1_dims keep the gather
+agg_1c, _, _ = run_skip("compressed_rs", zero1_dims=(0, 0),
+                        rs_wire="native", stream_chunks=1)
+assert not agg_1c.gather_skip_active(
+    {k: np.zeros(sh, np.float32) for k, sh in skip_shapes.items()})
+_, _, got_full = run_skip("compressed", rs_wire="auto")
+for step in range(3):
+    for k in skip_shapes:
+        # residuals are per-leaf, before the wire: identical
+        assert np.array_equal(got_skip[step][1][k], got_full[step][1][k]), \
+            f"gather-skip residuals diverged at step {step} leaf {k}"
+        for r in range(n_workers):
+            sl = slice(r * E_skip, (r + 1) * E_skip)
+            assert np.array_equal(got_skip[step][0][k][r][sl],
+                                  got_full[step][0][k][r][sl]), \
+                f"gather-skip slice wrong at step {step} leaf {k} rank {r}"
+            mask = np.ones(4 * E_skip, bool)
+            mask[sl] = False
+            assert not got_skip[step][0][k][r][mask].any(), \
+                f"gather-skip off-slice values leaked at step {step} " \
+                f"leaf {k} rank {r}"
+print("OK gather-skip: per-rank slices exact, off-slice zero, 3 EF steps")
+
+# the skip path must launch NO all_gather; the gathered path must
+agg_g, jfn_g, _ = run_skip("compressed_rs", rs_wire="native",
+                           stream_chunks=2)
+_stk = {k: jax.device_put(
+    jnp.zeros((n_workers,) + sh, jnp.float32),
+    NamedSharding(mesh, P(("pod", "data"))))
+    for k, sh in skip_shapes.items()}
+_res = {k: jnp.zeros((n_workers,) + sh, jnp.float32)
+        for k, sh in skip_shapes.items()}
+assert "all_gather" not in str(jax.make_jaxpr(jfn_skip)(_stk, _res)), \
+    "gather-skip path still launches all_gather"
+assert "all_gather" in str(jax.make_jaxpr(jfn_g)(_stk, _res)), \
+    "gathered path lost its all_gather"
+print("OK gather-skip: no all_gather in the skip jaxpr")
 
 # ---- 4. reduce-scatter aggregator on the TP-sharded tree -------------
 got_rs = jax.jit(shard_map(

@@ -126,4 +126,83 @@ assert all(abs(a - b) < 1e-4 for a, b in zip(l_ll, l_in)), \
 assert all(abs(a - b) < 0.05 for a, b in zip(l_ll, l_in_fx)), \
     f"in-network fxp32 wire off-track: {l_ll} vs {l_in_fx}"
 assert l_in_fx[-1] < l_in_fx[0], "fxp32 training loss must decrease"
+
+# PR 5: the streamed native RS wire (per-chunk psum_scatter staged
+# against the next chunk's encode by core/streams.py) inside the real
+# train step must stay exactly on the one-shot track.
+l_rs_ov = run(TrainConfig(
+    aggregator="compressed_rs", optimizer=opt,
+    compression=dataclasses.replace(tc_comp_ll.compression, overlap=True),
+    sharding=ShardingProfile(zero1=True), remat="block"))
+print("comp rs ovl  :", [round(x, 4) for x in l_rs_ov])
+assert all(abs(a - b) < 1e-4 for a, b in zip(l_rs, l_rs_ov)), \
+    f"streamed RS wire diverged from one-shot in the step: {l_rs} vs {l_rs_ov}"
+
+# PR 5 gather-skip inside the real train step: a stub model whose two
+# 4-bucket leaves align with the ZeRO-1 slices on a 2-chunk grid. With
+# tc.rs_gather_skip the step must drop the recovered-chunk all_gather
+# (fewer all_gather eqns in the jaxpr) and train identically (the only
+# off-shard consumer, the grad-norm, is psum-reduced on that path).
+from repro.models.registry import ModelAPI
+
+E_skip = 1536  # bucket_elems of the skip compression config below
+n_p = 4 * E_skip
+
+
+def _stub_init(key):
+    del key
+    base = jnp.linspace(-1.0, 1.0, n_p, dtype=jnp.float32)
+    return {"wa": base, "wb": base[::-1] * 0.5}
+
+
+def _stub_loss(p, b, remat="none"):
+    del remat
+    pred = b["x"] * (p["wa"] + p["wb"])[None, :]
+    loss = jnp.mean((pred - b["y"]) ** 2)
+    return loss, {"mse": loss}
+
+
+stub_api = ModelAPI(cfg=None, init=_stub_init, loss=_stub_loss,
+                    prefill=None, decode=None, init_cache=None)
+stub_batch = {
+    "x": jnp.asarray(rng.standard_normal((8, n_p)).astype(np.float32)),
+    "y": jnp.asarray(rng.standard_normal((8, n_p)).astype(np.float32)),
+}
+skip_comp = CompressionConfig(ratio=1.0, lanes=128, rows=6, chunk_blocks=8,
+                              topk_ratio=0.1, topk_exact=True,
+                              error_feedback=True, bucket_bytes=2 * 768 * 4,
+                              rs_wire="native", stream_chunks=2)
+stub_prof = ShardingProfile(tp_axis=None, vocab_axis=None, zero1=True)
+
+
+def run_stub(rs_gather_skip):
+    tc = TrainConfig(aggregator="compressed_rs", optimizer=opt,
+                     compression=skip_comp, sharding=stub_prof,
+                     remat="none", rs_gather_skip=rs_gather_skip)
+    state = init_train_state(stub_api, tc, mesh, jax.random.PRNGKey(0))
+    step_fn, specs = build_train_step(stub_api, tc, mesh)(state)
+    _, bnamed = batch_specs(stub_batch, mesh, tc)
+    n_ag = str(jax.make_jaxpr(step_fn)(state, stub_batch)).count("all_gather")
+    jitted = jax.jit(step_fn, in_shardings=(specs["named"], bnamed),
+                     out_shardings=(specs["named"], None))
+    st = jax.device_put(state, specs["named"])
+    b = jax.device_put(stub_batch, bnamed)
+    losses = []
+    for _ in range(6):
+        st, m = jitted(st, b)
+        losses.append(float(m["loss"]))
+    return losses, n_ag
+
+
+l_skip, ag_skip = run_stub(True)
+l_gather, ag_gather = run_stub(False)
+print("stub skip    :", [round(x, 5) for x in l_skip], f"all_gathers={ag_skip}")
+print("stub gather  :", [round(x, 5) for x in l_gather],
+      f"all_gathers={ag_gather}")
+assert ag_skip < ag_gather, (
+    "gather-skip step did not drop the recovered-chunk all_gather: "
+    f"{ag_skip} vs {ag_gather}")
+assert all(abs(a - b) < 1e-5 for a, b in zip(l_skip, l_gather)), \
+    f"gather-skip training diverged: {l_skip} vs {l_gather}"
+assert l_skip[-1] < l_skip[0], "stub training loss must decrease"
 print("ALL OK")

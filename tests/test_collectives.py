@@ -184,9 +184,21 @@ def test_strategy_wire_bytes_native_rs_is_one_over_w():
     assert nat * W == full, "native RS payload must be exactly 1/W"
     # emulated RS ships the AllReduce wire
     assert acc["compressed_rs_emulated"] == acc["compressed"]
-    # link traffic: RS ring sends half of what the AR ring sends
-    assert acc["compressed_rs_native"]["link_bytes"] * 2 == \
+    # link traffic: the RS ring itself sends half of what the AR ring
+    # sends (the no-gather number)
+    nat_acc = acc["compressed_rs_native"]
+    assert nat_acc["link_bytes_no_gather"] * 2 == \
         acc["compressed"]["link_bytes"]
+    # the default (unaligned) accounting ships the recovered-chunk
+    # gather too; ZeRO-1-aligned chunk grids skip it entirely
+    assert nat_acc["link_bytes"] == nat_acc["link_bytes_with_gather"] \
+        == nat_acc["link_bytes_no_gather"] + nat_acc["rs_gather_link_bytes"]
+    assert not nat_acc["zero1_aligned"]
+    aligned = cfg.strategy_wire_bytes(n, workers=W, grad_bytes_per_elem=4,
+                                      zero1_aligned=True)[
+        "compressed_rs_native"]
+    assert aligned["zero1_aligned"]
+    assert aligned["link_bytes"] == aligned["link_bytes_no_gather"]
     assert acc["dense"]["rank_payload_bytes"] == n * 4
 
 
@@ -244,7 +256,10 @@ def test_strategy_wire_bytes_padding_non_power_of_two(workers):
     assert acc["compressed_rs_emulated"] == acc["compressed"]
     nat = acc["compressed_rs_native"]
     assert nat["rank_payload_bytes"] == nb_p * per_bucket // workers
-    assert nat["link_bytes"] == int(nb_p * per_bucket * rs)
+    assert nat["link_bytes_no_gather"] == int(nb_p * per_bucket * rs)
+    assert nat["rs_gather_link_bytes"] == int(nb_p * 768 * 4 * rs)
+    assert nat["link_bytes"] == \
+        nat["link_bytes_no_gather"] + nat["rs_gather_link_bytes"]
     # chunk padding never erases the win for this bucket count
     assert nat["rank_payload_bytes"] < full
     # innet: bucket-padded stream once up the tree, no chunk padding;
@@ -296,52 +311,40 @@ def test_make_aggregator_unknown_strategy_names_valid_ones():
 
 
 # ----------------------------------------------------------------------
-# cfg.overlap on wires that cannot stage per bucket: one-time warning
+# cfg.overlap is honored on EVERY wire now (PR 5): constructing and
+# running the native-RS / innet strategies with overlap must stay
+# silent (the PR 4 one-time "overlap ignored" warnings are retired;
+# unsatisfiable chunk grids raise ValueError from core/streams.py
+# naming the alignment constraint — see tests/test_streams.py).
 # ----------------------------------------------------------------------
 
-def _arm_overlap_warning(monkeypatch):
-    import repro.core.aggregators as agg_mod
-    monkeypatch.setattr(agg_mod, "_OVERLAP_WARNED", set())
-    return agg_mod
-
-
-def test_native_rs_overlap_warns_once(monkeypatch):
-    """ROADMAP open item: cfg.overlap used to be *silently* ignored on
-    the native RS wire. It must now say so (naming the strided-wire
-    reason), exactly once per process."""
-    agg_mod = _arm_overlap_warning(monkeypatch)
+@pytest.mark.parametrize("name", ["compressed_rs", "compressed_innet"])
+def test_overlap_is_honored_without_warning(name):
+    from repro.core.aggregators import make_aggregator
     cfg = CompressionConfig(ratio=1.0, lanes=128, rows=6, overlap=True,
-                            bucket_bytes=768 * 4)
+                            bucket_bytes=768 * 4, switch_slots=1)
+    fused = dataclasses.replace(cfg, overlap=False)
     mesh = make_mesh((1,), ("data",))
-    with pytest.warns(UserWarning, match="overlap.*strided wire"):
-        agg_mod.make_aggregator("compressed_rs", cfg, mesh, ("data",),
-                                outer_manual=("data",))
-    # one-time: a second construction stays quiet
+    tree = {"w": jnp.asarray(
+        np.linspace(-2.0, 2.0, 3 * 768, dtype=np.float32))}
+    specs = {"w": P()}
+
+    def run(c):
+        agg = make_aggregator(name, c, mesh, ("data",), (),
+                              outer_manual=("data",))
+
+        def fn(g, r):
+            out, st = agg(g, AggregationState(residual=r), specs)
+            return out
+
+        jfn = jax.jit(shard_map(
+            fn, mesh=mesh, in_specs=(specs, specs), out_specs=specs,
+            axis_names={"data"}, check_vma=False))
+        return np.asarray(jfn(tree, init_aggregation_state(
+            tree, c).residual)["w"])
+
     with warnings.catch_warnings():
         warnings.simplefilter("error")
-        agg_mod.make_aggregator("compressed_rs", cfg, mesh, ("data",),
-                                outer_manual=("data",))
-
-
-def test_emulated_rs_overlap_does_not_warn(monkeypatch):
-    """The emulated wire *does* honor overlap — no warning there."""
-    agg_mod = _arm_overlap_warning(monkeypatch)
-    cfg = CompressionConfig(ratio=1.0, lanes=128, rows=6, overlap=True,
-                            rs_wire="emulate", bucket_bytes=768 * 4)
-    mesh = make_mesh((1,), ("data",))
-    with warnings.catch_warnings():
-        warnings.simplefilter("error")
-        agg_mod.make_aggregator("compressed_rs", cfg, mesh, ("data",),
-                                outer_manual=("data",))
-
-
-def test_innet_overlap_warns_once(monkeypatch):
-    agg_mod = _arm_overlap_warning(monkeypatch)
-    cfg = CompressionConfig(ratio=1.0, lanes=128, rows=6, overlap=True,
-                            bucket_bytes=768 * 4)
-    mesh = make_mesh((1,), ("data",))
-    with pytest.warns(UserWarning, match="compressed_innet"):
-        agg_mod.make_aggregator("compressed_innet", cfg, mesh, ("data",))
-    with warnings.catch_warnings():
-        warnings.simplefilter("error")
-        agg_mod.make_aggregator("compressed_innet", cfg, mesh, ("data",))
+        got = run(cfg)
+    assert np.array_equal(got, run(fused)), \
+        "overlapped schedule diverged from the fused wire"

@@ -173,6 +173,27 @@ def test_bucketed_overlap_matches_fused_bitwise():
             assert np.array_equal(rf[k], ro[k]), (name, k)
 
 
+# The shared stream scheduler (PR 5): an explicit wire-chunk grid must be
+# bit-invisible for EVERY strategy on EVERY backend over 3 error-feedback
+# steps. stream_chunks=4 over the 6-bucket test stream is non-divisible
+# (zero-pads to 8); switch_slots=1 gives the innet tree 6 one-bucket
+# windows so any chunk count spans whole windows. ``dense`` has no wire
+# chunks — it must simply ignore the knob.
+@pytest.mark.parametrize("name", ["dense", "compressed", "compressed_rs",
+                                  "compressed_innet"])
+@pytest.mark.parametrize("backend", ["never", "always"])
+def test_stream_chunked_matches_unchunked_bitwise(name, backend):
+    base = dataclasses.replace(AGG_BASE, use_pallas=backend)
+    chunked = dataclasses.replace(base, stream_chunks=4, switch_slots=1)
+    outs_f, res_f = _run_aggregator(base, name, steps=3)
+    outs_c, res_c = _run_aggregator(chunked, name, steps=3)
+    for step, (of, oc) in enumerate(zip(outs_f, outs_c)):
+        for k in of:
+            assert np.array_equal(of[k], oc[k]), (name, step, k)
+    for k in res_f:
+        assert np.array_equal(res_f[k], res_c[k]), (name, k)
+
+
 def test_rs_matches_plain_bitwise():
     (plain,), _ = _run_aggregator(
         dataclasses.replace(AGG_BASE, use_pallas="never"), "compressed")

@@ -345,6 +345,29 @@ def test_topology_single_worker_no_wire():
     assert prof["root_link_bytes"] == 0
 
 
+@pytest.mark.parametrize("n_chunks,slots", [(7, 2), (4, 4), (5, 8), (1, 1)])
+def test_window_profile_pins_switch_slot_accounting(n_chunks, slots):
+    """The streamed in-mesh tree's static per-window accounting
+    (Topology.window_profile, PR 5) must agree window for window with
+    what the SwitchModel actually streams through its slot pool —
+    windows, peak occupancy, per-window root bytes, and the root-link
+    total."""
+    topo = Topology(kind="flat", levels=("data",), sizes=(3,))
+    sk, bm = _chunks(ports=3, n_chunks=n_chunks)
+    chunk_bytes = sk[0, 0].nbytes + bm[0, 0].nbytes
+    sw = SwitchModel(ports=3, slots=slots)
+    sw.aggregate(sk, bm)
+    rep = sw.report()
+    prof = topo.window_profile(chunk_bytes, n_chunks, slots)
+    assert prof["windows"] == rep["windows"]
+    assert prof["occupancy_peak"] == rep["occupancy_peak"]
+    assert prof["window_chunks"] == rep["window_chunks"]
+    assert prof["window_root_bytes"] == rep["window_root_bytes"]
+    assert prof["root_link_bytes"] == rep["root_link_tx_bytes"]
+    with pytest.raises(ValueError, match="slots"):
+        topo.window_profile(chunk_bytes, n_chunks, 0)
+
+
 def test_tree_all_reduce_identity_on_one_rank():
     mesh = make_mesh((1,), ("data",))
     topo = make_topology("flat", mesh, ("data",))
