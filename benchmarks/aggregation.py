@@ -49,6 +49,18 @@ collective *launches* (scan trip counts included) — CI fails if the
 overlapped native RS launch count is not affine in ``n_chunks`` with a
 positive slope, i.e. if the per-chunk scatter schedule secretly fused.
 
+``--compare-auto`` (PR 6) drives the online cost-model controller
+(:class:`repro.core.costmodel.AutoWireController`) through its probe
+schedule on the same toy model: one replan window per fixed wire, one
+chunk-grid probe on the measured winner, then the decided per-bucket
+plan — executed through the ``auto`` strategy's plan/execute split. It
+reports each fixed strategy's steady-state wall, the controller's
+decision trace (probe walls, analytic priors, occupancy), a
+jaxpr-derived per-link byte count (:func:`_count_link_bytes`) next to
+the analytic ``strategy_wire_bytes`` accounting, and the ``auto`` arm's
+steady-state wall. CI fails if ``auto`` settles more than 10% above the
+best fixed strategy.
+
 ``--smoke`` shrinks every size for CI; ``--json PATH`` dumps all rows as
 a JSON artifact so the perf trajectory accumulates across CI runs;
 ``--normalized-json PATH`` additionally writes a compact
@@ -66,14 +78,15 @@ import json
 import os
 import sys
 import time
-from typing import Dict, List
+from typing import Any, Dict, List
 
 # Must be set before jax initializes: the bucketing / reduce-scatter /
 # in-network comparisons need >1 device so the psum / OR-AllReduce /
 # psum_scatter / ppermute-tree launches are real collectives.
 if ("--compare-bucketing" in sys.argv or "--compare-rs" in sys.argv
         or "--compare-innet" in sys.argv
-        or "--compare-overlap" in sys.argv) and \
+        or "--compare-overlap" in sys.argv
+        or "--compare-auto" in sys.argv) and \
         "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
     os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
                                + " --xla_force_host_platform_device_count=2")
@@ -190,6 +203,47 @@ def _count_collective_launches(obj, weight: int = 1) -> int:
             for sub in (v if isinstance(v, (list, tuple)) else (v,)):
                 if hasattr(sub, "eqns") or hasattr(sub, "jaxpr"):
                     total += _count_collective_launches(sub, sub_w)
+    return total
+
+
+def _count_link_bytes(obj, W: int, weight: int = 1) -> float:
+    """Per-link bytes implied by the collectives in a jaxpr, under the
+    standard ring/gather cost model on a ``W``-way axis:
+
+      - ``psum_scatter`` / ``reduce_scatter``: ``(W-1)/W x`` input bytes
+      - ``psum`` / ``pmax`` / ``pmin`` / ``all_to_all`` (ring
+        AllReduce): ``2 (W-1)/W x`` operand bytes
+      - ``all_gather``: ``(W-1)/W x`` *output* bytes
+      - ``ppermute``: ``1 x`` operand bytes (one hop)
+
+    Collectives inside a ``lax.scan`` body count once per trip, like
+    :func:`_count_collective_launches`. This is the measured side of the
+    ``strategy_wire_bytes`` cross-check: the analytic accounting and the
+    bytes the launched collectives actually move must agree.
+    """
+    def _nbytes(atoms):
+        return sum(int(np.prod(a.aval.shape)) * a.aval.dtype.itemsize
+                   for a in atoms if hasattr(a, "aval"))
+
+    jaxpr = getattr(obj, "jaxpr", obj)
+    total = 0.0
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if any(name.startswith(p) for p in _COLLECTIVE_PREFIXES):
+            if name.startswith(("psum_scatter", "reduce_scatter")):
+                total += weight * (W - 1) / W * _nbytes(eqn.invars)
+            elif name.startswith("all_gather"):
+                total += weight * (W - 1) / W * _nbytes(eqn.outvars)
+            elif name.startswith("ppermute"):
+                total += weight * _nbytes(eqn.invars)
+            else:   # psum / pmax / pmin / all_to_all: ring AllReduce
+                total += weight * 2 * (W - 1) / W * _nbytes(eqn.invars)
+        sub_w = weight * int(eqn.params.get("length", 1)) \
+            if name == "scan" else weight
+        for v in eqn.params.values():
+            for sub in (v if isinstance(v, (list, tuple)) else (v,)):
+                if hasattr(sub, "eqns") or hasattr(sub, "jaxpr"):
+                    total += _count_link_bytes(sub, W, sub_w)
     return total
 
 
@@ -676,15 +730,146 @@ def compare_innet(smoke: bool = False) -> List[Dict]:
     return rows
 
 
+# ----------------------------------------------------------------------
+# Online cost-model controller: the `auto` strategy (PR 6)
+# ----------------------------------------------------------------------
+
+def compare_auto(smoke: bool = False) -> List[Dict]:
+    """Drive the ``auto`` strategy's online controller end-to-end on the
+    toy model: measure each fixed strategy's steady-state wall, walk the
+    controller through its probe windows (feeding it the measured wall
+    and occupancy telemetry of every step), then time the decided plan.
+
+    Emits one row per fixed arm (wall, analytic + jaxpr-measured link
+    bytes, collective counts) and one ``auto`` row carrying the
+    controller's full decision trace. Asserts the controller finished
+    probing and that the decided steady-state wall is within 10% of the
+    best fixed strategy's (the satellite-5 CI gate, also re-checked from
+    ``BENCH_aggregation.json`` by the workflow).
+    """
+    from repro.core.bucketing import make_bucket_plan
+    from repro.core.costmodel import AutoWireController, fixed_wires
+
+    W = jax.device_count()
+    mesh = compat.make_mesh((W,), ("data",))
+    width = 32 if smoke else 128
+    iters = 3 if smoke else 5
+    # replan_every=2 keeps the probe schedule short (one warmup step +
+    # one measured step per window) so the full probe->decide arc fits
+    # in a CI smoke run.
+    cfg = CompressionConfig(
+        ratio=0.3, lanes=128, rows=6, rounds=10, chunk_blocks=64,
+        use_pallas="never", replan_every=2,
+        bucket_bytes=(8 << 10) if smoke else (256 << 10))
+    tree = _model_tree(24, width)
+    put, in_specs, out_specs, total = _stacked_inputs(tree, mesh, W)
+    acc = cfg.strategy_wire_bytes(total, W, grad_bytes_per_elem=4)
+    acc_of = {"dense": acc["dense"], "compressed": acc["compressed"],
+              "compressed_rs": (acc["compressed_rs_native"]
+                                or acc["compressed_rs_emulated"]),
+              "compressed_innet": acc["compressed_innet"]}
+
+    def build(name, wplan=None, want_occ=False):
+        agg = make_aggregator(name, cfg, mesh, ("data",), (),
+                              outer_manual=("data",), wire_plan=wplan)
+
+        def path(grads):
+            specs = jax.tree.map(lambda _: P(), grads)
+            res = coll.init_aggregation_state(grads, cfg).residual
+            out, st = agg(grads, AggregationState(residual=res), specs)
+            if want_occ:
+                return out, st.telemetry["bucket_occupancy"]
+            return out
+
+        outs = (out_specs, P()) if want_occ else out_specs
+        return jax.jit(compat.shard_map(
+            lambda st: path(jax.tree.map(lambda a: a[0], st)),
+            mesh=mesh, in_specs=(in_specs,), out_specs=outs,
+            axis_names={"data"}, check_vma=False))
+
+    # ---- fixed arms: the yardstick the controller must match ---------
+    rows = []
+    fixed_walls: Dict[str, float] = {}
+    for wire in fixed_wires():
+        fn = build(wire)
+        jaxpr = jax.make_jaxpr(fn)(put)
+        wall = _time_jitted(fn, (put,), iters)
+        fixed_walls[wire] = wall
+        row = {"case": "compare_auto", "arm": wire, "workers": W,
+               "total_elems": total,
+               "collective_ops": sum(
+                   _count_collectives(jaxpr, {}).values()),
+               "measured_link_bytes": round(
+                   _count_link_bytes(jaxpr, W)),
+               "wall_s": wall}
+        row.update(acc_of[wire])
+        rows.append(row)
+        print(f"[compare_auto] fixed {wire}: wall={wall:.4f}s "
+              f"link(analytic)={row['link_bytes']} "
+              f"link(jaxpr)={row['measured_link_bytes']}")
+
+    # ---- the controller's probe -> decide arc ------------------------
+    bplan = make_bucket_plan(tree, cfg)
+    ctl = AutoWireController(bplan, cfg, workers=W)
+    compiled: Dict = {}   # WirePlan -> jitted step (plans recur)
+    steps = (len(fixed_wires()) + 3) * cfg.replan_every
+    wplan = ctl.plan(0)
+    for step in range(steps):
+        prev = wplan
+        wplan = ctl.plan(step)
+        if wplan not in compiled:
+            compiled[wplan] = build("auto", wplan=wplan, want_occ=True)
+        if wplan != prev:
+            print(f"[compare_auto] step {step}: window -> "
+                  f"{wplan.describe()}")
+        fn = compiled[wplan]
+        t0 = time.perf_counter()
+        out, occ = fn(put)
+        jax.block_until_ready(out)
+        ctl.observe(time.perf_counter() - t0,
+                    {"bucket_occupancy": np.asarray(occ)})
+    trace = ctl.decision_trace()
+    assert not trace["probing"], (
+        f"controller still probing after {steps} steps: {trace}")
+
+    # ---- steady state of the decided plan ----------------------------
+    steady = _time_jitted(compiled[wplan], (put,), iters)
+    chosen = wplan.uniform_wire
+    best_fixed = min(fixed_walls, key=fixed_walls.get)
+    ratio = steady / fixed_walls[best_fixed]
+    row = {"case": "compare_auto", "arm": "auto", "workers": W,
+           "total_elems": total, "n_buckets": bplan.n_buckets,
+           "chosen_wire": chosen, "plan": wplan.describe(),
+           "wall_s": steady, "best_fixed": best_fixed,
+           "best_fixed_wall_s": fixed_walls[best_fixed],
+           "wall_ratio_vs_best_fixed": ratio,
+           "decision_trace": trace}
+    rows.append(row)
+    print(f"[compare_auto] decided plan: {wplan.describe()}")
+    print(f"[compare_auto] auto steady wall={steady:.4f}s vs best fixed "
+          f"({best_fixed}) {fixed_walls[best_fixed]:.4f}s "
+          f"({ratio:.3f}x)")
+    assert ratio <= 1.10, (
+        f"auto settled {ratio:.3f}x above the best fixed strategy "
+        f"({best_fixed}): {steady:.4f}s vs "
+        f"{fixed_walls[best_fixed]:.4f}s")
+    return rows
+
+
 def write_normalized(path: str, rows: List[Dict],
-                     overlap_rows: List[Dict] = ()) -> None:
+                     overlap_rows: List[Dict] = (),
+                     auto_rows: List[Dict] = ()) -> None:
     """Write the compact strategy -> metrics map CI drops at the repo
     root (``BENCH_aggregation.json``) to track the perf trajectory
     across PRs. Rows come from the ``--compare-rs`` / ``--compare-innet``
     arms; later rows win when an arm (e.g. ``dense``) appears in both.
     ``overlap_rows`` (the ``--compare-overlap`` chunk-count sweep, PR 5)
     land under ``"overlap"`` as per-chunk wire/launch/wall rows keyed by
-    strategy arm.
+    strategy arm. ``auto_rows`` (the ``--compare-auto`` controller run,
+    PR 6 — schema 3) land under ``"auto"``: per-fixed-wire steady walls
+    and analytic-vs-jaxpr link bytes, plus the controller's decided plan,
+    decision trace, and steady wall ratio (the <= 1.1x CI gate reads
+    ``auto.wall_ratio_vs_best_fixed``).
     """
     keep = ("rank_payload_bytes", "link_bytes", "root_link_bytes",
             "exponent_bytes", "collective_ops", "wall_s", "workers",
@@ -710,7 +895,28 @@ def write_normalized(path: str, rows: List[Dict],
             "collective_launches": r["collective_launches"],
             "wall_s": round(r["wall_s"], 4),
         })
-    payload = {"schema": 2, "strategies": strategies, "overlap": overlap}
+    auto: Dict[str, Any] = {}
+    for r in auto_rows:
+        if r["arm"] == "auto":
+            auto.update({
+                "plan": r["plan"],
+                "chosen_wire": r["chosen_wire"],
+                "wall_s": round(r["wall_s"], 4),
+                "best_fixed": r["best_fixed"],
+                "best_fixed_wall_s": round(r["best_fixed_wall_s"], 4),
+                "wall_ratio_vs_best_fixed":
+                    round(r["wall_ratio_vs_best_fixed"], 4),
+                "decision_trace": r["decision_trace"],
+            })
+        else:
+            auto.setdefault("fixed", {})[r["arm"]] = {
+                "wall_s": round(r["wall_s"], 4),
+                "link_bytes": r["link_bytes"],
+                "measured_link_bytes": r["measured_link_bytes"],
+                "collective_ops": r["collective_ops"],
+            }
+    payload = {"schema": 3, "strategies": strategies, "overlap": overlap,
+               "auto": auto}
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
         f.write("\n")
@@ -724,7 +930,7 @@ def _fmt(v):
 def main(fracs=(0.02, 0.05, 0.10, 0.25, 0.60, 1.0),
          backends=("auto",), smoke=False, compare=False, compare_rs_flag=False,
          compare_innet_flag=False, compare_overlap_flag=False,
-         json_path=None, normalized_path=None):
+         compare_auto_flag=False, json_path=None, normalized_path=None):
     """One CSV row per (size fraction, compute backend).
 
     ``--backends never always`` compares the jnp reference codec against
@@ -749,16 +955,18 @@ def main(fracs=(0.02, 0.05, 0.10, 0.25, 0.60, 1.0),
     innet_rows = compare_innet(smoke=smoke) if compare_innet_flag else []
     overlap_rows = compare_overlap(smoke=smoke) if compare_overlap_flag \
         else []
+    auto_rows = compare_auto(smoke=smoke) if compare_auto_flag else []
     if json_path:
         with open(json_path, "w") as f:
             json.dump({"codec": rows, "bucketing": bucket_rows,
                        "compare_rs": rs_rows, "compare_innet": innet_rows,
-                       "compare_overlap": overlap_rows},
+                       "compare_overlap": overlap_rows,
+                       "compare_auto": auto_rows},
                       f, indent=2)
         print(f"wrote {json_path}")
     if normalized_path:
         write_normalized(normalized_path, rs_rows + innet_rows,
-                         overlap_rows)
+                         overlap_rows, auto_rows)
 
 
 if __name__ == "__main__":
@@ -784,6 +992,11 @@ if __name__ == "__main__":
                          "strategy: collective launches (must scale "
                          "O(n_chunks) on the native RS wire — CI "
                          "gate), per-chunk payload, wall time")
+    ap.add_argument("--compare-auto", action="store_true",
+                    help="drive the `auto` strategy's online cost-model "
+                         "controller through probe -> decide on the toy "
+                         "model; CI fails if its steady wall exceeds the "
+                         "best fixed strategy's by >10%%")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="dump all rows as a JSON artifact")
     ap.add_argument("--normalized-json", default=None, metavar="PATH",
@@ -793,5 +1006,6 @@ if __name__ == "__main__":
     main(tuple(args.fracs), tuple(args.backends), smoke=args.smoke,
          compare=args.compare_bucketing, compare_rs_flag=args.compare_rs,
          compare_innet_flag=args.compare_innet,
-         compare_overlap_flag=args.compare_overlap, json_path=args.json,
+         compare_overlap_flag=args.compare_overlap,
+         compare_auto_flag=args.compare_auto, json_path=args.json,
          normalized_path=args.normalized_json)

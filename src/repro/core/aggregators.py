@@ -44,6 +44,18 @@ whole gradient is packed into fixed-byte flat buckets
   instead of around a ring, so the hottest (root) link carries ``1 x``
   the payload per direction vs the ring's ``2(W-1)/W x``.
 
+Plan/execute split (PR 6): every compressed strategy is now a per-group
+*executor* behind a :class:`~repro.core.wireplan.WirePlan`.  A fixed
+strategy executes the degenerate uniform plan (one group, its own wire —
+byte-for-byte today's jaxprs), while a non-trivial ``wire_plan`` splits
+the bucket stream into contiguous groups and runs each group through the
+assigned wire's executor at its global block offsets
+(``StreamPlan.base_block``), so any mixed plan is bit-for-bit the fixed
+strategies it composes on the buckets it assigns.  The 5th registry
+entry ``auto`` (:class:`WirePlannedAggregator`) executes plans produced
+by the :mod:`repro.core.costmodel` controller and measures the per-bucket
+occupancy telemetry the controller feeds on.
+
 All strategies run *inside* the outer train-step ``shard_map`` (manual DP
 axes). On JAX with nested partial-manual support, packing/unpacking runs
 in a nested ``shard_map`` that takes the tensor-parallel axes manual too,
@@ -79,6 +91,7 @@ from .collectives import (AggregationState, dense_all_reduce,
                           or_reduce_scatter)
 from .streams import (StreamPlan, make_stream_plan, stream_schedule,
                       zero1_gather_skip)
+from .wireplan import WIRES, WirePlan, uniform_plan
 from . import topk as topk_lib
 
 
@@ -105,6 +118,8 @@ class DenseAggregator:
     registry can build any entry uniformly; cfg/tp_axes/outer_manual are
     simply unused here."""
 
+    wire = "dense"  # the WirePlan wire this strategy is the executor for
+
     mesh: Any
     dp_axes: Tuple[str, ...]
     cfg: Any = None
@@ -112,8 +127,16 @@ class DenseAggregator:
     mean: bool = True
     outer_manual: Any = None
     zero1_dims: Any = None
+    wire_plan: Any = None  # ctor uniformity only: dense groups of a
+                           # mixed plan run inline in the compressed
+                           # executors (a psum needs no codec plumbing)
 
     def __call__(self, grads, state: AggregationState, param_specs=None):
+        if self.wire_plan is not None:
+            raise ValueError(
+                "DenseAggregator does not execute wire plans; use the "
+                "'auto' strategy (or a compressed strategy with "
+                "wire_plan=...) for per-bucket-group wires")
         return dense_all_reduce(grads, self.dp_axes, mean=self.mean), state
 
 
@@ -190,6 +213,9 @@ class CompressedAggregator:
     sketch psum + index OR-AllReduce -> peel -> unpack.
     """
 
+    wire = "compressed"        # the WirePlan wire this class executes
+    collect_telemetry = False  # WirePlannedAggregator flips this
+
     cfg: CompressionConfig
     mesh: Any
     dp_axes: Tuple[str, ...]
@@ -207,6 +233,16 @@ class CompressedAggregator:
     # aligns with these slices, its recovered-chunk all_gather is
     # skipped and each rank feeds its optimizer shard directly.
     zero1_dims: Any = None
+    # Explicit per-bucket-group wire assignment (PR 6). None = the
+    # degenerate uniform plan on this strategy's own wire, i.e. exactly
+    # the pre-PR-6 behaviour (same jaxprs). A non-trivial WirePlan runs
+    # each group through the assigned wire's executor; see
+    # :meth:`_execute_plan`.
+    wire_plan: Any = None
+    # Global hash-plan block id of this executor's first bucket —
+    # nonzero only on group delegates, so a group's encode/peel hash
+    # exactly like the corresponding slice of the full-stream pass.
+    base_block: int = 0
 
     # -- construction helpers ------------------------------------------
 
@@ -239,7 +275,7 @@ class CompressedAggregator:
     def _stream_plan(self, plan: BucketPlan) -> StreamPlan:
         """The wire-chunk grid for this strategy (subclasses align it to
         their wire's boundaries — per-rank RS chunks, switch windows)."""
-        return make_stream_plan(plan, self.cfg)
+        return make_stream_plan(plan, self.cfg, base_block=self.base_block)
 
     def _reduce_allreduce(self, dp_idx):
         """The AllReduce wire for one (sketch, words) payload chunk."""
@@ -282,7 +318,8 @@ class CompressedAggregator:
         """(n_buckets, E) local buckets -> aggregated (sketch, words)."""
         splan = self._stream_plan(plan)
         if not splan.streamed:
-            c = comp.compress(buckets.reshape(-1))
+            c = comp.compress(buckets.reshape(-1),
+                              block_offset=self.base_block)
             sk = jax.lax.psum(c.sketch, tuple(self.dp_axes))
             words = or_allreduce(c.index_words, self.dp_axes,
                                  axis_indices=dp_idx)
@@ -300,8 +337,78 @@ class CompressedAggregator:
         the reduce-scatter subclass consults them (the gather-skip path
         must know whether the packed stream is a TP-local view)."""
         rec = comp.recover(CompressedLeaf(sketch=sk, index_words=words),
-                           plan.padded)
+                           plan.padded, block_offset=self.base_block)
         return rec.reshape(plan.n_buckets, plan.bucket_elems)
+
+    # -- plan / execute (PR 6) -----------------------------------------
+
+    def _wire_plan(self, plan: BucketPlan) -> WirePlan:
+        """The WirePlan this pass executes: the explicit one when set,
+        else the degenerate uniform plan on this strategy's own wire."""
+        if self.wire_plan is not None:
+            if self.wire_plan.n_buckets != plan.n_buckets:
+                raise ValueError(
+                    f"wire_plan covers {self.wire_plan.n_buckets} "
+                    f"buckets, stream has {plan.n_buckets}")
+            return self.wire_plan
+        return uniform_plan(plan.n_buckets, self.wire)
+
+    def _group_delegate(self, group, base_block: int):
+        """The executor instance for one wire group: the group wire's
+        registry class, offset to the group's global block position.
+        Group delegates never gather-skip (``zero1_dims=None``): the
+        ZeRO-1 alignment math is defined on the full stream."""
+        cfg = self.cfg if group.stream_chunks is None else \
+            dataclasses.replace(self.cfg, stream_chunks=group.stream_chunks)
+        return AGGREGATORS[group.wire](
+            cfg=cfg, mesh=self.mesh, dp_axes=self.dp_axes,
+            tp_axes=self.tp_axes, mean=self.mean,
+            outer_manual=self.outer_manual, zero1_dims=None,
+            base_block=base_block)
+
+    def _run_group(self, buckets, plan: BucketPlan,
+                   comp: HomomorphicCompressor, dp_idx, dp_rank):
+        """Execute one group's encode -> wire -> recover on this
+        executor's own wire (``plan`` is the group view; ``buckets`` its
+        row slice of the packed stream)."""
+        sk, words = self._encode(buckets, plan, comp, dp_idx)
+        return self._recover(sk, words, plan, comp, dp_idx, dp_rank)
+
+    def _execute_plan(self, buckets, plan: BucketPlan,
+                      comp: HomomorphicCompressor, dp_idx, dp_rank,
+                      spec_leaves=None):
+        """(n_buckets, E) local buckets -> aggregated (n_buckets, E).
+
+        The trivial uniform plan on this strategy's own wire takes the
+        exact pre-PR-6 path over the original BucketPlan (same jaxprs —
+        gather-skip and ZeRO-1 plumbing intact). Otherwise each group
+        runs through its wire's executor at its global block offsets:
+        dense groups are a plain ``psum`` of the packed f32 stream (the
+        mean lands at unpack with everyone else's), compressed groups
+        re-dispatch through the registry. Per-leaf sparsify/EF already
+        happened at pack, so every group is bit-for-bit the fixed
+        strategy it names on the buckets it covers (dense groups match
+        the compressed wires bitwise in the lossless regime, where
+        recovery is exact).
+        """
+        wplan = self._wire_plan(plan)
+        if wplan.is_trivial and wplan.groups[0].wire == self.wire:
+            sk, words = self._encode(buckets, plan, comp, dp_idx)
+            return self._recover(sk, words, plan, comp, dp_idx, dp_rank,
+                                 spec_leaves=spec_leaves)
+        nbpb = plan.blocks_per_bucket(self.cfg)
+        parts = []
+        for g in wplan.groups:
+            bgroup = buckets[g.start:g.stop]
+            if g.wire == "dense":
+                parts.append(jax.lax.psum(bgroup, tuple(self.dp_axes)))
+                continue
+            gview = plan.group_view(g.start, g.n_buckets)
+            delegate = self._group_delegate(g, base_block=g.start * nbpb)
+            parts.append(delegate._run_group(
+                bgroup, gview, HomomorphicCompressor(delegate.cfg),
+                dp_idx, dp_rank))
+        return jnp.concatenate(parts, axis=0)
 
     # -- the strategy --------------------------------------------------
 
@@ -367,9 +474,8 @@ class CompressedAggregator:
         else:
             buckets, new_res = pack_stage(grads, res_tree)
 
-        sk, words = self._encode(buckets, plan, comp, dp_idx)
-        rec = self._recover(sk, words, plan, comp, dp_idx, dp_rank,
-                            spec_leaves=spec_leaves)
+        rec = self._execute_plan(buckets, plan, comp, dp_idx, dp_rank,
+                                 spec_leaves=spec_leaves)
 
         if nested:
             dec = compat.shard_map(
@@ -378,7 +484,16 @@ class CompressedAggregator:
             agg = dec(rec)
         else:
             agg = unpack_stage(rec)
-        return agg, AggregationState(residual=new_res)
+        telemetry = None
+        if self.collect_telemetry:
+            # Per-bucket nonzero fraction of the aggregated stream —
+            # identical on every rank (the recovered stream is), so the
+            # train step may psum/average it freely. The controller
+            # compares it against the peeling capacity to rule the
+            # compressed wires in or out per bucket.
+            telemetry = {"bucket_occupancy": jnp.mean(
+                (rec != 0).astype(jnp.float32), axis=1)}
+        return agg, AggregationState(residual=new_res, telemetry=telemetry)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -435,6 +550,8 @@ class CompressedReduceScatterAggregator(CompressedAggregator):
     (all_gather, or psum onto zeros) reproduces each value exactly once.
     """
 
+    wire = "compressed_rs"
+
     # -- geometry / capability helpers ---------------------------------
 
     def _native_wire_possible(self) -> bool:
@@ -478,7 +595,8 @@ class CompressedReduceScatterAggregator(CompressedAggregator):
         'scatter' is a no-op)."""
         if self._native_wire() and self._dp_world() > 1:
             return make_stream_plan(plan, self.cfg,
-                                    workers=self._dp_world(), scatter=True)
+                                    workers=self._dp_world(), scatter=True,
+                                    base_block=self.base_block)
         return super()._stream_plan(plan)
 
     def _gather_skip(self, plan: BucketPlan, splan: StreamPlan,
@@ -526,7 +644,8 @@ class CompressedReduceScatterAggregator(CompressedAggregator):
         if not self._native_wire() or self._dp_world() == 1:
             if self._native_wire() and not self._stream_plan(plan).streamed:
                 # 1-rank native wire: nothing to scatter or reduce.
-                c = comp.compress(buckets.reshape(-1))
+                c = comp.compress(buckets.reshape(-1),
+                                  block_offset=self.base_block)
                 return c.sketch, c.index_words
             return super()._encode(buckets, plan, comp, dp_idx)
         splan = self._stream_plan(plan)
@@ -535,7 +654,7 @@ class CompressedReduceScatterAggregator(CompressedAggregator):
                                          self._reduce_scatter(dp_idx))
         # One-shot native wire: a single psum_scatter + OR-RS over the
         # whole stream, padded to whole per-rank chunks.
-        c = comp.compress(buckets.reshape(-1))
+        c = comp.compress(buckets.reshape(-1), block_offset=self.base_block)
         W, nbpb, wpb, nb_p = self._rs_geometry(plan)
         sk, words = c.sketch, c.index_words
         pad_b = nb_p - plan.n_buckets
@@ -575,7 +694,7 @@ class CompressedReduceScatterAggregator(CompressedAggregator):
             # whole stream at W == 1).
             rec_loc = comp.recover(
                 CompressedLeaf(sketch=sk, index_words=words), chunk_elems,
-                block_offset=dp_rank * chunk_b * nbpb)
+                block_offset=self.base_block + dp_rank * chunk_b * nbpb)
             return self._gather_chunks(rec_loc, plan, nb_p, chunk_elems,
                                        dp_rank)
         full_manual = self._full_manual()
@@ -595,7 +714,7 @@ class CompressedReduceScatterAggregator(CompressedAggregator):
             words, dp_rank * chunk_b * wpb, chunk_b * wpb, axis=0)
         rec_loc = comp.recover(
             CompressedLeaf(sketch=sk_loc, index_words=w_loc), chunk_elems,
-            block_offset=dp_rank * chunk_b * nbpb)
+            block_offset=self.base_block + dp_rank * chunk_b * nbpb)
         return self._gather_chunks(rec_loc, plan, nb_p, chunk_elems, dp_rank)
 
     def _recover_streamed(self, sk, words, plan: BucketPlan,
@@ -699,11 +818,14 @@ class CompressedInNetworkAggregator(CompressedAggregator):
     that cannot raises ``ValueError``).
     """
 
+    wire = "compressed_innet"
+
     def _stream_plan(self, plan: BucketPlan) -> StreamPlan:
         """Chunks span whole ``switch_slots`` bucket windows, so the
         collective schedule and the SwitchModel slot pool agree."""
         return make_stream_plan(plan, self.cfg,
-                                window_buckets=self.cfg.switch_slots)
+                                window_buckets=self.cfg.switch_slots,
+                                base_block=self.base_block)
 
     def _encode(self, buckets: jnp.ndarray, plan: BucketPlan,
                 comp: HomomorphicCompressor, dp_idx):
@@ -733,7 +855,8 @@ class CompressedInNetworkAggregator(CompressedAggregator):
             return wire.decode(q, exp), w
 
         if not splan.streamed:
-            c = comp.compress(buckets.reshape(-1))
+            c = comp.compress(buckets.reshape(-1),
+                              block_offset=self.base_block)
             sk, words = c.sketch, c.index_words
             sk_b, w_b = tree_window(
                 sk.reshape(plan.n_buckets, -1),
@@ -752,6 +875,39 @@ class CompressedInNetworkAggregator(CompressedAggregator):
 
 
 # ----------------------------------------------------------------------
+# The `auto` strategy (PR 6): execute controller-produced wire plans
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class WirePlannedAggregator(CompressedAggregator):
+    """The 5th registry strategy: per-bucket-group wire selection.
+
+    Executes whatever :class:`~repro.core.wireplan.WirePlan` it is
+    handed (``wire_plan=...``, produced by the
+    :class:`~repro.core.costmodel.AutoWireController` host-side between
+    steps); without one it falls back to the controller's *analytic*
+    plan — ``strategy_wire_bytes`` plus the ``auto_*`` bandwidth priors,
+    no telemetry — so the first compiled step is already a reasonable
+    mixed plan. The compiled step is static per plan; the controller
+    re-plans only every ``cfg.replan_every`` steps.
+
+    Also the telemetry source: measures per-bucket occupancy of the
+    aggregated stream into ``AggregationState.telemetry`` for the
+    controller's feasibility test (occupancy near the peeling capacity
+    rules the compressed wires out for that bucket).
+    """
+
+    wire = "auto"
+    collect_telemetry = True
+
+    def _wire_plan(self, plan: BucketPlan) -> WirePlan:
+        if self.wire_plan is not None:
+            return super()._wire_plan(plan)
+        from .costmodel import analytic_plan  # late: costmodel imports us
+        return analytic_plan(plan, self.cfg, workers=self._dp_world())
+
+
+# ----------------------------------------------------------------------
 # Registry
 # ----------------------------------------------------------------------
 
@@ -760,20 +916,30 @@ AGGREGATORS = {
     "compressed": CompressedAggregator,
     "compressed_rs": CompressedReduceScatterAggregator,
     "compressed_innet": CompressedInNetworkAggregator,
+    "auto": WirePlannedAggregator,
 }
+
+# The controller's search space (wireplan.WIRES) and the executable
+# fixed strategies are the same set by construction — checked at import
+# so they can never drift apart (satellite of PR 6).
+assert set(WIRES) == set(AGGREGATORS) - {"auto"}, (
+    f"wireplan.WIRES {WIRES} out of sync with AGGREGATORS "
+    f"{sorted(AGGREGATORS)}")
 
 
 def make_aggregator(name: str, cfg: CompressionConfig, mesh,
                     dp_axes: Sequence[str],
                     tp_axes: Sequence[str] = ("model",),
                     mean: bool = True, outer_manual=None,
-                    zero1_dims=None) -> Aggregator:
+                    zero1_dims=None, wire_plan=None) -> Aggregator:
     """Build the named strategy (see :data:`AGGREGATORS`).
 
     ``outer_manual``: the axis set the calling shard_map takes manual
     (see :class:`CompressedAggregator.outer_manual`). ``zero1_dims``:
     per-leaf ZeRO-1 slice dims enabling the reduce-scatter gather-skip
-    path (see :class:`CompressedAggregator.zero1_dims`).
+    path (see :class:`CompressedAggregator.zero1_dims`). ``wire_plan``:
+    an explicit per-bucket-group wire assignment (PR 6) — normally only
+    set on the ``auto`` strategy by its controller.
     """
     if isinstance(dp_axes, str):
         dp_axes = (dp_axes,)
@@ -788,4 +954,5 @@ def make_aggregator(name: str, cfg: CompressionConfig, mesh,
                tp_axes=tuple(tp_axes), mean=mean,
                outer_manual=None if outer_manual is None
                else tuple(outer_manual),
-               zero1_dims=None if zero1_dims is None else tuple(zero1_dims))
+               zero1_dims=None if zero1_dims is None else tuple(zero1_dims),
+               wire_plan=wire_plan)

@@ -144,6 +144,32 @@ class BucketPlan:
                 pos += length
         return tuple(tuple(s) for s in out)
 
+    def group_view(self, start: int, count: int) -> "BucketPlan":
+        """A BucketPlan over buckets ``[start, start + count)`` as one
+        flat pseudo-leaf (PR 6 wire-plan groups).
+
+        The view keeps this plan's ``bucket_elems`` and truncates
+        ``total`` at the stream's true element count, so the last
+        group's zero padding is reconstructed exactly where the full
+        plan pads.  Per-group executors feed the view the corresponding
+        row slice of the packed ``(n_buckets, E)`` stream; leaf
+        structure is irrelevant below the pack boundary (sparsify/EF
+        already happened per leaf), so one flat leaf is the honest
+        geometry.
+        """
+        if not (0 <= start and count >= 1
+                and start + count <= self.n_buckets):
+            raise ValueError(
+                f"group [{start}, {start + count}) out of range for "
+                f"{self.n_buckets} buckets")
+        total = min(count * self.bucket_elems,
+                    self.total - start * self.bucket_elems)
+        flat = jax.tree.structure((0,))
+        return BucketPlan(
+            treedef=flat, shapes=((total,),), dtypes=(jnp.float32,),
+            sizes=(total,), offsets=(0,), total=total,
+            bucket_elems=self.bucket_elems, n_buckets=count)
+
     def residual_slices(self, residual: Any) -> List[List[jnp.ndarray]]:
         """Per-bucket error-feedback residual slices: for each bucket, the
         flat residual runs (one per segment) whose coordinates it covers."""

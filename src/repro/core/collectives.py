@@ -395,8 +395,17 @@ class AggregationState:
 
     Residuals keep the parameter pytree layout; the bucketed aggregators
     expose per-bucket views of them via ``BucketPlan.residual_slices``.
+
+    ``telemetry`` (PR 6): measured per-bucket signals the ``auto``
+    wire-plan controller folds into its cost model — currently a dict
+    with ``bucket_occupancy`` (per-bucket nonzero fraction of the
+    aggregated stream, identical on every rank). ``None`` for the fixed
+    strategies, whose jaxprs stay telemetry-free; the train step
+    surfaces it through the metrics dict, it is never carried across
+    steps.
     """
     residual: Any
+    telemetry: Any = None
 
 
 def init_aggregation_state(params: Any, cfg: CompressionConfig) -> AggregationState:

@@ -106,6 +106,23 @@ class CompressionConfig:
                                  # switch) | "tor_spine" (one tier per DP
                                  # axis; see repro.net.topology)
     sketch_dtype: str = "float32"
+    # ---- `auto` strategy cost-model knobs (PR 6) ---------------------
+    replan_every: int = 16       # steps between wire-plan refreshes for
+                                 # the `auto` strategy; the compiled step
+                                 # is static per plan, so this bounds
+                                 # recompilation frequency
+    auto_link_gbps: float = 10.0  # analytic prior: link bandwidth used
+                                 # to turn strategy_wire_bytes into
+                                 # seconds before any telemetry exists
+    auto_codec_gbps: float = 2.0  # analytic prior: sketch encode+peel
+                                 # throughput (bytes of gradient per
+                                 # second) for the codec-time term
+    auto_occupancy_margin: float = 0.9
+                                 # compressed wires are infeasible for a
+                                 # bucket whose measured nonzero count
+                                 # exceeds this fraction of the peeling
+                                 # capacity (recovery would go lossy);
+                                 # such buckets are planned dense
 
     def __post_init__(self):
         if self.rows % 3 != 0 or self.rows < 3:
@@ -149,6 +166,17 @@ class CompressionConfig:
             raise ValueError(
                 f"topology must be 'flat' or 'tor_spine', got "
                 f"{self.topology!r}")
+        if self.replan_every < 1:
+            raise ValueError(
+                f"replan_every must be >= 1, got {self.replan_every}")
+        if self.auto_link_gbps <= 0 or self.auto_codec_gbps <= 0:
+            raise ValueError(
+                f"auto_link_gbps/auto_codec_gbps must be positive, got "
+                f"{self.auto_link_gbps}/{self.auto_codec_gbps}")
+        if not 0.0 < self.auto_occupancy_margin <= 1.0:
+            raise ValueError(
+                f"auto_occupancy_margin must be in (0, 1], got "
+                f"{self.auto_occupancy_margin}")
 
     # ---- derived static geometry -------------------------------------
 

@@ -1,0 +1,306 @@
+"""Online cost model for the ``auto`` strategy: the *controller* half of
+the PR 6 plan/execute split.
+
+The controller decides, per bucket, which wire
+(:data:`repro.core.wireplan.WIRES`) ships it cheapest, from three
+inputs:
+
+1. **Analytic wire model** — :meth:`CompressionConfig.strategy_wire_bytes`
+   turned into seconds with the ``auto_link_gbps`` / ``auto_codec_gbps``
+   bandwidth priors. This seeds the very first plan, before any step has
+   run (see :func:`analytic_plan`).
+2. **Measured wall telemetry** — per-step wall times observed host-side
+   (outside jit) while the controller *probes* each candidate wire with
+   a uniform plan. Measured walls override the analytic priors as they
+   arrive: the analytic model cannot know, e.g., that this host's psum
+   beats the sketch codec (our toy benchmark: dense ~3.1 ms vs
+   compressed ~5.5 ms), but the probe walls say so directly.
+3. **Measured occupancy** — per-bucket nonzero fraction of the
+   aggregated stream (``AggregationState.telemetry``). A bucket whose
+   occupancy exceeds ``auto_occupancy_margin`` of the peeling capacity
+   would recover lossily, so the compressed wires are infeasible for it
+   (infinite cost) and it is planned dense — this is what produces
+   genuinely *mixed* plans on skewed-sparsity streams.
+
+The controller is deliberately host-side and slow-moving: plans change
+only every ``cfg.replan_every`` steps (each distinct plan is a distinct
+compiled step), and wall measurements fold in through an EWMA so one
+noisy step cannot flip the plan. After the wire probes it runs one
+chunk-grid probe on the winning wire (``stream_chunks`` at the finest
+aligned count vs the config grid) — the "tune stream_chunks live" knob.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+from .bucketing import BucketPlan
+from .config import CompressionConfig
+from .wireplan import WIRES, WirePlan, plan_from_assignments, uniform_plan
+
+COMPRESSED_WIRES = tuple(w for w in WIRES if w != "dense")
+
+
+def fixed_wires() -> Tuple[str, ...]:
+    """The controller's search space: every fixed strategy in the
+    aggregator registry. Enumerated from ``AGGREGATORS`` (not hardcoded)
+    so an added/renamed strategy is picked up — or trips the import-time
+    WIRES<->registry assert — rather than silently drifting."""
+    from .aggregators import AGGREGATORS  # late: aggregators imports us
+    wires = tuple(w for w in AGGREGATORS if w != "auto")
+    if set(wires) != set(WIRES):
+        raise AssertionError(
+            f"registry {sorted(wires)} out of sync with WIRES {WIRES}")
+    return wires
+
+
+# ----------------------------------------------------------------------
+# Analytic costs (the no-telemetry prior)
+# ----------------------------------------------------------------------
+
+def analytic_bucket_costs(plan: BucketPlan, cfg: CompressionConfig,
+                          workers: int, grad_bytes_per_elem: int = 4
+                          ) -> Dict[str, float]:
+    """Per-bucket cost estimate (seconds) for each wire, from the
+    analytic wire model and the ``auto_*`` bandwidth priors.
+
+    ``link_bytes`` of the whole bucket-padded stream divided evenly over
+    its buckets (buckets are homogeneous by construction), plus a codec
+    term for the compressed wires (encode+peel modeled as a bandwidth
+    over the bucket's f32 bytes). Serial wire+codec model — the overlap
+    win is exactly what the measured probes capture instead.
+    """
+    n = plan.n_buckets * plan.bucket_elems
+    acc = cfg.strategy_wire_bytes(n, workers,
+                                  grad_bytes_per_elem=grad_bytes_per_elem)
+    link_bw = cfg.auto_link_gbps * 1e9 / 8
+    codec_bw = cfg.auto_codec_gbps * 1e9 / 8
+    t_codec = plan.bucket_elems * 4 / codec_bw
+    nb = plan.n_buckets
+
+    def link_t(entry) -> float:
+        return entry["link_bytes"] / nb / link_bw
+
+    rs = acc["compressed_rs_native"] or acc["compressed_rs_emulated"]
+    return {
+        "dense": link_t(acc["dense"]),
+        "compressed": link_t(acc["compressed"]) + t_codec,
+        "compressed_rs": link_t(rs) + t_codec,
+        "compressed_innet": link_t(acc["compressed_innet"]) + t_codec,
+    }
+
+
+def analytic_plan(plan: BucketPlan, cfg: CompressionConfig,
+                  workers: int, grad_bytes_per_elem: int = 4) -> WirePlan:
+    """The zero-telemetry plan the ``auto`` strategy executes before its
+    controller has observed anything: cheapest wire per the analytic
+    model (uniform, since the analytic costs are per-bucket uniform)."""
+    costs = analytic_bucket_costs(plan, cfg, workers,
+                                  grad_bytes_per_elem=grad_bytes_per_elem)
+    wire = min(fixed_wires(), key=lambda w: costs[w])
+    return uniform_plan(plan.n_buckets, wire)
+
+
+def occupancy_feasible(occ: float, cfg: CompressionConfig) -> bool:
+    """Can a bucket with nonzero fraction ``occ`` still peel exactly?
+    Capacity is ``peel_capacity`` per block; ``auto_occupancy_margin``
+    keeps headroom below the w.h.p. threshold."""
+    cap_frac = cfg.peel_capacity / cfg.block_elems
+    return occ <= cfg.auto_occupancy_margin * cap_frac
+
+
+# ----------------------------------------------------------------------
+# The online controller
+# ----------------------------------------------------------------------
+
+def _finest_chunks(wire: str, n_buckets: int, workers: int,
+                   cfg: CompressionConfig) -> Optional[int]:
+    """Finest valid ``stream_chunks`` for a uniform plan on ``wire``
+    (None = the wire has no meaningful chunk knob)."""
+    if wire == "dense" or cfg.index != "bitmap":
+        return None
+    if wire == "compressed_rs" and workers > 1:
+        return -(-n_buckets // workers)   # chunk per rank-bucket run
+    if wire == "compressed_innet":
+        return -(-n_buckets // cfg.switch_slots)
+    return n_buckets
+
+
+@dataclasses.dataclass
+class AutoWireController:
+    """Host-side wire planner for the ``auto`` strategy.
+
+    Drive it from the training/benchmark loop, outside jit::
+
+        ctl = AutoWireController(plan, cfg, workers=W)
+        for step in range(...):
+            wplan = ctl.plan(step)          # static per replan window
+            agg = dataclasses.replace(agg, wire_plan=wplan)
+            ... run the (re)compiled step, time it ...
+            ctl.observe(wall_s, telemetry)  # wall + bucket occupancy
+
+    Probe schedule: one replan window per fixed wire (uniform plans),
+    then one window probing the winner's finest chunk grid, then the
+    decided (possibly mixed) plan, refreshed every ``replan_every``
+    steps from the latest EWMAs.
+    """
+
+    bucket_plan: BucketPlan
+    cfg: CompressionConfig
+    workers: int
+    grad_bytes_per_elem: int = 4
+    ewma: float = 0.5           # weight of the newest wall observation
+    warmup_steps: int = 1       # per-window steps dropped from the EWMA
+                                # (first step pays compilation)
+
+    def __post_init__(self):
+        self.wires = fixed_wires()
+        self.analytic = analytic_bucket_costs(
+            self.bucket_plan, self.cfg, self.workers,
+            grad_bytes_per_elem=self.grad_bytes_per_elem)
+        # probe cheapest-first so early steps are not worst-case slow
+        self._probe_queue: List[Tuple[str, Optional[int]]] = [
+            (w, None) for w in sorted(self.wires,
+                                      key=lambda w: self.analytic[w])]
+        self._walls: Dict[Tuple[str, Optional[int]], float] = {}
+        self._occupancy: Optional[List[float]] = None
+        self._chunk_probed = False
+        self._current: WirePlan = self._start_window(*self._probe_queue[0])
+        self._window_steps = 0
+
+    # -- observation ---------------------------------------------------
+
+    def observe(self, wall_s: float, telemetry: Any = None) -> None:
+        """Fold one step's measurements into the model. ``telemetry``:
+        the ``AggregationState.telemetry`` dict (host arrays ok)."""
+        self._window_steps += 1
+        if self._window_steps > self.warmup_steps:
+            key = self._plan_key(self._current)
+            if key is not None:
+                prev = self._walls.get(key)
+                self._walls[key] = wall_s if prev is None else \
+                    (1 - self.ewma) * prev + self.ewma * wall_s
+        if telemetry is not None and "bucket_occupancy" in telemetry:
+            occ = [float(v) for v in telemetry["bucket_occupancy"]]
+            if self._occupancy is None:
+                self._occupancy = occ
+            else:
+                self._occupancy = [
+                    (1 - self.ewma) * o + self.ewma * n
+                    for o, n in zip(self._occupancy, occ)]
+
+    def _plan_key(self, plan: WirePlan) -> Optional[Tuple[str, Optional[int]]]:
+        """Measurement key for a plan's wall: only uniform plans are
+        attributable to one wire; mixed plans train nothing (their cost
+        is already a sum of measured parts)."""
+        w = plan.uniform_wire
+        if w is None:
+            return None
+        chunks = plan.groups[0].stream_chunks
+        return (w, chunks)
+
+    # -- planning ------------------------------------------------------
+
+    def plan(self, step: int) -> WirePlan:
+        """The plan to execute at ``step``. Changes only on
+        ``cfg.replan_every`` boundaries (each distinct plan is a
+        distinct compiled step); step 0 runs the first probe window."""
+        if step == 0 or step % self.cfg.replan_every:
+            return self._current
+        nxt = self._next_window()
+        if nxt != self._current:
+            self._current = nxt
+            self._window_steps = 0
+        return self._current
+
+    def _start_window(self, wire: str, chunks: Optional[int]) -> WirePlan:
+        return uniform_plan(self.bucket_plan.n_buckets, wire,
+                            stream_chunks=chunks)
+
+    def _next_window(self) -> WirePlan:
+        # still probing wires?
+        key = self._plan_key(self._current)
+        if self._probe_queue and key == self._probe_queue[0]:
+            self._probe_queue.pop(0)
+        if self._probe_queue:
+            return self._start_window(*self._probe_queue[0])
+        # wires probed: one chunk-grid probe on the measured winner
+        if not self._chunk_probed:
+            self._chunk_probed = True
+            w = min(self.wires, key=lambda w: self._wire_wall(w))
+            fine = _finest_chunks(w, self.bucket_plan.n_buckets,
+                                  self.workers, self.cfg)
+            if fine is not None and fine > 1 \
+                    and (w, fine) not in self._walls:
+                self._probe_queue.append((w, fine))
+                return self._start_window(w, fine)
+        return self._decide()
+
+    def _wire_wall(self, wire: str) -> float:
+        """Best measured wall for a wire (any probed chunk grid), else
+        the analytic whole-stream estimate."""
+        walls = [v for (w, _), v in self._walls.items() if w == wire]
+        if walls:
+            return min(walls)
+        return self.analytic[wire] * self.bucket_plan.n_buckets
+
+    def _bucket_cost(self, wire: str, bucket: int) -> float:
+        if wire in COMPRESSED_WIRES and self._occupancy is not None \
+                and not occupancy_feasible(self._occupancy[bucket],
+                                           self.cfg):
+            return math.inf
+        return self._wire_wall(wire) / self.bucket_plan.n_buckets
+
+    def _best_chunks(self, wire: str) -> Optional[int]:
+        cands = [(v, c) for (w, c), v in self._walls.items() if w == wire]
+        if not cands:
+            return None
+        return min(cands)[1]
+
+    def _decide(self) -> WirePlan:
+        nb = self.bucket_plan.n_buckets
+        assign = [min(self.wires,
+                      key=lambda w: (self._bucket_cost(w, b),
+                                     self.wires.index(w)))
+                  for b in range(nb)]
+        decided = plan_from_assignments(assign)
+        # apply the measured-best chunk grid to single-wire plans (a
+        # mixed plan's groups keep the config grid: per-group counts
+        # were never probed)
+        w = decided.uniform_wire
+        if w is not None:
+            return uniform_plan(nb, w, stream_chunks=self._best_chunks(w))
+        return decided
+
+    # -- reporting (schema-3 benchmark JSON) ---------------------------
+
+    def decision_trace(self) -> Dict[str, Any]:
+        """The controller's state for the benchmark JSON: per-group
+        decisions of the current plan plus the cost inputs behind them."""
+        occ = self._occupancy
+        return {
+            "plan": [{
+                "start": g.start,
+                "n_buckets": g.n_buckets,
+                "wire": g.wire,
+                "stream_chunks": g.stream_chunks,
+            } for g in self._current.groups],
+            "probing": bool(self._probe_queue),
+            "measured_wall_s": {
+                f"{w}" + (f"/c{c}" if c is not None else ""):
+                    round(v, 6)
+                for (w, c), v in sorted(
+                    self._walls.items(),
+                    key=lambda kv: (kv[0][0], kv[0][1] or 0))},
+            "analytic_bucket_cost_s": {
+                w: round(v, 9) for w, v in self.analytic.items()},
+            "occupancy": None if occ is None else {
+                "min": round(min(occ), 4),
+                "max": round(max(occ), 4),
+                "capacity_frac": round(
+                    self.cfg.peel_capacity / self.cfg.block_elems, 4),
+                "margin": self.cfg.auto_occupancy_margin,
+            },
+        }

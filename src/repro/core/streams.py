@@ -87,6 +87,11 @@ class StreamPlan:
     workers: int          # W the chunks scatter across (1 = AllReduce wire)
     n_chunks: int
     chunk_buckets: int    # whole buckets per wire chunk
+    base_block: int = 0   # global hash-plan block id of the stream's
+                          # first bucket — nonzero when this plan covers
+                          # one group of a larger BucketPlan (PR 6 wire
+                          # plans), so group encodes reproduce the exact
+                          # block offsets of the full-stream encode
 
     def __post_init__(self):
         if self.chunk_buckets % max(self.workers, 1):
@@ -125,7 +130,8 @@ class StreamPlan:
     def chunk_start_block(self, chunk):
         """Global hash-plan block id of a chunk's first block (``chunk``
         may be a traced int32 — used inside the scan pipeline)."""
-        return chunk * (self.chunk_buckets * self.blocks_per_bucket)
+        return self.base_block + \
+            chunk * (self.chunk_buckets * self.blocks_per_bucket)
 
     def rank_slice_start_block(self, chunk, rank):
         """Global block id of the slice rank ``rank`` receives from
@@ -159,7 +165,8 @@ class StreamPlan:
 
 def make_stream_plan(plan: BucketPlan, cfg: CompressionConfig, *,
                      workers: int = 1, scatter: bool = False,
-                     window_buckets: Optional[int] = None) -> StreamPlan:
+                     window_buckets: Optional[int] = None,
+                     base_block: int = 0) -> StreamPlan:
     """Resolve the chunk grid for one aggregation pass.
 
     ``scatter=True`` builds a reduce-scatter grid over ``workers`` ranks:
@@ -179,6 +186,11 @@ def make_stream_plan(plan: BucketPlan, cfg: CompressionConfig, *,
     of zero-pad buckets (e.g. 4 chunks of 2 over a 5-bucket stream)
     shrinks to the largest count that still covers the stream — empty
     chunks would spend real collective rounds on all-zero payloads.
+
+    ``base_block`` offsets the grid's block ids when ``plan`` is a group
+    view over a larger bucket stream (PR 6 wire plans): pass the global
+    block id of the group's first bucket so group encodes hash exactly
+    like the full-stream encode.
     """
     if workers < 1:
         raise ValueError(f"workers must be >= 1, got {workers}")
@@ -207,7 +219,8 @@ def make_stream_plan(plan: BucketPlan, cfg: CompressionConfig, *,
         return StreamPlan(
             n_buckets=nb, bucket_elems=plan.bucket_elems,
             blocks_per_bucket=nbpb, words_per_bucket=wpb, workers=workers,
-            n_chunks=drop_empty(req, cb), chunk_buckets=cb)
+            n_chunks=drop_empty(req, cb), chunk_buckets=cb,
+            base_block=base_block)
 
     if window_buckets is not None:
         if window_buckets < 1:
@@ -233,7 +246,8 @@ def make_stream_plan(plan: BucketPlan, cfg: CompressionConfig, *,
         return StreamPlan(
             n_buckets=nb, bucket_elems=plan.bucket_elems,
             blocks_per_bucket=nbpb, words_per_bucket=wpb, workers=1,
-            n_chunks=drop_empty(n_chunks, cb), chunk_buckets=cb)
+            n_chunks=drop_empty(n_chunks, cb), chunk_buckets=cb,
+            base_block=base_block)
 
     req = cfg.stream_chunks if cfg.stream_chunks is not None \
         else (nb if streaming else 1)
@@ -244,7 +258,8 @@ def make_stream_plan(plan: BucketPlan, cfg: CompressionConfig, *,
     return StreamPlan(
         n_buckets=nb, bucket_elems=plan.bucket_elems,
         blocks_per_bucket=nbpb, words_per_bucket=wpb, workers=1,
-        n_chunks=drop_empty(n_chunks, cb), chunk_buckets=cb)
+        n_chunks=drop_empty(n_chunks, cb), chunk_buckets=cb,
+        base_block=base_block)
 
 
 # ----------------------------------------------------------------------

@@ -1,0 +1,155 @@
+"""Per-bucket wire planning: the *plan* half of the plan/execute split
+(PR 6).
+
+"On the Utility of Gradient Compression in Distributed Training Systems"
+(PAPERS.md) shows compression frequently loses to dense aggregation on
+fast links, and THC argues the wire format should be chosen per tensor,
+not per job.  Our own toy benchmark agrees (dense wall ~3.1 ms vs
+compressed ~5.5 ms on the CI host).  So the strategy choice moves from
+"one wire owns the whole step" to a :class:`WirePlan`: a static
+partition of the :class:`~repro.core.bucketing.BucketPlan`'s buckets
+into contiguous groups, each assigned one of the four fixed wires.  The
+aggregators in :mod:`repro.core.aggregators` *execute* whatever plan
+they are handed, group by group, through the shared stream scheduler;
+:mod:`repro.core.costmodel` *produces* plans for the ``auto`` strategy.
+
+The numerics contract that makes mixed plans safe: per-leaf
+sparsify/error-feedback happen before packing and are untouched by the
+plan, buckets are the codec's atomic unit, and every group encodes at
+its **global** block offsets (``StreamPlan.base_block``), so a group's
+sketch/bitmap payload is bit-for-bit the corresponding slice of the
+full-stream payload.  Any plan is therefore bit-identical to the fixed
+strategy it assigns on the buckets it assigns — pinned by the mixed-plan
+arms in ``tests/drivers/collectives_driver.py`` and
+``tests/test_dispatch.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+# The four fixed wires a group may be assigned.  This tuple IS the
+# controller's search space; ``core/aggregators.py`` asserts at import
+# time that it equals the fixed-strategy registry keys, so the `auto`
+# search space and the executable strategies can never drift apart.
+WIRES = ("dense", "compressed", "compressed_rs", "compressed_innet")
+
+
+@dataclasses.dataclass(frozen=True)
+class WireGroup:
+    """One contiguous run of buckets shipped over one wire."""
+
+    start: int             # first bucket index (into the BucketPlan)
+    n_buckets: int         # whole buckets in this group
+    wire: str              # one of WIRES
+    stream_chunks: Optional[int] = None
+    # per-group chunk-grid override (None = the config's grid); lets the
+    # controller tune overlap granularity per group
+
+    def __post_init__(self):
+        if self.wire not in WIRES:
+            raise ValueError(
+                f"unknown wire {self.wire!r}; valid wires: {WIRES}")
+        if self.start < 0:
+            raise ValueError(f"start must be >= 0, got {self.start}")
+        if self.n_buckets < 1:
+            raise ValueError(
+                f"n_buckets must be >= 1, got {self.n_buckets}")
+        if self.stream_chunks is not None and self.stream_chunks < 1:
+            raise ValueError(
+                f"stream_chunks must be >= 1, got {self.stream_chunks}")
+        if self.wire == "dense" and self.stream_chunks is not None:
+            raise ValueError(
+                "dense groups have no wire-chunk grid (they psum the "
+                "packed buckets in one shot); stream_chunks must be None")
+
+    @property
+    def stop(self) -> int:
+        return self.start + self.n_buckets
+
+
+@dataclasses.dataclass(frozen=True)
+class WirePlan:
+    """Static partition of ``n_buckets`` buckets into wire groups.
+
+    Groups must tile the bucket range exactly (contiguous, in order,
+    full coverage) — a plan never drops or duplicates a bucket.
+    Hashable and static: the compiled step is specialized per plan, and
+    the ``auto`` controller re-plans only every ``cfg.replan_every``
+    steps so recompilation stays rare.
+    """
+
+    n_buckets: int
+    groups: Tuple[WireGroup, ...]
+
+    def __post_init__(self):
+        if self.n_buckets < 1:
+            raise ValueError(
+                f"n_buckets must be >= 1, got {self.n_buckets}")
+        if not self.groups:
+            raise ValueError("a WirePlan needs at least one group")
+        object.__setattr__(self, "groups", tuple(self.groups))
+        pos = 0
+        for g in self.groups:
+            if g.start != pos:
+                raise ValueError(
+                    f"groups must tile buckets contiguously: group at "
+                    f"bucket {g.start} but previous group ends at {pos}")
+            pos = g.stop
+        if pos != self.n_buckets:
+            raise ValueError(
+                f"groups cover {pos} buckets, plan has {self.n_buckets}")
+
+    @property
+    def uniform_wire(self) -> Optional[str]:
+        """The single wire when every group shares it, else None."""
+        wires = {g.wire for g in self.groups}
+        return next(iter(wires)) if len(wires) == 1 else None
+
+    @property
+    def is_trivial(self) -> bool:
+        """One group, one wire, no chunk override — the plan that is
+        exactly a fixed strategy over the whole stream."""
+        return (len(self.groups) == 1
+                and self.groups[0].stream_chunks is None)
+
+    def wire_of(self, bucket: int) -> str:
+        """Wire assigned to one bucket (static Python)."""
+        if not 0 <= bucket < self.n_buckets:
+            raise ValueError(
+                f"bucket {bucket} out of range [0, {self.n_buckets})")
+        for g in self.groups:
+            if g.start <= bucket < g.stop:
+                return g.wire
+        raise AssertionError("unreachable: plan validated as covering")
+
+    def describe(self) -> str:
+        return " | ".join(
+            f"[{g.start}:{g.stop}]={g.wire}"
+            + (f"/c{g.stream_chunks}" if g.stream_chunks else "")
+            for g in self.groups)
+
+
+def uniform_plan(n_buckets: int, wire: str,
+                 stream_chunks: Optional[int] = None) -> WirePlan:
+    """The degenerate plan: every bucket on one wire (today's fixed
+    strategies are exactly these plans)."""
+    return WirePlan(n_buckets=n_buckets, groups=(
+        WireGroup(start=0, n_buckets=n_buckets, wire=wire,
+                  stream_chunks=stream_chunks),))
+
+
+def plan_from_assignments(wires: Sequence[str]) -> WirePlan:
+    """Coalesce a per-bucket wire assignment (one wire name per bucket)
+    into a plan, merging adjacent same-wire buckets into one group."""
+    if not wires:
+        raise ValueError("need at least one bucket assignment")
+    groups = []
+    start = 0
+    for i in range(1, len(wires) + 1):
+        if i == len(wires) or wires[i] != wires[start]:
+            groups.append(WireGroup(
+                start=start, n_buckets=i - start, wire=wires[start]))
+            start = i
+    return WirePlan(n_buckets=len(wires), groups=tuple(groups))

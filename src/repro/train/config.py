@@ -23,6 +23,14 @@ class TrainConfig:
                                          #   in-network switch tree —
                                          #   repro.net; wire via
                                          #   compression.wire_dtype)
+                                         # | "auto" (PR 6: per-bucket
+                                         #   wire plans from the online
+                                         #   cost model — core/costmodel;
+                                         #   replan cadence via
+                                         #   compression.replan_every,
+                                         #   plans applied through
+                                         #   build_train_step(...,
+                                         #   wire_plan=...))
     compression: CompressionConfig = dataclasses.field(
         default_factory=CompressionConfig)
     optimizer: OptimizerConfig = dataclasses.field(

@@ -81,7 +81,12 @@ def run_training(api: ModelAPI, tc: TrainConfig, mesh, *,
             dt = time.perf_counter() - t0
             monitor.observe(step, dt)
             losses.append(loss)
-            all_metrics.append({k: float(v) for k, v in metrics.items()})
+            # vector metrics (e.g. the `auto` strategy's per-bucket
+            # occupancy telemetry) are kept as lists, scalars as floats
+            all_metrics.append({
+                k: float(v) if np.ndim(v) == 0
+                else np.asarray(v).tolist()
+                for k, v in metrics.items()})
             if log_every and step % log_every == 0:
                 log_fn(f"[loop] step {step} loss {loss:.4f} "
                        f"({dt*1e3:.0f} ms)")

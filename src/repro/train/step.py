@@ -24,7 +24,11 @@ The step is organised exactly like the paper's Algorithm 1 deployment:
      stream rides a worker->ToR->spine switch tree from ``repro.net``
      once per worker — integer-add sketch over the fixed-point wire
      when ``compression.wire_dtype='fxp32'``, OR bitmap — so the
-     hottest link carries 1x the payload vs the ring's 2(W-1)/W x);
+     hottest link carries 1x the payload vs the ring's 2(W-1)/W x), or
+     ``"auto"`` (PR 6: per-bucket-group wire selection — the step
+     executes a ``WirePlan`` from the host-side cost-model controller,
+     passed via ``build_train_step(..., wire_plan=...)``, and surfaces
+     per-bucket occupancy telemetry back through the metrics);
   3. the optimizer applies the aggregated gradient — replicated, or
      ZeRO-1-sharded across the DP axes (slice-update-allgather).
 
@@ -191,9 +195,23 @@ def batch_specs(batch_shapes: Dict[str, Any], mesh, tc: TrainConfig):
 # The step itself
 # ----------------------------------------------------------------------
 
-def build_train_step(api: ModelAPI, tc: TrainConfig, mesh):
+def build_train_step(api: ModelAPI, tc: TrainConfig, mesh, *,
+                     wire_plan=None):
     """Returns (step_fn, specs) where step_fn(state, batch) -> (state,
-    metrics) is ready for jax.jit with the provided shardings."""
+    metrics) is ready for jax.jit with the provided shardings.
+
+    ``wire_plan`` (PR 6): an explicit
+    :class:`~repro.core.wireplan.WirePlan` applied to the aggregator —
+    how the ``auto`` strategy's host-side controller
+    (:class:`~repro.core.costmodel.AutoWireController`) swaps plans in:
+    rebuild the step with the new plan every ``replan_every`` boundary
+    (each plan is its own compiled step). Ignored when the effective
+    strategy is dense (single DP rank, or ``tc.aggregator='dense'``).
+    With ``tc.aggregator='auto'`` and no plan, the step executes the
+    controller's analytic plan. The ``auto`` aggregator also surfaces
+    its per-bucket occupancy telemetry as the (vector-valued)
+    ``bucket_occupancy`` metric for the controller to fold back in.
+    """
     prof = tc.sharding
     # drop dp axes the mesh doesn't have (e.g. "pod" on a single pod)
     dp_axes = effective_dp_axes(prof, mesh)
@@ -259,6 +277,9 @@ def build_train_step(api: ModelAPI, tc: TrainConfig, mesh):
         tc.aggregator if dp > 1 else "dense", tc.compression, mesh,
         dp_axes=dp_axes, tp_axes=((prof.tp_axis or "model"),),
         outer_manual=step_manual)
+    if wire_plan is not None and not isinstance(aggregator,
+                                                agg_lib.DenseAggregator):
+        aggregator = dataclasses.replace(aggregator, wire_plan=wire_plan)
     # Full-manual step regions (0.4.x always; new JAX when the mesh has
     # only DP axes) can gather ZeRO-1 slices with a manual-axis
     # all_gather — no auto axes left for Shardy to un-shard, and half
@@ -269,7 +290,7 @@ def build_train_step(api: ModelAPI, tc: TrainConfig, mesh):
     def make_aggregate(agg):
         def aggregate(grads, residual, pspecs):
             if isinstance(agg, agg_lib.DenseAggregator):
-                return coll.dense_all_reduce(grads, dp_axes), residual
+                return coll.dense_all_reduce(grads, dp_axes), residual, None
             res_local = jax.tree.map(
                 lambda r: r[0] if r.ndim > 1 else r, residual)
             out, new_state = agg(
@@ -277,7 +298,7 @@ def build_train_step(api: ModelAPI, tc: TrainConfig, mesh):
             new_res = jax.tree.map(
                 lambda old, r: r[None] if old.ndim > 1 else old,
                 residual, new_state.residual)
-            return out, new_res
+            return out, new_res, new_state.telemetry
         return aggregate
 
     def _dp_rank():
@@ -370,7 +391,7 @@ def build_train_step(api: ModelAPI, tc: TrainConfig, mesh):
 
         def inner(params, opt, residual, step, batch):
             loss, metrics, grads = local_grads(params, batch, pspecs)
-            grads, residual = aggregate(grads, residual, pspecs)
+            grads, residual, telemetry = aggregate(grads, residual, pspecs)
             params, opt, gnorm = apply_updates(params, opt, grads, step,
                                                pspecs, norm_psum=norm_psum)
             # cross-worker metric reduction
@@ -379,6 +400,11 @@ def build_train_step(api: ModelAPI, tc: TrainConfig, mesh):
                        for k, v in metrics.items()}
             metrics["grad_norm"] = gnorm
             metrics["loss"] = loss
+            if telemetry is not None:
+                # Per-bucket occupancy for the `auto` wire-plan
+                # controller. Computed from the aggregated stream, so it
+                # is already identical on every rank — no reduction.
+                metrics["bucket_occupancy"] = telemetry["bucket_occupancy"]
             return params, opt, residual, metrics
 
         def step_fn(state: TrainState, batch):

@@ -44,6 +44,12 @@ Validates, on a (2, 2, 2) pod/data/model mesh:
      slices the native-RS aggregator skips the recovered-chunk
      all_gather (pinned on the jaxpr), each rank's slice is bit-exact
      vs the full wire, off-slice values are zero, residuals identical.
+ 11. per-bucket wire plans (PR 6): mixed plans partitioning the 5-bucket
+     EF stream across dense / compressed / native-RS / innet groups —
+     executed by both the ``compressed`` strategy (explicit plan) and
+     the ``auto`` strategy — are bit-identical to the fixed
+     ``compressed`` run over 3 EF steps, outputs and residuals, at W=4
+     over the (pod, data) axes (every wire is exact on dyadic values).
 """
 import os
 os.environ.setdefault(
@@ -198,13 +204,15 @@ def dyadic_tree(seed):
     return out
 
 
-def run_ef(overlap, name="compressed", rs_wire="auto", **overrides):
+def run_ef(overlap, name="compressed", rs_wire="auto", wire_plan=None,
+           **overrides):
     cfg = dataclasses.replace(cfg_ef, overlap=overlap, rs_wire=rs_wire,
                               **overrides)
     # The region below takes every mesh axis manual, so declare it:
     # full-manual callers unlock the native RS wire on every JAX leg.
     agg = make_aggregator(name, cfg, mesh, ("pod", "data"), (),
-                          outer_manual=("pod", "data", "model"))
+                          outer_manual=("pod", "data", "model"),
+                          wire_plan=wire_plan)
 
     def ef_step(gs, rs):
         g = jax.tree.map(lambda a: a[0], gs)
@@ -669,6 +677,42 @@ assert "all_gather" not in str(jax.make_jaxpr(jfn_skip)(_stk, _res)), \
 assert "all_gather" in str(jax.make_jaxpr(jfn_g)(_stk, _res)), \
     "gathered path lost its all_gather"
 print("OK gather-skip: no all_gather in the skip jaxpr")
+
+# ---- 11. mixed per-bucket wire plans (PR 6) --------------------------
+# The EF stream packs into 5 buckets; carve it into groups spanning all
+# four wires. Per the numerics contract every group encodes at its
+# global block offsets, so any plan must reproduce the fixed
+# ``compressed`` run bit-for-bit — through the ``compressed`` executor
+# (explicit plan) and the ``auto`` strategy alike.
+from repro.core.wireplan import WireGroup, WirePlan
+
+_nb_ef = make_bucket_plan(
+    {k: np.zeros(sh, np.float32) for k, sh in ef_shapes.items()},
+    cfg_ef).n_buckets
+assert _nb_ef == 5, _nb_ef
+mixed_plans = [
+    ("dense[0:2] | compressed[2:4] | rs[4:5]",
+     WirePlan(5, (WireGroup(0, 2, "dense"),
+                  WireGroup(2, 2, "compressed"),
+                  WireGroup(4, 1, "compressed_rs")))),
+    ("innet[0:3] | dense[3:5]",
+     WirePlan(5, (WireGroup(0, 3, "compressed_innet"),
+                  WireGroup(3, 2, "dense")))),
+]
+for label, wp in mixed_plans:
+    for strat in ("compressed", "auto"):
+        got_mx = run_ef(overlap=False, name=strat, wire_plan=wp)
+        for step in range(3):
+            for k in ef_shapes:
+                assert np.array_equal(got_ef[step][0][k],
+                                      got_mx[step][0][k]), \
+                    f"[{strat}: {label}] diverged at step {step} leaf {k}"
+                assert np.array_equal(got_ef[step][1][k],
+                                      got_mx[step][1][k]), \
+                    f"[{strat}: {label}] residuals diverged at step " \
+                    f"{step} leaf {k}"
+        print(f"OK mixed wire plan ({strat}): {label} == compressed, "
+              "3 EF steps")
 
 # ---- 4. reduce-scatter aggregator on the TP-sharded tree -------------
 got_rs = jax.jit(shard_map(

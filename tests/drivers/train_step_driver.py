@@ -127,6 +127,37 @@ assert all(abs(a - b) < 0.05 for a, b in zip(l_ll, l_in_fx)), \
     f"in-network fxp32 wire off-track: {l_ll} vs {l_in_fx}"
 assert l_in_fx[-1] < l_in_fx[0], "fxp32 training loss must decrease"
 
+# PR 6: the `auto` strategy inside the real train step. Its analytic
+# plan (no telemetry yet at trace time) must stay on the lossless track,
+# and the per-bucket occupancy telemetry must surface through the step
+# metrics as a vector for the host-side controller to fold back in.
+def run_auto(tc, steps=6):
+    state = init_train_state(api, tc, mesh, jax.random.PRNGKey(0))
+    step_fn, specs = build_train_step(api, tc, mesh)(state)
+    _, bnamed = batch_specs(batch, mesh, tc)
+    jitted = jax.jit(step_fn, in_shardings=(specs["named"], bnamed),
+                     out_shardings=(specs["named"], None))
+    st = jax.device_put(state, specs["named"])
+    b = jax.device_put(batch, bnamed)
+    losses, occ = [], None
+    for _ in range(steps):
+        st, m = jitted(st, b)
+        losses.append(float(m["loss"]))
+        occ = np.asarray(m["bucket_occupancy"])
+    return losses, occ
+
+
+l_auto, occ = run_auto(TrainConfig(
+    aggregator="auto", optimizer=opt,
+    compression=tc_comp_ll.compression,
+    sharding=ShardingProfile(zero1=True), remat="block"))
+print("comp auto    :", [round(x, 4) for x in l_auto],
+      f"occ=[{occ.min():.3f},{occ.max():.3f}] n_buckets={occ.size}")
+assert all(abs(a - b) < 1e-4 for a, b in zip(l_ll, l_auto)), \
+    f"auto strategy diverged from lossless: {l_ll} vs {l_auto}"
+assert occ.ndim == 1 and occ.size >= 1, occ.shape
+assert float(occ.min()) >= 0.0 and float(occ.max()) <= 1.0, occ
+
 # PR 5: the streamed native RS wire (per-chunk psum_scatter staged
 # against the next chunk's encode by core/streams.py) inside the real
 # train step must stay exactly on the one-shot track.

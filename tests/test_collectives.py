@@ -304,10 +304,10 @@ def test_make_aggregator_unknown_strategy_names_valid_ones():
     msg = str(ei.value)
     assert "compresed" in msg
     for name in ("dense", "compressed", "compressed_rs",
-                 "compressed_innet"):
+                 "compressed_innet", "auto"):
         assert name in msg, f"error message should offer {name!r}: {msg}"
     assert set(AGGREGATORS) == {"dense", "compressed", "compressed_rs",
-                                "compressed_innet"}
+                                "compressed_innet", "auto"}
 
 
 # ----------------------------------------------------------------------

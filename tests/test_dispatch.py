@@ -112,12 +112,12 @@ def _agg_tree(seed=0):
     }
 
 
-def _run_aggregator(cfg, name, steps=1):
+def _run_aggregator(cfg, name, steps=1, wire_plan=None):
     mesh = make_mesh((1,), ("data",))
     tree = jax.tree.map(jnp.asarray, _agg_tree())
     specs = jax.tree.map(lambda _: P(), tree)
     agg = make_aggregator(name, cfg, mesh, ("data",), ("model",),
-                          outer_manual=("data",))
+                          outer_manual=("data",), wire_plan=wire_plan)
 
     def fn(g, r):
         out, st = agg(g, AggregationState(residual=r), specs)
@@ -236,6 +236,80 @@ def test_rs_wire_paths_match_plain_bitwise(wire, backend):
     for k in plain:
         assert np.array_equal(plain[k], rs[k]), (wire, k)
         assert np.array_equal(res_p[k], res_r[k]), (wire, k)
+
+
+# ----------------------------------------------------------------------
+# Per-bucket wire plans (PR 6): a mixed plan must be bit-identical to
+# the fixed strategies it composes on the buckets it assigns. Single
+# worker + dyadic values keep every wire (incl. dense psum of the packed
+# f32 stream) exact, so the whole aggregate must equal the fixed
+# ``compressed`` run bit-for-bit — outputs AND error-feedback residuals,
+# over 3 EF steps. The test tree packs into 6 buckets.
+# ----------------------------------------------------------------------
+
+from repro.core.wireplan import WireGroup, WirePlan  # noqa: E402
+
+MIXED_PLANS = {
+    "dense+comp+rs": WirePlan(6, (WireGroup(0, 2, "dense"),
+                                  WireGroup(2, 2, "compressed"),
+                                  WireGroup(4, 2, "compressed_rs"))),
+    "innet+comp+dense": WirePlan(6, (WireGroup(0, 3, "compressed_innet"),
+                                     WireGroup(3, 1, "compressed"),
+                                     WireGroup(4, 2, "dense"))),
+    "chunk-override": WirePlan(6, (WireGroup(0, 2, "dense"),
+                                   WireGroup(2, 2, "compressed",
+                                             stream_chunks=2),
+                                   WireGroup(4, 2, "compressed_rs"))),
+}
+
+
+@pytest.mark.parametrize("plan_name", sorted(MIXED_PLANS))
+def test_mixed_wire_plan_matches_fixed_bitwise(plan_name):
+    cfg = dataclasses.replace(AGG_BASE, use_pallas="never")
+    outs_f, res_f = _run_aggregator(cfg, "compressed", steps=3)
+    outs_m, res_m = _run_aggregator(cfg, "compressed", steps=3,
+                                    wire_plan=MIXED_PLANS[plan_name])
+    for step, (of, om) in enumerate(zip(outs_f, outs_m)):
+        for k in of:
+            assert np.array_equal(of[k], om[k]), (plan_name, step, k)
+    for k in res_f:
+        assert np.array_equal(res_f[k], res_m[k]), (plan_name, k)
+
+
+def test_mixed_wire_plan_backend_parity():
+    plan = MIXED_PLANS["dense+comp+rs"]
+    (out_n,), res_n = _run_aggregator(
+        dataclasses.replace(AGG_BASE, use_pallas="never"),
+        "compressed", wire_plan=plan)
+    (out_a,), res_a = _run_aggregator(
+        dataclasses.replace(AGG_BASE, use_pallas="always"),
+        "compressed", wire_plan=plan)
+    for k in out_n:
+        assert np.array_equal(out_n[k], out_a[k]), k
+        assert np.array_equal(res_n[k], res_a[k]), k
+
+
+def test_auto_strategy_matches_compressed_bitwise():
+    """The `auto` strategy — explicit mixed plan or its zero-telemetry
+    analytic fallback — must reproduce the fixed strategy bit-for-bit
+    (the plan only moves buckets between lossless wires)."""
+    cfg = dataclasses.replace(AGG_BASE, use_pallas="never")
+    outs_f, res_f = _run_aggregator(cfg, "compressed", steps=3)
+    for wire_plan in (MIXED_PLANS["dense+comp+rs"], None):
+        outs_a, res_a = _run_aggregator(cfg, "auto", steps=3,
+                                        wire_plan=wire_plan)
+        for step, (of, oa) in enumerate(zip(outs_f, outs_a)):
+            for k in of:
+                assert np.array_equal(of[k], oa[k]), (wire_plan, step, k)
+        for k in res_f:
+            assert np.array_equal(res_f[k], res_a[k]), (wire_plan, k)
+
+
+def test_dense_aggregator_rejects_wire_plan():
+    cfg = dataclasses.replace(AGG_BASE, use_pallas="never")
+    with pytest.raises(ValueError, match="does not execute wire plans"):
+        _run_aggregator(cfg, "dense",
+                        wire_plan=MIXED_PLANS["dense+comp+rs"])
 
 
 def test_compressor_has_no_direct_backend_imports():

@@ -31,3 +31,10 @@ def test_collectives_driver():
 @pytest.mark.slow
 def test_train_step_driver():
     _run("train_step_driver.py")
+
+
+@pytest.mark.slow
+def test_wirebytes_driver():
+    """PR 6 satellite: analytic strategy_wire_bytes vs the bytes the
+    launched collectives move (jaxpr-counted), W=2 and W=4."""
+    _run("wirebytes_driver.py")

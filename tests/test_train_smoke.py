@@ -53,6 +53,25 @@ def test_compressed_single_worker_is_identity():
     np.testing.assert_allclose(r1.losses, r2.losses, atol=2e-3)
 
 
+def test_auto_single_worker_matches_dense():
+    """PR 6: `auto` must be trainable through the full loop. At dp=1
+    the step's pre-existing single-worker rule substitutes dense for
+    every strategy (nothing to aggregate), so training is bit-identical
+    to `dense`; the multi-worker auto path (analytic plan + occupancy
+    telemetry through the metrics) is driven by
+    tests/drivers/train_step_driver.py and --compare-auto."""
+    comp = CompressionConfig(ratio=2.0, lanes=512, rows=60, rounds=10,
+                             chunk_blocks=16)
+    r1 = _run(TrainConfig(aggregator="dense", optimizer=OPT,
+                          sharding=ShardingProfile(zero1=False),
+                          remat="none"))
+    r2 = _run(TrainConfig(aggregator="auto", compression=comp,
+                          optimizer=OPT,
+                          sharding=ShardingProfile(zero1=False),
+                          remat="none"))
+    np.testing.assert_array_equal(r1.losses, r2.losses)
+
+
 def test_restart_resumes_from_checkpoint():
     tc = TrainConfig(aggregator="dense", optimizer=OPT,
                      sharding=ShardingProfile(zero1=False), remat="none")

@@ -1,0 +1,249 @@
+"""Per-bucket wire planning (PR 6): the WirePlan partition type, the
+analytic cost model, and the online AutoWireController — all host-side
+logic, no collectives (the execute half is covered by test_dispatch and
+the multi-device drivers).
+
+The controller tests drive ``plan``/``observe`` with *synthetic* wall
+clocks so the probe -> decide arc is deterministic: measured walls must
+override the analytic priors, occupancy must veto compressed wires per
+bucket, and the decided plan must be stable across replan windows.
+"""
+import dataclasses
+import json
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import costmodel as cm
+from repro.core.bucketing import make_bucket_plan
+from repro.core.config import CompressionConfig
+from repro.core.wireplan import (WIRES, WireGroup, WirePlan,
+                                 plan_from_assignments, uniform_plan)
+
+# ratio=1.0 -> block_elems=768; two blocks per bucket -> a 6-bucket
+# stream for the ~9K-element tree below (mirrors test_dispatch's AGG_BASE)
+CFG = CompressionConfig(ratio=1.0, lanes=128, rows=6, rounds=10,
+                        chunk_blocks=4, bucket_bytes=2 * 768 * 4,
+                        replan_every=4)
+
+
+def _bucket_plan(n_buckets=6):
+    tree = {"a": jnp.zeros(n_buckets * 1536 - 10, jnp.float32)}
+    plan = make_bucket_plan(tree, CFG)
+    assert plan.n_buckets == n_buckets
+    return plan
+
+
+# ----------------------------------------------------------------------
+# WirePlan / WireGroup
+# ----------------------------------------------------------------------
+
+def test_wires_match_registry():
+    """Satellite 1: the controller's search space is enumerated from the
+    aggregator registry, and the registry stays in sync with WIRES."""
+    from repro.core.aggregators import AGGREGATORS
+    assert set(WIRES) == set(AGGREGATORS) - {"auto"}
+    assert set(cm.fixed_wires()) == set(WIRES)
+    assert "auto" in AGGREGATORS
+
+
+def test_uniform_plan_trivial():
+    p = uniform_plan(6, "compressed")
+    assert p.is_trivial and p.uniform_wire == "compressed"
+    assert [p.wire_of(b) for b in range(6)] == ["compressed"] * 6
+    # a chunk override is not trivial: it must reach the group executor
+    pc = uniform_plan(6, "compressed", stream_chunks=3)
+    assert not pc.is_trivial and pc.uniform_wire == "compressed"
+
+
+def test_mixed_plan_properties():
+    p = WirePlan(6, (WireGroup(0, 2, "dense"),
+                     WireGroup(2, 2, "compressed"),
+                     WireGroup(4, 2, "compressed_rs")))
+    assert p.uniform_wire is None and not p.is_trivial
+    assert p.wire_of(0) == "dense"
+    assert p.wire_of(3) == "compressed"
+    assert p.wire_of(5) == "compressed_rs"
+    assert "dense" in p.describe() and "[2:4]" in p.describe()
+
+
+@pytest.mark.parametrize("groups", [
+    (),                                              # empty
+    (WireGroup(0, 5, "dense"),),                     # short coverage
+    (WireGroup(1, 5, "dense"),),                     # gap at the front
+    (WireGroup(0, 4, "dense"), WireGroup(3, 3, "compressed")),  # overlap
+    (WireGroup(0, 4, "dense"), WireGroup(5, 1, "compressed")),  # hole
+])
+def test_plan_rejects_non_tilings(groups):
+    with pytest.raises(ValueError):
+        WirePlan(6, tuple(groups))
+
+
+def test_group_validation():
+    with pytest.raises(ValueError):
+        WireGroup(0, 2, "quantum")          # not a wire
+    with pytest.raises(ValueError):
+        WireGroup(0, 0, "dense")            # empty group
+    with pytest.raises(ValueError):
+        WireGroup(-1, 2, "dense")           # negative start
+    with pytest.raises(ValueError):
+        WireGroup(0, 2, "compressed", stream_chunks=0)
+    with pytest.raises(ValueError):
+        WireGroup(0, 2, "dense", stream_chunks=2)   # dense has no chunks
+
+
+def test_plan_from_assignments_coalesces():
+    p = plan_from_assignments(["dense", "dense", "compressed",
+                              "compressed", "compressed", "dense"])
+    assert [(g.start, g.n_buckets, g.wire) for g in p.groups] == [
+        (0, 2, "dense"), (2, 3, "compressed"), (5, 1, "dense")]
+    assert plan_from_assignments(["dense"] * 4).is_trivial
+
+
+# ----------------------------------------------------------------------
+# BucketPlan.group_view / StreamPlan.base_block (the execute-side seams)
+# ----------------------------------------------------------------------
+
+def test_group_view_geometry():
+    plan = _bucket_plan()
+    g = plan.group_view(2, 2)
+    assert g.n_buckets == 2 and g.bucket_elems == plan.bucket_elems
+    assert g.total == 2 * plan.bucket_elems
+    # the LAST group's view stops at the stream's true element count so
+    # its padding region reconstructs exactly
+    tail = plan.group_view(4, 2)
+    assert tail.total == plan.total - 4 * plan.bucket_elems
+    with pytest.raises(ValueError):
+        plan.group_view(5, 2)
+    with pytest.raises(ValueError):
+        plan.group_view(0, 0)
+
+
+def test_stream_plan_base_block_offsets():
+    from repro.core.streams import make_stream_plan
+    plan = _bucket_plan()
+    sp0 = make_stream_plan(plan, CFG)
+    sp2 = make_stream_plan(plan, CFG, base_block=7)
+    assert sp0.chunk_start_block(1) + 7 == sp2.chunk_start_block(1)
+
+
+# ----------------------------------------------------------------------
+# Analytic cost model
+# ----------------------------------------------------------------------
+
+def test_analytic_costs_and_plan():
+    plan = _bucket_plan()
+    costs = cm.analytic_bucket_costs(plan, CFG, workers=4)
+    assert set(costs) == set(WIRES)
+    assert all(c >= 0 and math.isfinite(c) for c in costs.values())
+    # compressed wires pay the codec term on top of the link term
+    assert costs["compressed"] > 0
+    p = cm.analytic_plan(plan, CFG, workers=4)
+    assert p.uniform_wire in WIRES and p.n_buckets == plan.n_buckets
+
+
+def test_analytic_plan_single_worker_is_dense():
+    # W=1: zero link traffic everywhere, but the compressed wires still
+    # pay the codec -> dense is free and must win
+    plan = _bucket_plan()
+    assert cm.analytic_plan(plan, CFG, workers=1).uniform_wire == "dense"
+
+
+def test_occupancy_feasibility_margin():
+    cap = CFG.peel_capacity / CFG.block_elems
+    assert cm.occupancy_feasible(0.0, CFG)
+    assert cm.occupancy_feasible(0.9 * CFG.auto_occupancy_margin * cap, CFG)
+    assert not cm.occupancy_feasible(1.01 * CFG.auto_occupancy_margin * cap,
+                                     CFG)
+
+
+def test_finest_chunks():
+    assert cm._finest_chunks("dense", 6, 4, CFG) is None
+    assert cm._finest_chunks("compressed", 6, 4, CFG) == 6
+    assert cm._finest_chunks("compressed_rs", 6, 4, CFG) == 2
+    slots = CFG.switch_slots
+    assert cm._finest_chunks("compressed_innet", 6, 4, CFG) == -(-6 // slots)
+
+
+# ----------------------------------------------------------------------
+# The online controller
+# ----------------------------------------------------------------------
+
+def _drive(ctl, steps, walls, occupancy=None):
+    """Run the controller against synthetic walls: every uniform plan's
+    wall is the probed wire's entry in ``walls``; mixed plans cost the
+    bucket-weighted mix."""
+    for step in range(steps):
+        p = ctl.plan(step)
+        w = p.uniform_wire
+        if w is not None:
+            wall = walls[w]
+        else:
+            wall = sum(walls[g.wire] * g.n_buckets for g in p.groups) \
+                / p.n_buckets
+        tel = None if occupancy is None else \
+            {"bucket_occupancy": occupancy}
+        ctl.observe(wall, tel)
+    return ctl.plan(steps)
+
+
+WALLS = {"dense": 0.0030, "compressed": 0.0055,
+         "compressed_rs": 0.0050, "compressed_innet": 0.0060}
+
+
+def test_controller_probes_every_wire_then_decides():
+    plan = _bucket_plan()
+    ctl = cm.AutoWireController(plan, CFG, workers=4)
+    final = _drive(ctl, 10 * CFG.replan_every, WALLS)
+    trace = ctl.decision_trace()
+    assert not trace["probing"]
+    # measured walls overrode the analytic prior: dense wins
+    assert final.uniform_wire == "dense"
+    probed = {k.split("/")[0] for k in trace["measured_wall_s"]}
+    assert probed == set(WIRES), "controller skipped a wire probe"
+
+
+def test_controller_occupancy_vetoes_compressed_buckets():
+    plan = _bucket_plan()
+    ctl = cm.AutoWireController(plan, CFG, workers=4)
+    walls = dict(WALLS, compressed=0.0010)   # compressed is fastest...
+    occ = [0.01] * plan.n_buckets
+    occ[2] = occ[3] = 0.99                   # ...but 2 buckets can't peel
+    final = _drive(ctl, 10 * CFG.replan_every, walls, occupancy=occ)
+    assert [(g.start, g.stop, g.wire) for g in final.groups] == [
+        (0, 2, "compressed"), (2, 4, "dense"), (4, 6, "compressed")]
+
+
+def test_controller_plan_static_within_window():
+    plan = _bucket_plan()
+    ctl = cm.AutoWireController(plan, CFG, workers=4)
+    plans = [ctl.plan(s) for s in range(CFG.replan_every)]
+    assert all(p == plans[0] for p in plans), \
+        "plan changed inside a replan window (would retrigger compiles)"
+
+
+def test_decision_trace_is_json_serializable():
+    plan = _bucket_plan()
+    ctl = cm.AutoWireController(plan, CFG, workers=4)
+    _drive(ctl, 6 * CFG.replan_every, WALLS,
+           occupancy=[0.05] * plan.n_buckets)
+    trace = ctl.decision_trace()
+    rt = json.loads(json.dumps(trace))
+    assert rt["plan"][0]["wire"] in WIRES
+    assert rt["occupancy"]["max"] >= rt["occupancy"]["min"]
+    assert set(rt["analytic_bucket_cost_s"]) == set(WIRES)
+
+
+def test_controller_mixed_plan_wall_not_attributed():
+    """A mixed plan's wall trains no single wire's EWMA (its cost is a
+    sum of already-measured parts)."""
+    plan = _bucket_plan()
+    ctl = cm.AutoWireController(plan, CFG, workers=4)
+    mixed = WirePlan(6, (WireGroup(0, 3, "dense"),
+                         WireGroup(3, 3, "compressed")))
+    assert ctl._plan_key(mixed) is None
+    assert ctl._plan_key(uniform_plan(6, "dense")) == ("dense", None)
+    assert ctl._plan_key(uniform_plan(6, "compressed", stream_chunks=3)) \
+        == ("compressed", 3)
