@@ -1,4 +1,5 @@
-"""Roofline report from the dry-run artifacts (paper deliverable g).
+"""Roofline report from the dry-run artifacts (paper deliverable g),
+plus the live codec roofline (``--codec``, PR 7).
 
 Three terms per (arch x shape x mesh), all in seconds per step:
 
@@ -14,6 +15,20 @@ scanned layers). Hardware constants per the brief (TPU v5e):
 MODEL_FLOPS uses 6*N*D for training (N = active params, D = tokens) and
 2*N*D for decode; the ratio MODEL_FLOPS / corrected-HLO-FLOPs shows how
 much compiled compute is "useful".
+
+``--codec`` models the homomorphic wire codec itself against the same
+constants: bytes and FLOPs per bucket for the producer (sketch-encode +
+bitmap-pack + maxabs/quantize) and consumer (unpack + dequant + peel),
+and — the CI gate — counts the *stream passes* each backend's jaxpr
+makes over the bucket stream: eqns touching a stream-sized operand,
+layout ops excluded, control-flow wrappers recursed into.  The fused
+Pallas wire kernels (``kernels/sketch_wire.py``) must show exactly ONE
+producer and ONE consumer pass; the composed reference path shows the
+2-3 separate passes it actually makes.  The normalized JSON
+(``BENCH_roofline_codec.json``) also carries the bandwidth figures
+``core/costmodel.priors_from_codec_report`` turns into ``auto_*``
+priors — so the ``auto`` controller's analytic costs come from this
+file's roofline, not a guess.
 """
 
 from __future__ import annotations
@@ -22,9 +37,14 @@ import glob
 import gzip
 import json
 import os
+import statistics
+import time
 from typing import Dict, List, Optional
 
-from . import hlo_analysis as ha
+try:
+    from . import hlo_analysis as ha
+except ImportError:          # plain-script invocation: benchmarks/ on path
+    import hlo_analysis as ha
 
 PEAK_FLOPS = 197e12        # bf16 / chip
 HBM_BW = 819e9             # bytes/s / chip
@@ -119,11 +139,262 @@ def table(mesh: str = "single") -> str:
     return "\n".join(out)
 
 
+# ----------------------------------------------------------------------
+# The live codec roofline (--codec, PR 7)
+# ----------------------------------------------------------------------
+
+# Layout/movement primitives: shape bookkeeping XLA fuses away, never an
+# extra pass over the stream.
+_LAYOUT_PRIMS = {
+    "reshape", "broadcast_in_dim", "convert_element_type", "pad", "slice",
+    "squeeze", "transpose", "copy", "concatenate", "dynamic_slice",
+    "dynamic_update_slice", "bitcast_convert_type",
+}
+# Control-flow wrappers: count what runs inside, not the wrapper.
+_WRAPPER_PRIMS = {
+    "scan", "while", "cond", "pjit", "jit", "closed_call", "core_call",
+    "custom_jvp_call", "custom_vjp_call", "custom_jvp_call_jaxpr",
+    "custom_vjp_call_jaxpr", "remat", "remat2", "checkpoint", "named_call",
+    "xla_call",
+}
+
+
+def _subjaxprs(eqn):
+    for v in eqn.params.values():
+        vs = v if isinstance(v, (list, tuple)) else (v,)
+        for item in vs:
+            if hasattr(item, "jaxpr"):        # ClosedJaxpr
+                yield item.jaxpr
+            elif hasattr(item, "eqns"):       # raw Jaxpr
+                yield item
+
+
+def count_stream_passes(jaxpr, stream_elems: int) -> int:
+    """Number of non-layout eqns touching a stream-sized operand.
+
+    The "pass count over the bucket stream": every eqn whose inputs or
+    outputs include an array of >= ``stream_elems`` elements is one more
+    time the stream crosses HBM.  Layout ops are excluded; control-flow
+    wrappers are recursed into (their body runs, the wrapper doesn't);
+    a ``pallas_call`` counts as ONE pass regardless of its kernel body
+    (the body works on VMEM tiles — that is the entire point).
+    """
+    jaxpr = getattr(jaxpr, "jaxpr", jaxpr)
+    n = 0
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        touches = any(
+            getattr(getattr(v, "aval", None), "size", 0) >= stream_elems
+            for v in list(eqn.invars) + list(eqn.outvars))
+        if name in _WRAPPER_PRIMS:
+            n += sum(count_stream_passes(j, stream_elems)
+                     for j in _subjaxprs(eqn))
+            continue
+        if name in _LAYOUT_PRIMS or not touches:
+            continue
+        n += 1
+        # pallas_call: one pass, do not recurse into the tile body
+    return n
+
+
+def _median_wall_s(fn, iters: int) -> float:
+    """Warmup once (compile), then median of ``iters`` blocked walls —
+    the same methodology benchmarks/aggregation.py uses, so first-call
+    compile noise never lands in a reported wall."""
+    import jax
+    jax.block_until_ready(fn())          # warmup + compile
+    walls = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        walls.append(time.perf_counter() - t0)
+    return statistics.median(walls)
+
+
+def codec_report(n_buckets: int = 4, iters: int = 5,
+                 wire_dtype: str = "f32") -> dict:
+    """Model + measure the wire codec against the roofline constants.
+
+    Builds a small bucket stream, traces the fused (``use_pallas=
+    "always"``) and composed (``"never"``) producer/consumer ops, counts
+    their jaxpr stream passes, and models bytes/FLOPs per bucket.  The
+    composed leg is also wall-timed (median-of-``iters``); the fused leg
+    is wall-timed only on a real TPU — interpret-mode Pallas is a
+    Python-loop emulator whose wall says nothing about the kernel.
+    """
+    import dataclasses as _dc
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.config import CompressionConfig
+    from repro.core import costmodel
+    from repro.kernels import ops
+    from repro.net.fixedpoint import FixedPointWire
+
+    cfg0 = CompressionConfig(ratio=1.0, lanes=128, rows=6, rounds=10,
+                             wire_dtype=wire_dtype)
+    backend = jax.default_backend()
+    on_tpu = backend == "tpu"
+    quantized = wire_dtype == "fxp32"
+    wire = FixedPointWire(workers=2)
+
+    nbpb = 2                                  # blocks per bucket
+    nb = n_buckets * nbpb
+    stream_elems = nb * cfg0.block_elems
+    rng = np.random.default_rng(0)
+    x = np.where(rng.random(stream_elems) < 0.08,
+                 rng.standard_normal(stream_elems), 0.0).astype(np.float32)
+    xb = jnp.asarray(x.reshape(nb, cfg0.group, cfg0.lanes))
+    ids = jnp.arange(nb, dtype=jnp.int32)
+
+    # -- modeled bytes / FLOPs per bucket ------------------------------
+    bucket_bytes = nbpb * cfg0.block_elems * 4
+    sketch_bytes = nbpb * cfg0.rows * cfg0.lanes * 4
+    words_bytes = nbpb * cfg0.block_elems // 8
+    # encode contraction: (rows, G*3) x (G*3, c) per block, 2 FLOPs/MAC
+    encode_flops = nbpb * 2 * cfg0.rows * (cfg0.group * 3) * cfg0.lanes
+    # peel: `rounds` rounds of gather/scatter + the same-shape arithmetic
+    peel_flops = encode_flops * cfg0.rounds
+
+    def leg(policy: str) -> dict:
+        cfg = _dc.replace(cfg0, use_pallas=policy)
+        qkw = {}
+        if quantized:
+            mx0 = jnp.max(jnp.abs(xb), axis=(1, 2))
+            qkw = dict(
+                exponents=wire.exponents_from_maxabs(mx0),
+                mantissa_bits=wire.mantissa_bits)
+
+        def produce(v):
+            return ops.encode_pack_quantize(v, ids, cfg, **qkw)
+
+        sk, w2d, _ = jax.jit(produce)(xb)
+
+        def consume(s, w):
+            return ops.dequant_peel_unpack(s, w, ids, cfg, **qkw)
+
+        prod_passes = count_stream_passes(
+            jax.make_jaxpr(produce)(xb), stream_elems)
+        cons_passes = count_stream_passes(
+            jax.make_jaxpr(consume)(sk, w2d), stream_elems)
+        row = {"use_pallas": policy,
+               "producer_passes": prod_passes,
+               "consumer_passes": cons_passes}
+        if policy == "never" or on_tpu:
+            jp = jax.jit(produce)
+            jc = jax.jit(consume)
+            row["producer_wall_s"] = _median_wall_s(lambda: jp(xb), iters)
+            row["consumer_wall_s"] = _median_wall_s(
+                lambda: jc(sk, w2d), iters)
+            bps = stream_elems * 4 / (row["producer_wall_s"]
+                                      + row["consumer_wall_s"])
+            row["achieved_bytes_per_s"] = bps
+            row["achieved_hbm_fraction"] = bps / HBM_BW
+        return row
+
+    fused = leg("always")
+    composed = leg("never")
+    # The fused kernels' one-pass roofline vs the composed passes, both
+    # priced at the HBM bound (codec compute is bandwidth-shaped: the
+    # MXU contraction is tiny next to the stream traffic).
+    t_pass = bucket_bytes / HBM_BW
+    measured = fused if on_tpu else composed
+    achieved = measured.get("achieved_bytes_per_s")
+    report = {
+        "schema": 1,
+        "backend": backend,
+        "jax": jax.__version__,
+        "wire_dtype": wire_dtype,
+        "geometry": {
+            "n_buckets": n_buckets, "blocks_per_bucket": nbpb,
+            "block_elems": cfg0.block_elems, "rows": cfg0.rows,
+            "lanes": cfg0.lanes, "stream_elems": stream_elems,
+        },
+        "per_bucket": {
+            "gradient_bytes": bucket_bytes,
+            "sketch_bytes": sketch_bytes,
+            "index_bytes": words_bytes,
+            "encode_flops": encode_flops,
+            "peel_flops": peel_flops,
+            "hbm_s_per_pass": t_pass,
+            "mxu_s_encode": encode_flops / PEAK_FLOPS,
+        },
+        "passes": {"fused": {"producer": fused["producer_passes"],
+                             "consumer": fused["consumer_passes"]},
+                   "composed": {"producer": composed["producer_passes"],
+                                "consumer": composed["consumer_passes"]}},
+        "legs": {"fused": fused, "composed": composed},
+        "hbm_bytes_per_s": HBM_BW,
+        "ici_bytes_per_s": ICI_BW,
+        "achieved_codec_bytes_per_s": achieved,
+        "modeled_codec_s_per_bucket": {
+            "fused": (fused["producer_passes"]
+                      + fused["consumer_passes"]) * t_pass,
+            "composed": (composed["producer_passes"]
+                         + composed["consumer_passes"]) * t_pass,
+        },
+    }
+    report["auto_priors"] = costmodel.priors_from_codec_report(report)
+    return report
+
+
+def codec_table(rep: dict) -> str:
+    g = rep["geometry"]
+    out = [f"# Codec roofline — backend={rep['backend']} "
+           f"jax={rep['jax']} wire_dtype={rep['wire_dtype']}",
+           f"stream: {g['n_buckets']} buckets x "
+           f"{g['blocks_per_bucket']} blocks x {g['block_elems']} elems "
+           f"= {g['stream_elems']} f32",
+           "| leg | producer passes | consumer passes | wall_s |"
+           " achieved B/s | HBM frac |",
+           "|---|---|---|---|---|---|"]
+    for name in ("fused", "composed"):
+        leg = rep["legs"][name]
+        wall = leg.get("producer_wall_s")
+        wtxt = "-" if wall is None else \
+            f"{wall + leg['consumer_wall_s']:.3e}"
+        bps = leg.get("achieved_bytes_per_s")
+        btxt = "-" if bps is None else f"{bps:.3e}"
+        frac = leg.get("achieved_hbm_fraction")
+        ftxt = "-" if frac is None else f"{frac:.4f}"
+        out.append(f"| {name} | {leg['producer_passes']} "
+                   f"| {leg['consumer_passes']} | {wtxt} | {btxt} "
+                   f"| {ftxt} |")
+    m = rep["modeled_codec_s_per_bucket"]
+    out.append(f"modeled codec s/bucket @ HBM bound: "
+               f"fused {m['fused']:.3e} vs composed {m['composed']:.3e}")
+    pri = rep["auto_priors"]
+    out.append(f"auto priors: codec {pri['auto_codec_gbps']:.1f} Gb/s, "
+               f"link {pri['auto_link_gbps']:.1f} Gb/s")
+    return "\n".join(out)
+
+
 def main():
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--codec", action="store_true",
+                    help="report the wire-codec roofline (fused vs "
+                         "composed stream passes) instead of the "
+                         "dry-run artifact table")
+    ap.add_argument("--codec-json", default=None,
+                    help="write the normalized codec report here "
+                         "(e.g. BENCH_roofline_codec.json)")
+    ap.add_argument("--wire-dtype", default="f32",
+                    choices=["f32", "fxp32"])
+    ap.add_argument("--iters", type=int, default=5,
+                    help="timed iterations per wall (median)")
     args = ap.parse_args()
+    if args.codec:
+        rep = codec_report(iters=args.iters, wire_dtype=args.wire_dtype)
+        print(codec_table(rep))
+        if args.codec_json:
+            with open(args.codec_json, "w") as f:
+                json.dump(rep, f, indent=1)
+            print(f"wrote {args.codec_json}")
+        return
     print(table(args.mesh))
 
 

@@ -286,20 +286,31 @@ class CompressedAggregator:
         return red
 
     def _encode_streamed(self, buckets, splan: StreamPlan,
-                         comp: HomomorphicCompressor, reduce_fn):
+                         comp: HomomorphicCompressor, reduce_fn,
+                         with_maxabs: bool = False):
         """Per-chunk encode + wire through the shared scheduler.
 
-        Returns the reduced per-chunk payloads stacked on a leading
-        ``n_chunks`` dim (whatever shapes ``reduce_fn`` emits).
-        Bit-identical to the fused path: each chunk encodes under the
-        stream's global hash plan via ``block_offset``, the bitmap
-        slices exactly per bucket, and padding buckets are zeros end to
-        end.
+        Each chunk makes ONE producer-op pass over its gradient slice
+        (`HomomorphicCompressor.compress_wire` — fused sketch + packed
+        bitmap + per-block maxabs on fused-capable geometries) and hands
+        the payload to ``reduce_fn`` for the collectives. Returns the
+        reduced per-chunk payloads stacked on a leading ``n_chunks`` dim
+        (whatever shapes ``reduce_fn`` emits). Bit-identical to the
+        one-shot path: each chunk encodes under the stream's global hash
+        plan via ``block_offset``, the bitmap slices exactly per bucket,
+        and padding buckets are zeros end to end.
+
+        ``with_maxabs``: include the per-block max magnitudes in the
+        per-chunk payload (the fxp32 wire's exponent ingredient — free
+        on the fused path, where the producer kernel emits it anyway).
         """
         def enc(i, chunk):
-            c = comp.compress(chunk.reshape(-1),
-                              block_offset=splan.chunk_start_block(i))
-            return c.sketch, c.index_words
+            leaf, mx = comp.compress_wire(
+                chunk.reshape(-1),
+                block_offset=splan.chunk_start_block(i))
+            if with_maxabs:
+                return leaf.sketch, leaf.index_words, mx
+            return leaf.sketch, leaf.index_words
 
         return stream_schedule(splan.chunk_view(buckets), enc, reduce_fn)
 
@@ -315,7 +326,15 @@ class CompressedAggregator:
 
     def _encode(self, buckets: jnp.ndarray, plan: BucketPlan,
                 comp: HomomorphicCompressor, dp_idx):
-        """(n_buckets, E) local buckets -> aggregated (sketch, words)."""
+        """(n_buckets, E) local buckets -> aggregated wire payload.
+
+        The wire-contract half of PR 7: every strategy's ``_encode``
+        makes ONE producer-op pass over the bucket stream (fused
+        sketch + pack (+ maxabs) via ``compress``/``compress_wire``)
+        before its collectives, and returns a payload tuple its own
+        ``_recover`` consumes in ONE consumer-op pass after them. This
+        class's payload is ``(sketch, words)``; subclasses may extend it
+        (the fxp32 tree adds the shared exponents)."""
         splan = self._stream_plan(plan)
         if not splan.streamed:
             c = comp.compress(buckets.reshape(-1),
@@ -328,14 +347,16 @@ class CompressedAggregator:
                                         self._reduce_allreduce(dp_idx))
         return self._trim_fused(sks, ws, plan, splan)
 
-    def _recover(self, sk, words, plan: BucketPlan,
+    def _recover(self, payload, plan: BucketPlan,
                  comp: HomomorphicCompressor, dp_idx, dp_rank,
                  spec_leaves=None):
-        """Aggregated (sketch, words) -> recovered (n_buckets, E).
+        """Aggregated wire payload -> recovered (n_buckets, E), in ONE
+        consumer-op pass (fused unpack + peel via ``recover``).
 
         ``spec_leaves``: the leaves' DP-stripped PartitionSpecs — only
         the reduce-scatter subclass consults them (the gather-skip path
         must know whether the packed stream is a TP-local view)."""
+        sk, words = payload
         rec = comp.recover(CompressedLeaf(sketch=sk, index_words=words),
                            plan.padded, block_offset=self.base_block)
         return rec.reshape(plan.n_buckets, plan.bucket_elems)
@@ -371,8 +392,8 @@ class CompressedAggregator:
         """Execute one group's encode -> wire -> recover on this
         executor's own wire (``plan`` is the group view; ``buckets`` its
         row slice of the packed stream)."""
-        sk, words = self._encode(buckets, plan, comp, dp_idx)
-        return self._recover(sk, words, plan, comp, dp_idx, dp_rank)
+        payload = self._encode(buckets, plan, comp, dp_idx)
+        return self._recover(payload, plan, comp, dp_idx, dp_rank)
 
     def _execute_plan(self, buckets, plan: BucketPlan,
                       comp: HomomorphicCompressor, dp_idx, dp_rank,
@@ -393,8 +414,8 @@ class CompressedAggregator:
         """
         wplan = self._wire_plan(plan)
         if wplan.is_trivial and wplan.groups[0].wire == self.wire:
-            sk, words = self._encode(buckets, plan, comp, dp_idx)
-            return self._recover(sk, words, plan, comp, dp_idx, dp_rank,
+            payload = self._encode(buckets, plan, comp, dp_idx)
+            return self._recover(payload, plan, comp, dp_idx, dp_rank,
                                  spec_leaves=spec_leaves)
         nbpb = plan.blocks_per_bucket(self.cfg)
         parts = []
@@ -677,10 +698,11 @@ class CompressedReduceScatterAggregator(CompressedAggregator):
             return sk_loc, w_loc
         return red
 
-    def _recover(self, sk, words, plan: BucketPlan,
+    def _recover(self, payload, plan: BucketPlan,
                  comp: HomomorphicCompressor, dp_idx, dp_rank,
                  spec_leaves=None):
         cfg = self.cfg
+        sk, words = payload
         self._check_bitmap()
         W, nbpb, wpb, nb_p = self._rs_geometry(plan)
         chunk_b = nb_p // W                      # buckets per rank
@@ -703,7 +725,7 @@ class CompressedReduceScatterAggregator(CompressedAggregator):
             # lowered — degrade to all-ranks peeling (same values, no
             # per-rank compute scattering). See ``outer_manual``.
             return CompressedAggregator._recover(
-                self, sk, words, plan, comp, dp_idx, dp_rank)
+                self, (sk, words), plan, comp, dp_idx, dp_rank)
         pad_b = nb_p - plan.n_buckets
         if pad_b:
             sk = jnp.pad(sk, ((0, pad_b * nbpb), (0, 0), (0, 0)))
@@ -841,37 +863,68 @@ class CompressedInNetworkAggregator(CompressedAggregator):
         use_pp = True if self._full_manual() else None
         wire = FixedPointWire(workers=self._dp_world())
         splan = self._stream_plan(plan)
+        nbpb = splan.blocks_per_bucket
 
-        def tree_window(sk_buckets, words_buckets):
+        def tree_window(sk_buckets, maxabs_blocks, words_buckets):
             """One chunk (whole buckets) over the fxp32 tree, window by
-            window: pmax-agree exponents, quantize, integer tree."""
-            exp = wire.shared_exponents(sk_buckets, self.dp_axes)
+            window: pmax-agree exponents from the producer's per-block
+            maxabs byproduct (max-of-maxes == bucket max, exactly — no
+            second pass over the sketch), quantize the Γ-compressed
+            sketch, integer tree. The int32 sum and the agreed exponents
+            ride the payload; dequantization happens inside the fused
+            consumer pass (:meth:`_recover`)."""
+            n_b = sk_buckets.shape[0]
+            bucket_max = maxabs_blocks.reshape(n_b, nbpb).max(axis=1)
+            exp = jax.lax.pmax(wire.exponents_from_maxabs(bucket_max),
+                               tuple(self.dp_axes))
             q = tree_all_reduce(wire.encode(sk_buckets, exp), topo, "add",
                                 axis_indices=dp_idx, use_ppermute=use_pp,
                                 window_slots=cfg.switch_slots)
             w = tree_all_reduce(words_buckets, topo, "or",
                                 axis_indices=dp_idx, use_ppermute=use_pp,
                                 window_slots=cfg.switch_slots)
-            return wire.decode(q, exp), w
+            return q, w, exp
 
         if not splan.streamed:
-            c = comp.compress(buckets.reshape(-1),
-                              block_offset=self.base_block)
+            c, mx = comp.compress_wire(buckets.reshape(-1),
+                                       block_offset=self.base_block)
             sk, words = c.sketch, c.index_words
-            sk_b, w_b = tree_window(
-                sk.reshape(plan.n_buckets, -1),
+            q_b, w_b, exp = tree_window(
+                sk.reshape(plan.n_buckets, -1), mx,
                 words.reshape(plan.n_buckets, splan.words_per_bucket))
-            return sk_b.reshape(sk.shape), w_b.reshape(-1)
+            return q_b.reshape(sk.shape), w_b.reshape(-1), exp
 
         def red(payload):
-            sk, words = payload          # one chunk's local payload
-            sk_b, w_b = tree_window(
-                sk.reshape(splan.chunk_buckets, -1),
+            sk, words, mx = payload      # one chunk's local payload
+            q_b, w_b, exp = tree_window(
+                sk.reshape(splan.chunk_buckets, -1), mx,
                 words.reshape(splan.chunk_buckets, splan.words_per_bucket))
-            return sk_b.reshape(sk.shape), w_b.reshape(words.shape)
+            return q_b.reshape(sk.shape), w_b.reshape(words.shape), exp
 
-        sks, ws = self._encode_streamed(buckets, splan, comp, red)
-        return self._trim_fused(sks, ws, plan, splan)
+        qs, ws, exps = self._encode_streamed(buckets, splan, comp, red,
+                                             with_maxabs=True)
+        q, w = self._trim_fused(qs, ws, plan, splan)
+        return q, w, exps.reshape(-1)[:plan.n_buckets]
+
+    def _recover(self, payload, plan: BucketPlan,
+                 comp: HomomorphicCompressor, dp_idx, dp_rank,
+                 spec_leaves=None):
+        """fxp32 payloads carry ``(q int32, words, exponents)``: the
+        exponent-bitcast dequantization runs *inside* the fused consumer
+        pass (``recover(dequant=...)``) instead of as a separate
+        sketch-sized decode before peeling. f32 payloads are the base
+        class's ``(sketch, words)``."""
+        if len(payload) == 2:
+            return super()._recover(payload, plan, comp, dp_idx, dp_rank,
+                                    spec_leaves=spec_leaves)
+        q, words, exp = payload
+        wire = FixedPointWire(workers=self._dp_world())
+        nbpb = plan.blocks_per_bucket(self.cfg)
+        rec = comp.recover(
+            CompressedLeaf(sketch=q, index_words=words), plan.padded,
+            block_offset=self.base_block,
+            dequant=(jnp.repeat(exp, nbpb), wire.mantissa_bits))
+        return rec.reshape(plan.n_buckets, plan.bucket_elems)
 
 
 # ----------------------------------------------------------------------

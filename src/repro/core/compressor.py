@@ -79,15 +79,37 @@ class HomomorphicCompressor:
     # Phase I — compression
     # ------------------------------------------------------------------
 
-    def compress(self, x: jnp.ndarray, block_offset=0) -> CompressedLeaf:
-        """``block_offset`` (static or traced int32) shifts the hash/
+    def compress_wire(self, x: jnp.ndarray, block_offset=0
+                      ) -> Tuple[CompressedLeaf, jnp.ndarray]:
+        """One wire-producer pass: ``(CompressedLeaf, per-block maxabs)``.
+
+        On fused-capable geometries (`ops.fused_wire_supported`) this is
+        ONE pass over the gradient stream — sketch, packed bitmap and the
+        per-block max magnitude come out of a single
+        `ops.encode_pack_quantize` grid pass (the maxabs feeds the fxp32
+        shared-exponent `pmax`; max is exact, so max-of-block-maxes ==
+        bucket max, bit for bit). Bloom / unaligned geometries fall back
+        to the composed encode-then-pack passes.
+
+        ``block_offset`` (static or traced int32) shifts the hash/
         rotation block ids — used by the bucketed aggregators so a bucket
         encoded on its own is bit-identical to its slice of the fused
         whole-stream encode (the block at stream position ``b`` always
-        hashes as block ``b``)."""
+        hashes as block ``b``).
+        """
         plan = make_plan(x.size, self.cfg)
         xb = to_blocks(x.astype(jnp.float32), plan)
         ids = jnp.arange(plan.nb, dtype=jnp.int32) + jnp.int32(block_offset)
+
+        if ops.fused_wire_supported(self.cfg):
+            def enc(ids_c, xb_c):
+                return ops.encode_pack_quantize(xb_c, ids_c, self.cfg)
+
+            sketch, words2d, maxabs = _chunked_map(
+                enc, plan.nb, self.cfg.chunk_blocks, ids, xb)
+            return (CompressedLeaf(sketch=sketch,
+                                   index_words=words2d.reshape(-1)),
+                    maxabs)
 
         def enc(ids_c, xb_c):
             return ops.sketch_encode(xb_c, ids_c, self.cfg)
@@ -97,37 +119,88 @@ class HomomorphicCompressor:
             words = index_lib.pack_bits(index_lib.bitmap_build(xb))
         else:
             words = index_lib.bloom_build(xb, self.cfg)
-        return CompressedLeaf(sketch=sketch, index_words=words)
+        maxabs = jnp.max(jnp.abs(sketch), axis=(1, 2))
+        return CompressedLeaf(sketch=sketch, index_words=words), maxabs
+
+    def compress(self, x: jnp.ndarray, block_offset=0) -> CompressedLeaf:
+        """Wire payload only — see :meth:`compress_wire`."""
+        return self.compress_wire(x, block_offset=block_offset)[0]
 
     # ------------------------------------------------------------------
     # Phase II — recovery
     # ------------------------------------------------------------------
 
     def recover(self, comp: CompressedLeaf, n: int, shape=None,
-                with_stats: bool = False, block_offset=0
+                with_stats: bool = False, block_offset=0, dequant=None
                 ) -> jnp.ndarray | Tuple[jnp.ndarray, RecoveryStats]:
         """``block_offset``: hash-plan id of the first block in
         ``comp`` — pass the same offset the sketch was encoded with when
         recovering a sub-range of a fused bucket stream (bitmap index
         only: a Bloom filter hashes global coordinates and cannot be
-        sliced per-range)."""
+        sliced per-range).
+
+        ``dequant``: optional ``(per_block_exponents (nb,) int32,
+        mantissa_bits int)`` — the aggregated int32 fxp32 sketch is then
+        dequantized *inside* the fused consumer pass (exponent-bitcast
+        scale, see `net/fixedpoint.py`) instead of in a separate
+        stream-sized op before peeling.
+
+        On fused-capable geometries the whole receive side — bitmap
+        unpack, optional dequant, peel — is ONE pass over the wire
+        payload (`ops.dequant_peel_unpack`); recovery stats come from a
+        `population_count` over the packed words, never materializing
+        the unpacked bitmap outside the kernel.
+        """
         plan = make_plan(n, self.cfg)
         bshape = (plan.nb, plan.group, plan.lanes)
-        if self.cfg.index == "bitmap":
-            bits = index_lib.unpack_bits(comp.index_words, bshape)
-        else:
-            bits = index_lib.bloom_query(bshape, self.cfg, comp.index_words)
         ids = jnp.arange(plan.nb, dtype=jnp.int32) + jnp.int32(block_offset)
 
-        def rec(ids_c, sk_c, bits_c):
-            return ops.sketch_peel(sk_c, bits_c, ids_c, self.cfg)
+        if ops.fused_wire_supported(self.cfg):
+            wpb = self.cfg.block_elems // 32
+            words2d = comp.index_words.reshape(plan.nb, wpb)
+            if dequant is not None:
+                exps, mbits = dequant
 
-        values, residual = _chunked_map(
-            rec, plan.nb, self.cfg.chunk_blocks, ids, comp.sketch, bits)
+                def rec(ids_c, sk_c, w_c, e_c):
+                    return ops.dequant_peel_unpack(
+                        sk_c, w_c, ids_c, self.cfg,
+                        exponents=e_c, mantissa_bits=mbits)
+
+                values, residual = _chunked_map(
+                    rec, plan.nb, self.cfg.chunk_blocks,
+                    ids, comp.sketch, words2d,
+                    jnp.asarray(exps, jnp.int32))
+            else:
+                def rec(ids_c, sk_c, w_c):
+                    return ops.dequant_peel_unpack(sk_c, w_c, ids_c, self.cfg)
+
+                values, residual = _chunked_map(
+                    rec, plan.nb, self.cfg.chunk_blocks,
+                    ids, comp.sketch, words2d)
+            nnz = jnp.sum(jax.lax.population_count(comp.index_words)
+                          ).astype(jnp.int32)
+        else:
+            if self.cfg.index == "bitmap":
+                bits = index_lib.unpack_bits(comp.index_words, bshape)
+            else:
+                bits = index_lib.bloom_query(bshape, self.cfg,
+                                             comp.index_words)
+            sketch = comp.sketch
+            if dequant is not None:
+                exps, mbits = dequant
+                from repro.net.fixedpoint import pow2
+                scale = pow2(jnp.asarray(exps, jnp.int32) - int(mbits))
+                sketch = sketch.astype(jnp.float32) * scale[:, None, None]
+
+            def rec(ids_c, sk_c, bits_c):
+                return ops.sketch_peel(sk_c, bits_c, ids_c, self.cfg)
+
+            values, residual = _chunked_map(
+                rec, plan.nb, self.cfg.chunk_blocks, ids, sketch, bits)
+            nnz = jnp.sum(bits)
         x = from_blocks(values, plan, shape)
         if not with_stats:
             return x
-        nnz = jnp.sum(bits)
         n_residual = jnp.sum(residual.astype(jnp.int32))
         stats = RecoveryStats(
             nnz=nnz, peeled=nnz - n_residual,   # peeled == indexed & exact

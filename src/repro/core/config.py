@@ -111,12 +111,21 @@ class CompressionConfig:
                                  # the `auto` strategy; the compiled step
                                  # is static per plan, so this bounds
                                  # recompilation frequency
-    auto_link_gbps: float = 10.0  # analytic prior: link bandwidth used
+    auto_link_gbps: float = 400.0  # analytic prior: link bandwidth used
                                  # to turn strategy_wire_bytes into
-                                 # seconds before any telemetry exists
-    auto_codec_gbps: float = 2.0  # analytic prior: sketch encode+peel
-                                 # throughput (bytes of gradient per
-                                 # second) for the codec-time term
+                                 # seconds before any telemetry exists.
+                                 # Default = the per-link ICI roofline
+                                 # (costmodel.ICI_BW, 50 GB/s); override
+                                 # from benchmarks/roofline.py --codec
+                                 # via costmodel.priors_from_codec_report
+    auto_codec_gbps: float = 6552.0  # analytic prior: codec streaming
+                                 # throughput (bytes of bucket stream
+                                 # per second PER PASS) for the
+                                 # codec-compute term. Default = the
+                                 # HBM roofline (costmodel.HBM_BW,
+                                 # 819 GB/s); the per-wire pass counts
+                                 # (kernels.ops.wire_codec_passes) turn
+                                 # this into seconds
     auto_occupancy_margin: float = 0.9
                                  # compressed wires are infeasible for a
                                  # bucket whose measured nonzero count

@@ -42,6 +42,34 @@ from .wireplan import WIRES, WirePlan, plan_from_assignments, uniform_plan
 
 COMPRESSED_WIRES = tuple(w for w in WIRES if w != "dense")
 
+# Canonical single-chip roofline constants (TPU v5e class), shared with
+# `benchmarks/roofline.py` — the source of the default `auto_*` bandwidth
+# priors below and of the codec-compute term in the analytic costs.
+# PR 7 recalibration: the old priors (link 10 Gb/s, codec 2 Gb/s) were
+# Ethernet-NIC-shaped and put the analytic compressed cost ~7x off the
+# measured decision-trace walls; ICI and HBM are the honest in-mesh
+# bounds.
+PEAK_FLOPS = 197e12    # bf16 MXU peak, FLOP/s
+HBM_BW = 819e9         # HBM bytes/s — bounds one codec pass over a bucket
+ICI_BW = 50e9          # per-link ICI bytes/s — bounds the wire
+
+
+def priors_from_codec_report(report: Dict[str, Any]) -> Dict[str, float]:
+    """Turn a ``benchmarks/roofline.py --codec`` report into measured
+    ``auto_*`` prior overrides (``dataclasses.replace(cfg, **priors)``).
+
+    The codec prior is the *achieved* streaming bandwidth of the fused
+    producer/consumer pass when the report measured one (falling back to
+    the modeled HBM bound); the link prior stays the ICI roofline (the
+    report has no collective timings — measured walls flow in through
+    the controller's probes instead).
+    """
+    codec_bps = float(report.get("achieved_codec_bytes_per_s")
+                      or report.get("hbm_bytes_per_s", HBM_BW))
+    link_bps = float(report.get("ici_bytes_per_s", ICI_BW))
+    return {"auto_codec_gbps": codec_bps * 8 / 1e9,
+            "auto_link_gbps": link_bps * 8 / 1e9}
+
 
 def fixed_wires() -> Tuple[str, ...]:
     """The controller's search space: every fixed strategy in the
@@ -67,18 +95,25 @@ def analytic_bucket_costs(plan: BucketPlan, cfg: CompressionConfig,
     analytic wire model and the ``auto_*`` bandwidth priors.
 
     ``link_bytes`` of the whole bucket-padded stream divided evenly over
-    its buckets (buckets are homogeneous by construction), plus a codec
-    term for the compressed wires (encode+peel modeled as a bandwidth
-    over the bucket's f32 bytes). Serial wire+codec model — the overlap
-    win is exactly what the measured probes capture instead.
+    its buckets (buckets are homogeneous by construction), plus a
+    per-wire codec-compute term (PR 7): the number of producer/consumer
+    *passes* the wire makes over the bucket's f32 stream bytes
+    (`repro.kernels.ops.wire_codec_passes` — 1+1 fused, 2-3+2-3
+    composed) over the codec bandwidth prior, scaled by each wire's
+    consumer share (the reduce-scatter wire peels only 1/W of the
+    stream per rank). Serial wire+codec model — the overlap win is
+    exactly what the measured probes capture instead.
     """
+    from repro.kernels.ops import wire_codec_passes  # late: jax-heavy
     n = plan.n_buckets * plan.bucket_elems
     acc = cfg.strategy_wire_bytes(n, workers,
                                   grad_bytes_per_elem=grad_bytes_per_elem)
     link_bw = cfg.auto_link_gbps * 1e9 / 8
     codec_bw = cfg.auto_codec_gbps * 1e9 / 8
-    t_codec = plan.bucket_elems * 4 / codec_bw
+    t_pass = plan.bucket_elems * 4 / codec_bw
     nb = plan.n_buckets
+    p = wire_codec_passes(cfg)
+    pq = wire_codec_passes(cfg, quantized=cfg.wire_dtype == "fxp32")
 
     def link_t(entry) -> float:
         return entry["link_bytes"] / nb / link_bw
@@ -86,9 +121,12 @@ def analytic_bucket_costs(plan: BucketPlan, cfg: CompressionConfig,
     rs = acc["compressed_rs_native"] or acc["compressed_rs_emulated"]
     return {
         "dense": link_t(acc["dense"]),
-        "compressed": link_t(acc["compressed"]) + t_codec,
-        "compressed_rs": link_t(rs) + t_codec,
-        "compressed_innet": link_t(acc["compressed_innet"]) + t_codec,
+        "compressed": link_t(acc["compressed"])
+        + (p["producer"] + p["consumer"]) * t_pass,
+        "compressed_rs": link_t(rs)
+        + (p["producer"] + p["consumer"] / workers) * t_pass,
+        "compressed_innet": link_t(acc["compressed_innet"])
+        + (pq["producer"] + pq["consumer"]) * t_pass,
     }
 
 
@@ -276,6 +314,13 @@ class AutoWireController:
 
     # -- reporting (schema-3 benchmark JSON) ---------------------------
 
+    def _codec_passes(self) -> Dict[str, int]:
+        """Stream-pass counts feeding the analytic codec term (diagnosable
+        from CI output: fused = 1/1, composed = 2-3 each way)."""
+        from repro.kernels.ops import wire_codec_passes  # late: jax-heavy
+        return wire_codec_passes(
+            self.cfg, quantized=self.cfg.wire_dtype == "fxp32")
+
     def decision_trace(self) -> Dict[str, Any]:
         """The controller's state for the benchmark JSON: per-group
         decisions of the current plan plus the cost inputs behind them."""
@@ -296,6 +341,7 @@ class AutoWireController:
                     key=lambda kv: (kv[0][0], kv[0][1] or 0))},
             "analytic_bucket_cost_s": {
                 w: round(v, 9) for w, v in self.analytic.items()},
+            "codec_passes": self._codec_passes(),
             "occupancy": None if occ is None else {
                 "min": round(min(occ), 4),
                 "max": round(max(occ), 4),

@@ -42,6 +42,20 @@ they all share now:
   with the MXU encode.  Every aggregator strategy drives its wire
   through this function; none rolls its own scan.
 
+  One-producer / one-consumer contract (PR 7): the ``encode`` callback
+  each strategy hands this driver makes exactly ONE producer-op pass
+  over its chunk's gradient slice
+  (``HomomorphicCompressor.compress_wire`` — the fused
+  sketch + bitmap-pack + maxabs kernel of ``kernels/sketch_wire.py`` on
+  fused-capable geometries), and the post-scan recovery makes exactly
+  ONE consumer-op pass per chunk (``recover`` — fused
+  unpack + optional fxp32 dequant + peel).  The quantize leg of the
+  fxp32 wire is the one op *between* the two passes, because its shared
+  exponents are a cross-worker ``pmax`` product — but it touches only
+  the Γ-compressed sketch, never the bucket stream.
+  ``benchmarks/roofline.py --codec`` counts these stream-sized passes
+  from the jaxpr and CI gates fused < composed.
+
 - :func:`zero1_gather_skip` — the static predicate for the ZeRO-1
   fast path: when every parameter leaf's per-rank optimizer slice lies
   inside that rank's recovered chunk slices, the reduce-scatter

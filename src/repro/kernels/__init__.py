@@ -1,11 +1,20 @@
 """Pallas TPU kernels for the paper's compute hot spots (§3.4):
-Count-Sketch encode and parallel-peeling decode. Validated in
-interpret mode against the pure-jnp oracles in ref.py."""
+Count-Sketch encode, parallel-peeling decode, and (PR 7) the fused
+wire-codec producer/consumer — one VMEM pass from gradients to wire
+payload and back. Validated in interpret mode against the pure-jnp
+oracles in ref.py."""
 
-from .ops import sketch_encode, sketch_peel
+from .ops import (sketch_encode, sketch_peel, encode_pack_quantize,
+                  dequant_peel_unpack, fused_wire_supported,
+                  wire_codec_passes)
 from .sketch_encode import sketch_encode_pallas
 from .sketch_peel import sketch_peel_pallas
+from .sketch_wire import (encode_pack_quantize_pallas,
+                          dequant_peel_unpack_pallas)
 from . import ref
 
-__all__ = ["sketch_encode", "sketch_peel", "sketch_encode_pallas",
-           "sketch_peel_pallas", "ref"]
+__all__ = ["sketch_encode", "sketch_peel", "encode_pack_quantize",
+           "dequant_peel_unpack", "fused_wire_supported",
+           "wire_codec_passes", "sketch_encode_pallas",
+           "sketch_peel_pallas", "encode_pack_quantize_pallas",
+           "dequant_peel_unpack_pallas", "ref"]

@@ -24,6 +24,8 @@ from repro.core.config import CompressionConfig
 from . import ref as ref_ops
 from .sketch_encode import sketch_encode_pallas
 from .sketch_peel import sketch_peel_pallas
+from .sketch_wire import (encode_pack_quantize_pallas,
+                          dequant_peel_unpack_pallas)
 
 
 def _on_tpu() -> bool:
@@ -55,6 +57,88 @@ def sketch_peel(sketch: jnp.ndarray, bits: jnp.ndarray,
         return sketch_peel_pallas(sketch, bits, block_ids, cfg,
                                   interpret=not _on_tpu())
     return ref_ops.sketch_peel_ref(sketch, bits, block_ids, cfg)
+
+
+def fused_wire_supported(cfg: CompressionConfig) -> bool:
+    """Whether the fused wire-codec ops cover this geometry.
+
+    The fused producer packs the bitmap *per block*, so the pack-word
+    boundary must coincide with the block boundary (``block_elems %
+    32 == 0`` — always true for default geometries, where
+    ``bucket_quantum = lcm(block_elems, 32)``), and only the exact
+    bitmap index is pack-fusable (Bloom needs a global scatter over all
+    coordinates, inherently cross-block).
+    """
+    return cfg.index == "bitmap" and cfg.block_elems % 32 == 0
+
+
+def encode_pack_quantize(xb: jnp.ndarray, block_ids: jnp.ndarray,
+                         cfg: CompressionConfig,
+                         exponents: jnp.ndarray | None = None,
+                         mantissa_bits: int | None = None):
+    """Fused wire producer: (nb, G, c) values + (nb,) ids ->
+    (sketch (nb, rows, c) f32|int32, words (nb, wpb) uint32,
+    maxabs (nb,) f32).
+
+    ONE pass over the gradient stream: sketch-encode, bitmap-pack and
+    per-block max-magnitude (the fxp32 exponent ingredient) in a single
+    grid pass, optionally shared-exponent int32 quantization too when
+    per-block ``exponents`` + ``mantissa_bits`` are given (exponents are
+    a collective product, so the aggregator usually quantizes the
+    already-Γ-compressed sketch after its pmax instead).
+    """
+    if (exponents is None) != (mantissa_bits is None):
+        raise ValueError("exponents and mantissa_bits must be given together")
+    if not fused_wire_supported(cfg):
+        raise ValueError(
+            f"fused wire codec unsupported for index={cfg.index!r}, "
+            f"block_elems={cfg.block_elems} (need bitmap and %32==0)")
+    if _want_pallas(cfg):
+        return encode_pack_quantize_pallas(
+            xb, block_ids, cfg, exponents=exponents,
+            mantissa_bits=mantissa_bits, interpret=not _on_tpu())
+    return ref_ops.encode_pack_quantize_ref(
+        xb, block_ids, cfg, exponents=exponents, mantissa_bits=mantissa_bits)
+
+
+def dequant_peel_unpack(sketch: jnp.ndarray, words: jnp.ndarray,
+                        block_ids: jnp.ndarray, cfg: CompressionConfig,
+                        exponents: jnp.ndarray | None = None,
+                        mantissa_bits: int | None = None):
+    """Fused wire consumer: (nb, rows, c) sketch + (nb, wpb) packed
+    words + (nb,) ids -> (values f32, residual int8), both (nb, G, c).
+
+    ONE pass over the aggregated wire payload: bitmap-unpack, optional
+    exponent-bitcast dequantization of the int32 fxp32 sketch, and the
+    full peeling loop in a single grid pass.
+    """
+    if (exponents is None) != (mantissa_bits is None):
+        raise ValueError("exponents and mantissa_bits must be given together")
+    if not fused_wire_supported(cfg):
+        raise ValueError(
+            f"fused wire codec unsupported for index={cfg.index!r}, "
+            f"block_elems={cfg.block_elems} (need bitmap and %32==0)")
+    if _want_pallas(cfg):
+        return dequant_peel_unpack_pallas(
+            sketch, words, block_ids, cfg, exponents=exponents,
+            mantissa_bits=mantissa_bits, interpret=not _on_tpu())
+    return ref_ops.dequant_peel_unpack_ref(
+        sketch, words, block_ids, cfg, exponents=exponents,
+        mantissa_bits=mantissa_bits)
+
+
+def wire_codec_passes(cfg: CompressionConfig, quantized: bool = False):
+    """Analytic pass counts over the bucket stream per wire direction.
+
+    Feeds `core/costmodel.py`'s codec-compute term and the roofline
+    `--codec` report. "Pass" = one full read of the stream-sized
+    operand: fused = 1 each way; composed = encode + pack (+ quantize)
+    on the producer, unpack + peel (+ dequant) on the consumer.
+    """
+    if fused_wire_supported(cfg) and _want_pallas(cfg):
+        return {"producer": 1, "consumer": 1}
+    extra = 1 if quantized else 0
+    return {"producer": 2 + extra, "consumer": 2 + extra}
 
 
 def sketch_estimate(sketch: jnp.ndarray, block_ids: jnp.ndarray,

@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from repro.core.config import CompressionConfig
 from repro.core.sketch import encode_blocks, estimate_blocks
 from repro.core.peeling import peel_blocks
+from repro.core import index as index_lib
+from repro.net.fixedpoint import pow2
 
 
 def sketch_encode_ref(xb: jnp.ndarray, block_ids: jnp.ndarray,
@@ -41,3 +43,49 @@ def sketch_estimate_ref(sketch: jnp.ndarray, block_ids: jnp.ndarray,
                         cfg: CompressionConfig) -> jnp.ndarray:
     """(nb, rows, c) -> (nb, G, c) median-of-3 estimate for every coord."""
     return estimate_blocks(sketch, block_ids, cfg)
+
+
+# ---- composed wire-codec references (PR 7) ----------------------------
+#
+# The fused kernels in `sketch_wire.py` are pinned bit-for-bit to these
+# compositions of the existing oracles: encode + pack_bits + (rint
+# quantize), and unpack_bits + (bitcast dequant) + peel. Each composed
+# function makes the 2-3 separate passes over the stream that the fused
+# kernel collapses to one — same math, different HBM traffic.
+
+
+def encode_pack_quantize_ref(xb: jnp.ndarray, block_ids: jnp.ndarray,
+                             cfg: CompressionConfig,
+                             exponents: jnp.ndarray | None = None,
+                             mantissa_bits: int | None = None):
+    """Composed producer: (nb, G, c) values + (nb,) ids ->
+    (sketch (nb, rows, c) f32|int32, words (nb, wpb) uint32,
+    maxabs (nb,) f32). Requires ``cfg.block_elems % 32 == 0``."""
+    nb = xb.shape[0]
+    wpb = cfg.block_elems // 32
+    sketch = encode_blocks(xb, block_ids, cfg)                # pass 1: encode
+    words = index_lib.pack_bits(
+        index_lib.bitmap_build(xb)).reshape(nb, wpb)          # pass 2: pack
+    maxabs = jnp.max(jnp.abs(sketch), axis=(1, 2))
+    if exponents is not None:                                 # pass 3: quantize
+        scale = pow2(int(mantissa_bits)
+                     - jnp.asarray(exponents, jnp.int32))
+        sketch = jnp.rint(sketch * scale[:, None, None]).astype(jnp.int32)
+    return sketch, words, maxabs
+
+
+def dequant_peel_unpack_ref(sketch: jnp.ndarray, words: jnp.ndarray,
+                            block_ids: jnp.ndarray, cfg: CompressionConfig,
+                            exponents: jnp.ndarray | None = None,
+                            mantissa_bits: int | None = None):
+    """Composed consumer: (nb, rows, c) sketch + (nb, wpb) words + (nb,)
+    ids -> (values (nb, G, c) f32, residual (nb, G, c) int8)."""
+    nb = sketch.shape[0]
+    bits = index_lib.unpack_bits(
+        words.reshape(-1), (nb, cfg.group, cfg.lanes))        # pass 1: unpack
+    if exponents is not None:                                 # pass 2: dequant
+        scale = pow2(jnp.asarray(exponents, jnp.int32)
+                     - int(mantissa_bits))
+        sketch = sketch.astype(jnp.float32) * scale[:, None, None]
+    r = peel_blocks(sketch, bits, block_ids, cfg)             # pass 3: peel
+    return r.values, r.residual.astype(jnp.int8)

@@ -61,13 +61,19 @@ def _plan_matrix(cfg: CompressionConfig) -> np.ndarray:
     return (onehot * signs_flat[None, :]).astype(np.float32)
 
 
-def _encode_kernel(ids_ref, plan_ref, x_ref, o_ref, *,
-                   cfg: CompressionConfig):
-    B = x_ref.shape[0]                    # blocks per grid cell (tile)
+def encode_tile(ids, plan, x, cfg: CompressionConfig):
+    """The in-kernel encode math for one tile: (B,) ids + (rows, G*3)
+    plan matrix + (B, G, c) values -> (B, rows, c) sketch.
+
+    Shared by :func:`_encode_kernel` and the fused wire-codec kernel in
+    :mod:`repro.kernels.sketch_wire` — ONE implementation of the tile
+    contraction, so the fused producer can never drift from the plain
+    encode (their bit-parity is structural, not test-luck).
+    """
+    B = x.shape[0]                        # blocks per grid cell (tile)
     G, c = cfg.group, cfg.lanes
-    ids = ids_ref[...][:, 0]                                         # (B,)
     rot = _rotations_for_block(ids, G, c, cfg.seed)                  # (B,G,3)
-    x = x_ref[...].astype(jnp.float32)                               # (B,G,c)
+    x = x.astype(jnp.float32)                                        # (B,G,c)
 
     # Batched lane rotation: out[m] = x[(m - rot) % c] for all (blk,i,j).
     lane = jnp.arange(c, dtype=jnp.int32)
@@ -78,10 +84,16 @@ def _encode_kernel(ids_ref, plan_ref, x_ref, o_ref, *,
     # Static-plan row scatter as one contraction over the G*3 axis.
     contrib = rolled.reshape(B, G * 3, c)
     acc = jax.lax.dot_general(
-        plan_ref[...], contrib,
+        plan, contrib,
         dimension_numbers=(((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32)                          # (R,B,c)
-    o_ref[...] = acc.transpose(1, 0, 2)
+    return acc.transpose(1, 0, 2)
+
+
+def _encode_kernel(ids_ref, plan_ref, x_ref, o_ref, *,
+                   cfg: CompressionConfig):
+    ids = ids_ref[...][:, 0]                                         # (B,)
+    o_ref[...] = encode_tile(ids, plan_ref[...], x_ref[...], cfg)
 
 
 def sketch_encode_pallas(xb: jnp.ndarray, block_ids: jnp.ndarray,

@@ -38,14 +38,19 @@ from repro.core import hashing
 from .sketch_encode import _rotations_for_block
 
 
-def _peel_kernel(ids_ref, rows_ref, signs_ref, y_ref, b_ref, xo_ref, ro_ref,
-                 *, cfg: CompressionConfig):
-    B = y_ref.shape[0]                    # blocks per grid cell (tile)
+def peel_tile(ids, rows_flat, signs, y, b, cfg: CompressionConfig):
+    """The in-kernel peel math for one tile: (B,) ids + (G*3,) row table
+    + (G, 3) signs + (B, rows, c) sketch + (B, G, c) bool bits ->
+    (values (B, G, c) f32, residual (B, G, c) bool).
+
+    Shared by :func:`_peel_kernel` and the fused wire-codec kernel in
+    :mod:`repro.kernels.sketch_wire` — ONE implementation of the peeling
+    loop, so the fused consumer can never drift from the plain peel.
+    """
+    B = y.shape[0]                        # blocks per grid cell (tile)
     G, R, c = cfg.group, cfg.rows, cfg.lanes
-    ids = ids_ref[...][:, 0]                                          # (B,)
     rot = _rotations_for_block(ids, G, c, cfg.seed)                   # (B,G,3)
-    rows_flat = rows_ref[:, 0]                                        # (G*3,)
-    sg = signs_ref[...][None, :, :, None]                             # (1,G,3,1)
+    sg = signs[None, :, :, None]                                      # (1,G,3,1)
 
     lane = jnp.arange(c, dtype=jnp.int32)
     fwd_idx = (lane[None, None, None, :] - rot[..., None]) % c        # to sketch
@@ -65,8 +70,7 @@ def _peel_kernel(ids_ref, rows_ref, signs_ref, y_ref, b_ref, xo_ref, ro_ref,
     def gather(t):     # (B,R,c) -> (B,G,3,c)
         return jnp.take(t, rows_flat, axis=1).reshape(B, G, 3, c)
 
-    y = y_ref[...].astype(jnp.float32)                                # (B,R,c)
-    b = b_ref[...] != 0                                               # (B,G,c)
+    y = y.astype(jnp.float32)                                         # (B,R,c)
     d = scatter(roll_fwd(b.astype(jnp.int32)))                        # (B,R,c)
     x = jnp.zeros((B, G, c), jnp.float32)
 
@@ -93,8 +97,16 @@ def _peel_kernel(ids_ref, rows_ref, signs_ref, y_ref, b_ref, xo_ref, ro_ref,
     med = (v0 + v1 + v2
            - jnp.maximum(jnp.maximum(v0, v1), v2)
            - jnp.minimum(jnp.minimum(v0, v1), v2))
-    xo_ref[...] = x + jnp.where(b, med, 0.0)
-    ro_ref[...] = b.astype(jnp.int8)
+    return x + jnp.where(b, med, 0.0), b
+
+
+def _peel_kernel(ids_ref, rows_ref, signs_ref, y_ref, b_ref, xo_ref, ro_ref,
+                 *, cfg: CompressionConfig):
+    ids = ids_ref[...][:, 0]                                          # (B,)
+    values, residual = peel_tile(ids, rows_ref[:, 0], signs_ref[...],
+                                 y_ref[...], b_ref[...] != 0, cfg)
+    xo_ref[...] = values
+    ro_ref[...] = residual.astype(jnp.int8)
 
 
 def sketch_peel_pallas(sketch: jnp.ndarray, bits: jnp.ndarray,

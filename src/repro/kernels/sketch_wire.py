@@ -1,0 +1,267 @@
+"""Fused Pallas wire-codec kernels: one VMEM pass per wire direction (PR 7).
+
+ROADMAP open item 3 (fusion half): the compressed hot path used to make
+separate passes over the bucket stream — sketch-encode, then bitmap-pack,
+then (fxp32) quantize on the send side; dequant, peel, residual-unpack on
+the receive side. Each pass re-reads the stream from HBM, and at the
+smoke-benchmark sizes that codec compute — not link bytes — dominates
+wall time (the regime "On the Utility of Gradient Compression" warns
+about, and the one THC's low-overhead codec discipline targets).
+
+This module fuses each trio into ONE `pallas_call` grid pass:
+
+- **producer** (`encode_pack_quantize_pallas`): gradient blocks HBM→VMEM
+  once; each grid cell runs the shared :func:`encode_tile` contraction,
+  packs the tile's non-zero bitmap into uint32 words *in VMEM*, reduces
+  the per-block max magnitude (the fxp32 exponent ingredient — a free
+  byproduct of the tile already being resident), and optionally applies
+  the shared-exponent int32 quantization before the sketch ever reaches
+  HBM. Wire payload out, gradients in, one pass.
+- **consumer** (`dequant_peel_unpack_pallas`): wire payload HBM→VMEM
+  once; each cell unpacks its bitmap words, optionally dequantizes the
+  int32 sketch by exponent-field bitcast (:func:`repro.net.fixedpoint.pow2`
+  — exact powers of two, never `exp2`), and runs the shared
+  :func:`peel_tile` loop to recovered values + int8 residual.
+
+Both kernels *reuse the exact tile cores* of the unfused kernels
+(`encode_tile` / `peel_tile`) and the exact word ordering of
+`core/index.pack_bits`, so bit-for-bit parity with the composed path is
+structural: there is one implementation of the math, fused and unfused
+paths differ only in how many times the stream crosses HBM.
+
+Packing constraint: the bitmap is packed per block, so the pack-word
+boundary must align with the block boundary — `block_elems % 32 == 0`
+(`repro.kernels.ops.fused_wire_supported`). `bucket_quantum =
+lcm(block_elems, 32)` makes default geometries satisfy this; the ops
+layer falls back to the composed reference otherwise.
+
+The fxp32 quantize leg takes *precomputed* exponents: deriving shared
+exponents needs a cross-worker `pmax`, a collective that cannot live
+inside a single-device kernel. The aggregator therefore runs the
+producer unquantized (emitting `maxabs`), pmaxes the 4 B/bucket exponent
+metadata, then quantizes the (stream-size/Γ) sketch — the *bucket
+stream* is still read exactly once. The quantized producer leg exists
+for known-exponent callers and parity tests; the dequant consumer leg is
+always fused (exponents ride the wire).
+
+VMEM adds over the unfused kernels are small: the packed words tile is
+`B * block_elems/32 * 4` bytes (1/32 of the x tile) and maxabs is
+`B * 4` bytes; budgets stay as documented in `sketch_encode.py` /
+`sketch_peel.py`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.config import CompressionConfig
+from repro.core import hashing
+from repro.net.fixedpoint import pow2
+from .sketch_encode import encode_tile, _plan_matrix
+from .sketch_peel import peel_tile
+
+
+def _pack_tile_bits(x, cfg: CompressionConfig):
+    """(B, G, c) values -> (B, wpb) uint32 packed non-zero bitmap.
+
+    Bit order matches :func:`repro.core.index.pack_bits` on the
+    flattened block exactly: word w, bit k covers flat element
+    ``w * 32 + k`` of the block — so per-block words, flattened across
+    blocks, are bit-identical to the global pack (requires
+    ``block_elems % 32 == 0``).
+    """
+    B = x.shape[0]
+    wpb = cfg.block_elems // 32
+    bits = (x != 0).reshape(B, wpb, 32).astype(jnp.uint32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(bits << shifts[None, None, :], axis=-1)
+
+
+def _unpack_tile_bits(words, cfg: CompressionConfig):
+    """(B, wpb) uint32 -> (B, G, c) bool — inverse of `_pack_tile_bits`."""
+    B = words.shape[0]
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (words[:, :, None] >> shifts[None, None, :]) & jnp.uint32(1)
+    return bits.reshape(B, cfg.group, cfg.lanes) != 0
+
+
+def _wire_encode_kernel(ids_ref, plan_ref, x_ref, sk_ref, w_ref, mx_ref, *,
+                        cfg: CompressionConfig):
+    ids = ids_ref[...][:, 0]                                          # (B,)
+    x = x_ref[...]
+    sk_ref[...] = encode_tile(ids, plan_ref[...], x, cfg)
+    w_ref[...] = _pack_tile_bits(x, cfg)
+    mx_ref[...] = jnp.max(jnp.abs(sk_ref[...]), axis=(1, 2))[:, None]
+
+
+def _wire_encode_q_kernel(ids_ref, plan_ref, x_ref, exp_ref,
+                          sk_ref, w_ref, mx_ref, *,
+                          cfg: CompressionConfig, mantissa_bits: int):
+    ids = ids_ref[...][:, 0]
+    x = x_ref[...]
+    acc = encode_tile(ids, plan_ref[...], x, cfg)                     # f32
+    w_ref[...] = _pack_tile_bits(x, cfg)
+    mx_ref[...] = jnp.max(jnp.abs(acc), axis=(1, 2))[:, None]
+    scale = pow2(mantissa_bits - exp_ref[...][:, 0])                  # (B,)
+    sk_ref[...] = jnp.rint(acc * scale[:, None, None]).astype(jnp.int32)
+
+
+def _wire_peel_kernel(ids_ref, rows_ref, signs_ref, y_ref, w_ref,
+                      xo_ref, ro_ref, *, cfg: CompressionConfig):
+    ids = ids_ref[...][:, 0]
+    b = _unpack_tile_bits(w_ref[...], cfg)
+    values, residual = peel_tile(ids, rows_ref[:, 0], signs_ref[...],
+                                 y_ref[...], b, cfg)
+    xo_ref[...] = values
+    ro_ref[...] = residual.astype(jnp.int8)
+
+
+def _wire_peel_dq_kernel(ids_ref, rows_ref, signs_ref, y_ref, w_ref, exp_ref,
+                         xo_ref, ro_ref, *,
+                         cfg: CompressionConfig, mantissa_bits: int):
+    ids = ids_ref[...][:, 0]
+    b = _unpack_tile_bits(w_ref[...], cfg)
+    scale = pow2(exp_ref[...][:, 0] - mantissa_bits)                  # (B,)
+    y = y_ref[...].astype(jnp.float32) * scale[:, None, None]
+    values, residual = peel_tile(ids, rows_ref[:, 0], signs_ref[...],
+                                 y, b, cfg)
+    xo_ref[...] = values
+    ro_ref[...] = residual.astype(jnp.int8)
+
+
+def _pad_blocks(arrays, pads1d, nb, padded):
+    """Zero-pad leading (block) dim from nb to padded."""
+    if padded == nb:
+        return list(arrays) + list(pads1d)
+    out = [jnp.pad(a, ((0, padded - nb),) + ((0, 0),) * (a.ndim - 1))
+           for a in arrays]
+    out += [jnp.pad(p, (0, padded - nb)) for p in pads1d]
+    return out
+
+
+def encode_pack_quantize_pallas(xb: jnp.ndarray, block_ids: jnp.ndarray,
+                                cfg: CompressionConfig,
+                                exponents: jnp.ndarray | None = None,
+                                mantissa_bits: int | None = None,
+                                interpret: bool = True):
+    """Fused producer: (nb, G, c) values + (nb,) ids ->
+    (sketch (nb, rows, c) f32|int32, words (nb, wpb) uint32,
+    maxabs (nb,) f32) in one grid pass.
+
+    With ``exponents`` (per-block int32) + ``mantissa_bits`` the sketch
+    leaves the kernel fxp32-quantized; ``maxabs`` is always the
+    *pre-quantize* f32 per-block max (the exponent ingredient).
+    """
+    nb = xb.shape[0]
+    quantize = exponents is not None
+    wpb = cfg.block_elems // 32
+    tile = max(1, min(cfg.encode_block_tile, nb))
+    padded = -(-nb // tile) * tile
+    if quantize:
+        # Padding exponent 0 only scales padded all-zero blocks: harmless.
+        xb, block_ids, exponents = _pad_blocks(
+            [xb], [block_ids, jnp.asarray(exponents, jnp.int32)], nb, padded)
+    else:
+        xb, block_ids = _pad_blocks([xb], [block_ids], nb, padded)
+    plan = jnp.asarray(_plan_matrix(cfg))
+    ids2d = block_ids.reshape(padded, 1).astype(jnp.int32)
+    in_specs = [
+        pl.BlockSpec((tile, 1), lambda i: (i, 0)),
+        pl.BlockSpec((cfg.rows, cfg.group * 3), lambda i: (0, 0)),
+        pl.BlockSpec((tile, cfg.group, cfg.lanes), lambda i: (i, 0, 0)),
+    ]
+    operands = [ids2d, plan, xb]
+    if quantize:
+        kern = functools.partial(_wire_encode_q_kernel, cfg=cfg,
+                                 mantissa_bits=int(mantissa_bits))
+        in_specs.append(pl.BlockSpec((tile, 1), lambda i: (i, 0)))
+        operands.append(exponents.reshape(padded, 1).astype(jnp.int32))
+        sk_dtype = jnp.int32
+    else:
+        kern = functools.partial(_wire_encode_kernel, cfg=cfg)
+        sk_dtype = jnp.float32
+    out = pl.pallas_call(
+        kern,
+        grid=(padded // tile,),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((tile, cfg.rows, cfg.lanes), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tile, wpb), lambda i: (i, 0)),
+            pl.BlockSpec((tile, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((padded, cfg.rows, cfg.lanes), sk_dtype),
+            jax.ShapeDtypeStruct((padded, wpb), jnp.uint32),
+            jax.ShapeDtypeStruct((padded, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(*operands)
+    sk, words, mx = (o[:nb] for o in out) if padded != nb else out
+    return sk, words, mx[:, 0]
+
+
+def dequant_peel_unpack_pallas(sketch: jnp.ndarray, words: jnp.ndarray,
+                               block_ids: jnp.ndarray,
+                               cfg: CompressionConfig,
+                               exponents: jnp.ndarray | None = None,
+                               mantissa_bits: int | None = None,
+                               interpret: bool = True):
+    """Fused consumer: (nb, rows, c) sketch + (nb, wpb) uint32 words +
+    (nb,) ids -> (values (nb, G, c) f32, residual (nb, G, c) int8) in
+    one grid pass. With ``exponents`` + ``mantissa_bits`` the int32
+    sketch is dequantized in-kernel before peeling.
+    """
+    nb = sketch.shape[0]
+    dequant = exponents is not None
+    wpb = cfg.block_elems // 32
+    tile = max(1, min(cfg.peel_block_tile, nb))
+    padded = -(-nb // tile) * tile
+    if dequant:
+        sketch, words, block_ids, exponents = _pad_blocks(
+            [sketch, words],
+            [block_ids, jnp.asarray(exponents, jnp.int32)], nb, padded)
+    else:
+        sketch, words, block_ids = _pad_blocks(
+            [sketch, words], [block_ids], nb, padded)
+    g3 = cfg.group * 3
+    rows_tbl = jnp.asarray(
+        hashing.batch_rows(cfg.group, cfg.rows, cfg.seed).reshape(g3, 1))
+    signs = jnp.asarray(hashing.batch_signs(cfg.group, cfg.seed))
+    ids2d = block_ids.reshape(padded, 1).astype(jnp.int32)
+    in_specs = [
+        pl.BlockSpec((tile, 1), lambda i: (i, 0)),
+        pl.BlockSpec((g3, 1), lambda i: (0, 0)),
+        pl.BlockSpec((cfg.group, 3), lambda i: (0, 0)),
+        pl.BlockSpec((tile, cfg.rows, cfg.lanes), lambda i: (i, 0, 0)),
+        pl.BlockSpec((tile, wpb), lambda i: (i, 0)),
+    ]
+    operands = [ids2d, rows_tbl, signs, sketch, words]
+    if dequant:
+        kern = functools.partial(_wire_peel_dq_kernel, cfg=cfg,
+                                 mantissa_bits=int(mantissa_bits))
+        in_specs.append(pl.BlockSpec((tile, 1), lambda i: (i, 0)))
+        operands.append(exponents.reshape(padded, 1).astype(jnp.int32))
+    else:
+        kern = functools.partial(_wire_peel_kernel, cfg=cfg)
+    out = pl.pallas_call(
+        kern,
+        grid=(padded // tile,),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((tile, cfg.group, cfg.lanes), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tile, cfg.group, cfg.lanes), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((padded, cfg.group, cfg.lanes), jnp.float32),
+            jax.ShapeDtypeStruct((padded, cfg.group, cfg.lanes), jnp.int8),
+        ],
+        interpret=interpret,
+    )(*operands)
+    if padded != nb:
+        out = [o[:nb] for o in out]
+    return tuple(out)

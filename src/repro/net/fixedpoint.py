@@ -110,6 +110,21 @@ class FixedPointWire:
 
     # ---- codec --------------------------------------------------------
 
+    def exponents_from_maxabs(self, maxabs: jnp.ndarray) -> jnp.ndarray:
+        """Exponents from precomputed per-bucket max magnitudes.
+
+        ``max`` is exact, so a max-of-maxes over any partition of a
+        bucket (e.g. the per-block ``maxabs`` the fused wire-codec
+        producer kernel emits as a byproduct) equals the direct bucket
+        max — this entry point lets the aggregator derive bit-identical
+        exponents without a second pass over the sketch.
+        """
+        maxabs = jnp.asarray(maxabs, jnp.float32)
+        _, e = jnp.frexp(maxabs)
+        e = jnp.where(maxabs == 0, jnp.int32(self.min_exponent),
+                      e.astype(jnp.int32))
+        return jnp.maximum(e, jnp.int32(self.min_exponent))
+
     def bucket_exponents(self, buckets: jnp.ndarray) -> jnp.ndarray:
         """Per-bucket exponent of this worker's slice: ``(nb, K) -> (nb,)``.
 
@@ -122,11 +137,8 @@ class FixedPointWire:
         bucket whose true global max is below 1.0. Aggregate across
         workers with an elementwise max before encoding.
         """
-        maxabs = jnp.max(jnp.abs(buckets.astype(jnp.float32)), axis=-1)
-        _, e = jnp.frexp(maxabs)
-        e = jnp.where(maxabs == 0, jnp.int32(self.min_exponent),
-                      e.astype(jnp.int32))
-        return jnp.maximum(e, jnp.int32(self.min_exponent))
+        return self.exponents_from_maxabs(
+            jnp.max(jnp.abs(buckets.astype(jnp.float32)), axis=-1))
 
     def shared_exponents(self, buckets: jnp.ndarray,
                          dp_axes: Sequence[str]) -> jnp.ndarray:

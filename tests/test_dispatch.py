@@ -322,3 +322,27 @@ def test_compressor_has_no_direct_backend_imports():
                    "from .sketch", "from .peeling"):
         assert needle not in src, f"compressor bypasses kernels.ops: {needle}"
     assert "from repro.kernels import ops" in src
+
+
+# The fused wire codec (PR 7): every compressed strategy now funnels
+# through ONE producer op before its collectives and ONE consumer op
+# after. "always" runs the fused Pallas kernels (interpret mode here);
+# "never" runs the composed jnp refs — 3 error-feedback steps must stay
+# bit-identical in outputs AND carried residuals, including the fxp32
+# innet wire whose dequant is folded into the fused consumer.
+@pytest.mark.parametrize("name,wire_dtype",
+                         [("compressed", "f32"), ("compressed_rs", "f32"),
+                          ("compressed_innet", "f32"),
+                          ("compressed_innet", "fxp32")])
+def test_fused_wire_parity_over_ef_steps(name, wire_dtype):
+    cfg_n = dataclasses.replace(AGG_BASE, use_pallas="never",
+                                wire_dtype=wire_dtype)
+    cfg_a = dataclasses.replace(AGG_BASE, use_pallas="always",
+                                wire_dtype=wire_dtype)
+    outs_n, res_n = _run_aggregator(cfg_n, name, steps=3)
+    outs_a, res_a = _run_aggregator(cfg_a, name, steps=3)
+    for step, (on, oa) in enumerate(zip(outs_n, outs_a)):
+        for k in on:
+            assert np.array_equal(on[k], oa[k]), (name, step, k)
+    for k in res_n:
+        assert np.array_equal(res_n[k], res_a[k]), (name, k)

@@ -115,3 +115,144 @@ def test_ops_dispatch_always():
     v_p, r_p = sketch_peel(want, xb != 0, ids, cfg)
     v_r, r_r = ref.sketch_peel_ref(want, xb != 0, ids, cfg)
     np.testing.assert_allclose(np.asarray(v_p), np.asarray(v_r), atol=1e-5)
+
+
+# ----------------------------------------------------------------------
+# Fused wire codec (PR 7): one-VMEM-pass encode+pack(+quantize) and
+# dequant+unpack+peel vs the composed reference ops. Values are dyadic
+# (sign * 2^e, |e| <= 2) so every floating-point sum along either
+# implementation's reduction order is exact — bitwise equality then
+# pins the math, not addition-order luck.
+# ----------------------------------------------------------------------
+import dataclasses
+
+from repro.kernels import (encode_pack_quantize_pallas,
+                           dequant_peel_unpack_pallas)
+from repro.kernels import ops as ops_lib
+from repro.net.fixedpoint import FixedPointWire
+
+
+def _dyadic_blocks(cfg, nb, frac, seed):
+    r = np.random.default_rng(seed)
+    n = nb * cfg.block_elems
+    x = np.zeros(n, np.float32)
+    k = max(1, int(n * frac))
+    idx = r.choice(n, size=k, replace=False)
+    x[idx] = (r.choice([-1.0, 1.0], size=k)
+              * np.exp2(r.integers(-2, 3, size=k))).astype(np.float32)
+    return x.reshape(nb, cfg.group, cfg.lanes)
+
+
+@pytest.mark.parametrize("cfg", CFGS, ids=[f"l{c.lanes}r{c.rows}g{c.group}"
+                                           for c in CFGS])
+@pytest.mark.parametrize("nb,etile,ptile",
+                         [(1, 4, 4), (5, 3, 2), (7, 4, 3)],
+                         ids=["single", "padded-5", "padded-7"])
+def test_fused_wire_matches_composed_bitwise(cfg, nb, etile, ptile):
+    """Fused producer/consumer vs composed refs, including padded last
+    grid tiles and a nonzero block-id offset (mid-stream bucket)."""
+    cfg = dataclasses.replace(cfg, rounds=10, encode_block_tile=etile,
+                              peel_block_tile=ptile)
+    xb = jnp.asarray(_dyadic_blocks(cfg, nb, 0.05, seed=nb + 3))
+    ids = jnp.arange(nb, dtype=jnp.int32) + 37
+    sk_p, w_p, mx_p = encode_pack_quantize_pallas(xb, ids, cfg,
+                                                  interpret=True)
+    sk_r, w_r, mx_r = ref.encode_pack_quantize_ref(xb, ids, cfg)
+    np.testing.assert_array_equal(np.asarray(sk_p), np.asarray(sk_r))
+    np.testing.assert_array_equal(np.asarray(w_p), np.asarray(w_r))
+    np.testing.assert_array_equal(np.asarray(mx_p), np.asarray(mx_r))
+    v_p, r_p = dequant_peel_unpack_pallas(sk_r, w_r, ids, cfg,
+                                          interpret=True)
+    v_r, r_r = ref.dequant_peel_unpack_ref(sk_r, w_r, ids, cfg)
+    np.testing.assert_array_equal(np.asarray(v_p), np.asarray(v_r))
+    np.testing.assert_array_equal(np.asarray(r_p), np.asarray(r_r))
+    # lossless regime: the composed consumer reproduces the input
+    np.testing.assert_array_equal(np.asarray(v_r), np.asarray(xb))
+
+
+def test_fused_maxabs_matches_bucket_exponents():
+    """The producer's streamed per-block max-|sketch| must yield the
+    exact same fxp32 exponents as re-scanning the materialized sketch
+    (max is exact, so max-of-block-maxes == bucket max)."""
+    cfg = dataclasses.replace(CFGS[0], rounds=10)
+    wire = FixedPointWire(workers=2)
+    xb = jnp.asarray(_dyadic_blocks(cfg, 4, 0.05, seed=11))
+    ids = jnp.arange(4, dtype=jnp.int32)
+    sk, _, mx = ref.encode_pack_quantize_ref(xb, ids, cfg)
+    e_stream = wire.exponents_from_maxabs(mx)
+    e_rescan = wire.bucket_exponents(sk.reshape(4, -1))
+    np.testing.assert_array_equal(np.asarray(e_stream),
+                                  np.asarray(e_rescan))
+
+
+@pytest.mark.parametrize("backend", ["pallas", "ref"])
+def test_fused_quantized_wire_matches_roundtrip_reference(backend):
+    """fxp32 leg: two workers quantize through the fused producer
+    against shared exponents, integer-sum, and the fused consumer's
+    folded dequant must peel to exactly what FixedPointWire's
+    documented roundtrip_reference + composed peel produce."""
+    cfg = dataclasses.replace(CFGS[0], rounds=10, encode_block_tile=3,
+                              peel_block_tile=2)
+    nb, W = 5, 2
+    wire = FixedPointWire(workers=W)
+    M = wire.mantissa_bits
+    ids = jnp.arange(nb, dtype=jnp.int32)
+    xbs = [jnp.asarray(_dyadic_blocks(cfg, nb, 0.04, seed=s + 5))
+           for s in range(W)]
+    f32 = [ref.encode_pack_quantize_ref(xb, ids, cfg) for xb in xbs]
+    e = wire.exponents_from_maxabs(jnp.maximum(f32[0][2], f32[1][2]))
+
+    def produce(xb):
+        if backend == "pallas":
+            return encode_pack_quantize_pallas(
+                xb, ids, cfg, exponents=e, mantissa_bits=M, interpret=True)
+        return ref.encode_pack_quantize_ref(xb, ids, cfg, exponents=e,
+                                            mantissa_bits=M)
+
+    outs = [produce(xb) for xb in xbs]
+    for (q, _, _), xb in zip(outs, xbs):
+        assert q.dtype == jnp.int32
+        want_q = wire.encode(
+            ref.sketch_encode_ref(xb, ids, cfg).reshape(nb, -1), e)
+        np.testing.assert_array_equal(np.asarray(q.reshape(nb, -1)),
+                                      np.asarray(want_q))
+    q_sum = outs[0][0] + outs[1][0]
+    words = outs[0][1] | outs[1][1]
+    if backend == "pallas":
+        v, r = dequant_peel_unpack_pallas(q_sum, words, ids, cfg,
+                                          exponents=e, mantissa_bits=M,
+                                          interpret=True)
+    else:
+        v, r = ref.dequant_peel_unpack_ref(q_sum, words, ids, cfg,
+                                           exponents=e, mantissa_bits=M)
+    rt = wire.roundtrip_reference(
+        [sk.reshape(nb, -1) for sk, _, _ in f32]).reshape(f32[0][0].shape)
+    bits = (xbs[0] != 0) | (xbs[1] != 0)
+    v_want, r_want = ref.sketch_peel_ref(rt, bits, ids, cfg)
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(v_want))
+    np.testing.assert_array_equal(np.asarray(r), np.asarray(r_want))
+    # dyadic values well inside the mantissa budget: exact recovery
+    np.testing.assert_array_equal(np.asarray(v),
+                                  np.asarray(xbs[0] + xbs[1]))
+
+
+def test_fused_wire_dispatch_guards():
+    cfg = CFGS[0]
+    xb = jnp.asarray(_dyadic_blocks(cfg, 1, 0.02, seed=1))
+    ids = jnp.arange(1, dtype=jnp.int32)
+    with pytest.raises(ValueError, match="together"):
+        ops_lib.encode_pack_quantize(xb, ids, cfg,
+                                     exponents=jnp.zeros(1, jnp.int32))
+    bloom = dataclasses.replace(cfg, index="bloom")
+    assert not ops_lib.fused_wire_supported(bloom)
+    with pytest.raises(ValueError, match="unsupported"):
+        ops_lib.encode_pack_quantize(xb, ids, bloom)
+    fused = ops_lib.wire_codec_passes(
+        dataclasses.replace(cfg, use_pallas="always"))
+    composed = ops_lib.wire_codec_passes(
+        dataclasses.replace(cfg, use_pallas="never"))
+    composed_q = ops_lib.wire_codec_passes(
+        dataclasses.replace(cfg, use_pallas="never"), quantized=True)
+    assert fused == {"producer": 1, "consumer": 1}
+    assert composed["producer"] > 1 and composed["consumer"] > 1
+    assert composed_q["producer"] == composed["producer"] + 1

@@ -1,0 +1,60 @@
+"""The codec roofline (PR 7): the jaxpr stream-pass counter must report
+exactly one producer and one consumer pass for the fused wire kernels
+and strictly more for the composed refs — the same gate CI enforces —
+and the report must feed the cost model's auto priors."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import costmodel
+from repro.core.config import CompressionConfig
+
+import benchmarks.roofline as roof
+
+
+@pytest.mark.parametrize("wire_dtype", ["f32", "fxp32"])
+def test_codec_report_pass_counts(wire_dtype):
+    rep = roof.codec_report(n_buckets=2, iters=1, wire_dtype=wire_dtype)
+    fused, composed = rep["passes"]["fused"], rep["passes"]["composed"]
+    assert fused == {"producer": 1, "consumer": 1}
+    assert composed["producer"] > fused["producer"]
+    assert composed["consumer"] > fused["consumer"]
+    # the quantize/dequant stages cost the composed legs an extra pass
+    if wire_dtype == "fxp32":
+        f32 = roof.codec_report(n_buckets=2, iters=1, wire_dtype="f32")
+        assert composed["producer"] >= f32["passes"]["composed"]["producer"]
+    assert rep["modeled_codec_s_per_bucket"]["fused"] < \
+        rep["modeled_codec_s_per_bucket"]["composed"]
+    # composed leg is wall-timed off-TPU; bandwidth fraction is positive
+    assert rep["achieved_codec_bytes_per_s"] is None or \
+        rep["achieved_codec_bytes_per_s"] > 0
+
+
+def test_codec_report_feeds_costmodel_priors():
+    rep = roof.codec_report(n_buckets=2, iters=1)
+    pri = costmodel.priors_from_codec_report(rep)
+    assert set(pri) == {"auto_codec_gbps", "auto_link_gbps"}
+    assert pri["auto_link_gbps"] == pytest.approx(
+        costmodel.ICI_BW * 8 / 1e9)
+    assert pri["auto_codec_gbps"] > 0
+    assert rep["auto_priors"] == pri
+    assert roof.codec_table(rep)  # renders without error
+
+
+def test_count_stream_passes_skips_layout_and_recurses_wrappers():
+    n = 4096
+
+    def body(x):
+        y = (x * 2.0).reshape(n // 2, 2)       # 1 pass + layout reshape
+        return jax.jit(lambda r: r + 1.0)(y)   # 1 pass inside pjit wrapper
+
+    jaxpr = jax.make_jaxpr(body)(jnp.zeros(n, jnp.float32))
+    got = roof.count_stream_passes(jaxpr.jaxpr, n)
+    assert got == 2
+
+    def layout_only(x):
+        return x.reshape(n // 2, 2).astype(jnp.float32)
+
+    jaxpr2 = jax.make_jaxpr(layout_only)(jnp.zeros(n, jnp.float32))
+    assert roof.count_stream_passes(jaxpr2.jaxpr, n) == 0
