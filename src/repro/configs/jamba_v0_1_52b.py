@@ -18,14 +18,15 @@ _MODEL = ModelConfig(
     n_heads=32, n_kv_heads=8, d_ff=14336, vocab=65536,
     attn_period=8, attn_offset=4,
     moe=MoEConfig(num_experts=16, top_k=2, shared_experts=0,
-                  expert_d_ff=14336),
+                  expert_d_ff=14336, every_k_layers=2),
     ssm=SSMConfig(d_state=16, expand=2, head_dim=64, d_conv=4, chunk=256),
     supports_long_context=True)
 
 _SMOKE = dataclasses.replace(
     _MODEL, n_layers=4, d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
     vocab=512, attn_period=2, attn_offset=1,
-    moe=MoEConfig(num_experts=4, top_k=2, shared_experts=0, expert_d_ff=256),
+    moe=MoEConfig(num_experts=4, top_k=2, shared_experts=0, expert_d_ff=256,
+                  every_k_layers=2),
     ssm=SSMConfig(d_state=16, expand=2, head_dim=16, d_conv=4, chunk=32),
     dtype="float32", q_block=64)
 

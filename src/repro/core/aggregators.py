@@ -80,18 +80,20 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+import functools
+
 from repro import compat
 from repro.net.fixedpoint import FixedPointWire
 from repro.net.topology import make_topology, tree_all_reduce
 from .config import CompressionConfig
 from .compressor import HomomorphicCompressor, CompressedLeaf
-from .bucketing import BucketPlan, make_bucket_plan
-from .collectives import (AggregationState, dense_all_reduce,
-                          gather_chunk_slices, linear_rank, or_allreduce,
-                          or_reduce_scatter)
-from .streams import (StreamPlan, make_stream_plan, stream_schedule,
-                      zero1_gather_skip)
-from .wireplan import WIRES, WirePlan, uniform_plan
+from .bucketing import BucketPlan, make_bucket_plan, make_dest_bucket_plans
+from .collectives import (AggregationState, alltoall_lane_sum,
+                          dense_all_reduce, gather_chunk_slices, linear_rank,
+                          or_allreduce, or_reduce_scatter, sketch_all_to_all)
+from .streams import (StreamPlan, make_alltoall_stream_plan, make_stream_plan,
+                      stream_schedule, zero1_gather_skip)
+from .wireplan import WIRES, WirePlan, pattern_wires, uniform_plan
 from . import topk as topk_lib
 
 
@@ -961,6 +963,216 @@ class WirePlannedAggregator(CompressedAggregator):
 
 
 # ----------------------------------------------------------------------
+# Expert-parallel all-to-all exchanges (the permute pattern, PR 8)
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DenseAllToAllExchange:
+    """Plain expert-parallel all-to-all over the shared bucket grid —
+    the parity baseline for the compressed exchange.
+
+    Unlike the aggregators (which build their own nested regions), an
+    exchange is a plain callable used *inside* the model's manual
+    region, where the EP axes are already bound: MoE dispatch/combine
+    happens mid-forward, not at the gradient boundary.  Input: a pytree
+    whose leaves carry a leading destination axis ``(W, ...)`` — lane
+    ``d`` is this rank's payload for EP rank ``d`` (rank-major,
+    :func:`~repro.core.collectives.linear_rank` order).  Output: the
+    merged slice pytree ``sum_s payload_s[this_rank]`` (leaf shapes
+    minus the lane axis) — the homomorphic combine lands at the
+    receiving expert, never at a barrier.
+
+    This baseline packs every lane into one per-destination
+    :class:`~repro.core.bucketing.BucketPlan` grid (identical padding to
+    the compressed wire, so the two are bit-comparable), ships the
+    packed f32 stack over the permute lanes
+    (:func:`~repro.core.collectives.alltoall_lane_sum`) and unpacks the
+    merged slice.
+    """
+
+    wire = "dense"          # the pattern_wires("alltoall") entry executed
+    pattern = "alltoall"
+
+    cfg: CompressionConfig
+    mesh: Any
+    ep_axes: Tuple[str, ...]
+    # The axis set the caller's shard_map takes manual — same role as
+    # CompressedAggregator.outer_manual: on 0.4.x the native ppermute
+    # lanes need a full-manual caller.
+    outer_manual: Any = None
+
+    @property
+    def workers(self) -> int:
+        W = 1
+        for ax in self.ep_axes:
+            W *= self.mesh.shape[ax]
+        return W
+
+    def _full_manual(self) -> bool:
+        return (self.outer_manual is not None
+                and compat.full_manual_region(self.outer_manual, self.mesh))
+
+    def _use_ppermute(self) -> bool:
+        """Native permute lanes: single EP axis (ppermute takes one axis
+        name) and either new-JAX partial-auto ppermute or a full-manual
+        caller — the same compat gate as the RS wire."""
+        if len(self.ep_axes) != 1:
+            return False
+        return compat.SUPPORTS_PARTIAL_AUTO_PPERMUTE or self._full_manual()
+
+    def _ep_idx(self):
+        return {ax: jax.lax.axis_index(ax) for ax in self.ep_axes}
+
+    def _plan(self, payload) -> BucketPlan:
+        return make_dest_bucket_plans(payload, self.cfg,
+                                      n_dests=self.workers)[0]
+
+    def _pack(self, payload, plan: BucketPlan) -> jnp.ndarray:
+        """(W, ...) lane pytree -> (W, n_buckets, E) packed f32 stack."""
+        return jnp.stack([
+            plan.pack(jax.tree.map(lambda l: l[d], payload))
+            for d in range(self.workers)])
+
+    def __call__(self, payload):
+        plan = self._plan(payload)
+        stack = self._pack(payload, plan)
+        merged = alltoall_lane_sum(
+            stack, tuple(self.ep_axes), axis_indices=self._ep_idx(),
+            use_ppermute=self._use_ppermute(), combine="add")
+        return plan.unpack(merged)
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressedAllToAllExchange(DenseAllToAllExchange):
+    """Compressed expert-parallel all-to-all: the first permute-pattern
+    wire (PR 8).
+
+    Each chunk of the per-destination bucket grid encodes in ONE
+    producer pass (:meth:`HomomorphicCompressor.exchange_wire` — all
+    ``W`` lanes in a single fused grid, chunk-major block ids), ships
+    sketch + bitmap lanes over :func:`sketch_all_to_all` (W-1 ppermutes
+    native, psum-emulated under the RS wire's compat gate), and the
+    receiving rank recovers its merged lane in ONE consumer pass at the
+    lane's global block offset — the PR 7 one-producer/one-consumer
+    contract on the permute pattern.  The sketch add / bitmap OR on the
+    wire IS the combine: what arrives is the compressed form of
+    ``sum_s payload_s[this_rank]``, recovered without any rank ever
+    holding another rank's raw payload.
+
+    ``cfg.overlap`` / ``cfg.stream_chunks`` drive the lane chunks
+    through the shared double-buffered
+    :func:`~repro.core.streams.stream_schedule` (the chunk count must
+    divide the per-destination bucket run; see
+    :func:`~repro.core.streams.make_alltoall_stream_plan`), so chunk
+    ``i``'s permutes hide chunk ``i+1``'s encode exactly like the
+    all-reduce wires.  Bit-for-bit equal to
+    :class:`DenseAllToAllExchange` on the same payloads in the
+    exact-recovery regime (pinned by ``test_dispatch.py`` and the
+    collectives driver).
+    """
+
+    wire = "compressed"
+
+    def __call__(self, payload):
+        cfg = self.cfg
+        if cfg.index != "bitmap":
+            raise ValueError(
+                "the all-to-all exchange requires index='bitmap' (a "
+                "Bloom filter hashes global coordinates and cannot be "
+                "sliced per destination lane)")
+        comp = HomomorphicCompressor(cfg)
+        W = self.workers
+        plan = self._plan(payload)
+        stack = self._pack(payload, plan)          # (W, nb, E)
+        splan = make_alltoall_stream_plan(plan, cfg, lanes=W)
+        ep_idx = self._ep_idx()
+        rank = linear_rank(self.ep_axes, ep_idx)
+        use_pp = self._use_ppermute()
+
+        def enc(i, chunk):                          # chunk: (W, cb, E)
+            leaf, _ = comp.exchange_wire(
+                chunk, block_offset=splan.chunk_start_block(i))
+            return leaf.sketch, leaf.index_words
+
+        def red(wire_payload):
+            sk, words = wire_payload
+            return sketch_all_to_all(sk, words, tuple(self.ep_axes),
+                                     axis_indices=ep_idx,
+                                     use_ppermute=use_pp)
+
+        sks, ws = stream_schedule(splan.chunk_view(stack), enc, red)
+        # sks (n_chunks, lane_blocks, rows, lanes) / ws (n_chunks, w):
+        # this rank's merged lane per chunk. Peel each at the lane's
+        # global block offset — same hash ids every source encoded it
+        # under.
+
+        def peel(args):
+            j, sk_j, w_j = args
+            return comp.recover(
+                CompressedLeaf(sketch=sk_j, index_words=w_j),
+                splan.chunk_elems,
+                block_offset=splan.lane_start_block(j, rank))
+
+        idx = jnp.arange(splan.n_chunks, dtype=jnp.int32)
+        rec = jax.lax.map(peel, (idx, sks, ws))    # (n_chunks, chunk_elems)
+        merged = rec.reshape(-1)[:plan.padded]
+        return plan.unpack(merged.reshape(plan.n_buckets, plan.bucket_elems))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _exchange_vjp(exchange, payload):
+    """Differentiable facade over an exchange executor.
+
+    The exchange is *linear* — ``out_r = sum_s payload_s[r]`` — but the
+    compressed path's peeling ``while_loop`` is not reverse-
+    differentiable, so we install the exact linear transpose by hand:
+    ``d payload_s[d] = d out_d`` (the cotangent each destination rank
+    holds), i.e. an ``all_gather`` of the output cotangent over the EP
+    axes back onto the lane axis.  Applied to both exchanges so the
+    dense baseline and the compressed wire have identical gradient
+    semantics.
+    """
+    return exchange(payload)
+
+
+def _exchange_vjp_fwd(exchange, payload):
+    return exchange(payload), None
+
+
+def _exchange_vjp_bwd(exchange, _, g):
+    axes = tuple(exchange.ep_axes)
+    ct = jax.tree.map(
+        lambda l: jax.lax.all_gather(l, axes, axis=0, tiled=False), g)
+    return (ct,)
+
+
+_exchange_vjp.defvjp(_exchange_vjp_fwd, _exchange_vjp_bwd)
+
+
+@dataclasses.dataclass(frozen=True)
+class _GradExchange:
+    """What :func:`make_exchange` hands the model: the executor wrapped
+    with its linear VJP, surface attributes passed through."""
+
+    exchange: Any
+
+    @property
+    def workers(self) -> int:
+        return self.exchange.workers
+
+    @property
+    def ep_axes(self) -> Tuple[str, ...]:
+        return self.exchange.ep_axes
+
+    @property
+    def wire(self) -> str:
+        return self.exchange.wire
+
+    def __call__(self, payload):
+        return _exchange_vjp(self.exchange, payload)
+
+
+# ----------------------------------------------------------------------
 # Registry
 # ----------------------------------------------------------------------
 
@@ -978,6 +1190,19 @@ AGGREGATORS = {
 assert set(WIRES) == set(AGGREGATORS) - {"auto"}, (
     f"wireplan.WIRES {WIRES} out of sync with AGGREGATORS "
     f"{sorted(AGGREGATORS)}")
+
+# The permute-pattern executors (PR 8), keyed by the same wire names the
+# plan layer validates for pattern='alltoall'. Deliberately a separate
+# registry: exchanges are in-model callables (payload -> merged slice),
+# not gradient aggregators, and `auto`/`fixed_wires` must not see them.
+EXCHANGES = {
+    "dense": DenseAllToAllExchange,
+    "compressed": CompressedAllToAllExchange,
+}
+
+assert set(EXCHANGES) == set(pattern_wires("alltoall")), (
+    f"wireplan alltoall wires {pattern_wires('alltoall')} out of sync "
+    f"with EXCHANGES {sorted(EXCHANGES)}")
 
 
 def make_aggregator(name: str, cfg: CompressionConfig, mesh,
@@ -1009,3 +1234,25 @@ def make_aggregator(name: str, cfg: CompressionConfig, mesh,
                else tuple(outer_manual),
                zero1_dims=None if zero1_dims is None else tuple(zero1_dims),
                wire_plan=wire_plan)
+
+
+def make_exchange(name: str, cfg: CompressionConfig, mesh,
+                  ep_axes: Sequence[str], outer_manual=None):
+    """Build the named all-to-all exchange (see :data:`EXCHANGES`).
+
+    Returns a differentiable callable for use *inside* a manual region
+    where ``ep_axes`` are bound: ``(W, ...)`` lane pytree -> merged
+    slice pytree (``sum_s payload_s[this_rank]``), with ``.workers`` /
+    ``.ep_axes`` / ``.wire`` exposed for the caller's geometry checks.
+    ``outer_manual`` as in :func:`make_aggregator`.
+    """
+    if isinstance(ep_axes, str):
+        ep_axes = (ep_axes,)
+    try:
+        cls = EXCHANGES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown exchange {name!r}; have {sorted(EXCHANGES)}")
+    return _GradExchange(exchange=cls(
+        cfg=cfg, mesh=mesh, ep_axes=tuple(ep_axes),
+        outer_manual=None if outer_manual is None else tuple(outer_manual)))

@@ -180,6 +180,41 @@ class BucketPlan:
                 for segs in self.bucket_segments]
 
 
+def make_dest_bucket_plans(payload: Any, cfg: CompressionConfig,
+                           n_dests: int = None) -> Tuple[BucketPlan, ...]:
+    """Per-destination bucket plans for the all-to-all pattern (PR 8).
+
+    ``payload`` is a pytree whose leaves carry a leading *destination*
+    axis (one slice per destination EP rank).  Returns one
+    :class:`BucketPlan` per destination, built over the per-destination
+    slice shapes, all sharing one ``(n_buckets, bucket_elems)`` grid
+    aligned to sketch blocks / bitmap words exactly like today's
+    buckets.  The permute wire ships a single stacked
+    ``(W, n_buckets, ...)`` payload — one ppermute lane per destination
+    — so the lane geometry must be uniform; a ragged destination axis
+    is rejected.
+    """
+    leaves = jax.tree.leaves(payload)
+    if not leaves:
+        raise ValueError("empty all-to-all payload")
+    dests = {int(l.shape[0]) for l in leaves}
+    if len(dests) != 1:
+        raise ValueError(
+            "all-to-all payload leaves disagree on the destination axis "
+            f"(leading dim): {sorted(dests)}")
+    W = dests.pop()
+    if n_dests is not None and n_dests != W:
+        raise ValueError(
+            f"payload carries {W} destination slices but the exchange "
+            f"has {n_dests} destination ranks")
+    slice0 = jax.tree.map(lambda l: l[0], payload)
+    plan = make_bucket_plan(slice0, cfg)
+    # identical geometry per destination: the slices are same-shaped by
+    # construction (one leading-axis row each), so one frozen plan
+    # serves every lane
+    return (plan,) * W
+
+
 def make_bucket_plan(grads: Any, cfg: CompressionConfig,
                      shapes: Any = None) -> BucketPlan:
     """Build the static plan from a pytree (or from a same-structured

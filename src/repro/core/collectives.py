@@ -364,6 +364,102 @@ def gather_chunk_slices(local: jnp.ndarray, axis_names: Sequence[str],
 
 
 # ----------------------------------------------------------------------
+# All-to-all lane merge (the permute pattern, PR 8)
+# ----------------------------------------------------------------------
+
+def alltoall_lane_sum(x: jnp.ndarray, axis_names: Sequence[str],
+                       axis_indices: Optional[dict] = None,
+                       use_ppermute: Optional[bool] = None,
+                       combine: str = "add") -> jnp.ndarray:
+    """Merge stacked all-to-all lanes: rank ``r`` receives
+    ``combine_s x_s[r]`` over all source ranks ``s``.
+
+    ``x``: ``(W, ...)`` — lane ``d`` is this rank's payload destined for
+    rank ``d``, rank-major over ``axis_names`` (:func:`linear_rank`
+    order).  The merge at the receiving rank IS the homomorphic
+    aggregation: the sum of sketches (``combine="add"``) / OR of bitmaps
+    (``combine="or"``) of every source's payload for this rank.
+
+    Native wire: ``W - 1`` ppermutes — offset ``k`` ships lane
+    ``(i + k) % W`` from every source ``i`` to rank ``(i + k) % W``, so
+    each rank sends/receives ``(W-1)/W`` of its stacked payload (the
+    all-to-all wire model in ``CompressionConfig.strategy_wire_bytes``).
+    Single manual axis only (ppermute takes one axis name).
+
+    Emulation (0.4.x partial-auto, or multi-axis EP): reduce the whole
+    ``(W, ...)`` stack — psum for ``add``, the psum-based OR for ``or``
+    — then slice this rank's lane.  Correct, but ships the ring
+    AllReduce volume (and 32x on the bitmap), the same compat cost as
+    :func:`or_reduce_scatter`'s fallback.
+    """
+    if isinstance(axis_names, str):
+        axis_names = (axis_names,)
+    axis_names = tuple(axis_names)
+    _check_axis_indices(axis_names, axis_indices)
+    if combine not in ("add", "or"):
+        raise ValueError(f"combine must be 'add' or 'or', got {combine!r}")
+    W = 1
+    for ax in axis_names:
+        W *= compat.axis_size(ax)
+    if x.shape[0] != W:
+        raise ValueError(
+            f"all-to-all payload has {x.shape[0]} lanes but the axis "
+            f"tuple {tuple(axis_names)} has {W} ranks")
+    if W == 1:
+        return x[0]
+    if use_ppermute is None:
+        use_ppermute = compat.SUPPORTS_PARTIAL_AUTO_PPERMUTE
+    if use_ppermute and len(axis_names) == 1:
+        ax = axis_names[0]
+        idx = axis_indices[ax] if axis_indices else jax.lax.axis_index(ax)
+        out = jax.lax.dynamic_index_in_dim(x, idx, 0, keepdims=False)
+        for k in range(1, W):
+            perm = [(i, (i + k) % W) for i in range(W)]
+            send = jax.lax.dynamic_index_in_dim(x, (idx + k) % W, 0,
+                                                keepdims=False)
+            recv = jax.lax.ppermute(send, ax, perm)
+            out = (out | recv) if combine == "or" else (out + recv)
+        return out
+    if combine == "or":
+        full = _or_allreduce_psum(x, axis_names)
+    else:
+        full = jax.lax.psum(x, axis_names)
+    rank = linear_rank(axis_names, axis_indices)
+    return jax.lax.dynamic_index_in_dim(full, rank, 0, keepdims=False)
+
+
+def sketch_all_to_all(sketches: jnp.ndarray, words: jnp.ndarray,
+                      axis_names: Sequence[str],
+                      axis_indices: Optional[dict] = None,
+                      use_ppermute: Optional[bool] = None):
+    """Compressed expert-parallel all-to-all: ship per-destination sketch
+    lanes over the permute wire and merge them homomorphically at the
+    receiving rank (PR 8).
+
+    ``sketches``: ``(W, *sketch_shape)`` float lanes — lane ``d`` is the
+    sketch of this rank's payload destined for rank ``d``.
+    ``words``: ``(W, n_words)`` uint32 bitmap lanes, ditto.
+
+    Returns ``(sketch, words)`` — this rank's merged lane: the *sum* of
+    every source's sketch for it and the *OR* of their bitmaps, i.e.
+    exactly the compressed form of ``sum_s payload_s[this_rank]``.  The
+    merge happens on the wire (ppermute-accumulate) — there is no
+    barrier and no full gather, the ScaleCom/THC point that the
+    homomorphic combine must land at the receiving expert.
+
+    ``use_ppermute``: as in :func:`or_reduce_scatter` — ``None`` follows
+    ``compat.SUPPORTS_PARTIAL_AUTO_PPERMUTE``; full-manual callers on
+    0.4.x should pass True.  The native path needs a single manual axis;
+    multi-axis EP always takes the psum-emulation fallback.
+    """
+    sk = alltoall_lane_sum(sketches, axis_names, axis_indices=axis_indices,
+                            use_ppermute=use_ppermute, combine="add")
+    wd = alltoall_lane_sum(words, axis_names, axis_indices=axis_indices,
+                            use_ppermute=use_ppermute, combine="or")
+    return sk, wd
+
+
+# ----------------------------------------------------------------------
 # Dense baseline (the "NCCL AllReduce" arm of the paper's evaluation)
 # ----------------------------------------------------------------------
 

@@ -126,6 +126,43 @@ class HomomorphicCompressor:
         """Wire payload only — see :meth:`compress_wire`."""
         return self.compress_wire(x, block_offset=block_offset)[0]
 
+    def exchange_wire(self, lane_buckets: jnp.ndarray, block_offset=0
+                      ) -> Tuple[CompressedLeaf, jnp.ndarray]:
+        """One producer pass for the permute-pattern wire (PR 8).
+
+        ``lane_buckets`` is one chunk of the all-to-all payload:
+        ``(lanes, chunk_buckets, bucket_elems)`` — one bucket slab per
+        destination lane, laid out chunk-major so the whole stack is a
+        single *contiguous* block range starting at ``block_offset``.
+        That keeps the PR 7 one-producer contract: the entire chunk —
+        every lane — encodes in ONE :meth:`compress_wire` pass (one
+        fused `encode_pack_quantize` grid on capable geometries), and
+        the per-lane payloads are pure reshaped views of that pass:
+
+            sketch      (lanes, lane_blocks, rows, cfg.lanes)
+            index_words (lanes, lane_words)
+
+        Lane ``d`` of the result is bit-identical to compressing lane
+        ``d``'s slab alone at offset ``block_offset + d * lane_blocks``
+        — the property the all-to-all merge relies on (every source
+        rank encodes destination ``d``'s slab under the same hash ids,
+        so the ppermuted sketches add homomorphically).  Also returns
+        the per-block maxabs reshaped per lane, ``(lanes,
+        lane_blocks)``.
+        """
+        lanes, nb_c, elems = lane_buckets.shape
+        if elems % self.cfg.block_elems:
+            raise ValueError(
+                f"bucket_elems {elems} is not a whole number of sketch "
+                f"blocks ({self.cfg.block_elems})")
+        comp, maxabs = self.compress_wire(
+            lane_buckets.reshape(-1), block_offset=block_offset)
+        lane_blocks = (nb_c * elems) // self.cfg.block_elems
+        sk = comp.sketch.reshape((lanes, lane_blocks) + comp.sketch.shape[1:])
+        wd = comp.index_words.reshape(lanes, -1)
+        return (CompressedLeaf(sketch=sk, index_words=wd),
+                maxabs.reshape(lanes, lane_blocks))
+
     # ------------------------------------------------------------------
     # Phase II — recovery
     # ------------------------------------------------------------------

@@ -347,6 +347,13 @@ class CompressionConfig:
         (:func:`repro.core.streams.zero1_gather_skip`), where the
         aggregator feeds the per-rank recovered chunks straight into the
         optimizer shards and the gather is skipped entirely.
+
+        Every entry names its collective ``pattern`` (PR 8): the
+        aggregation strategies above are ``allreduce``; the
+        ``dense_alltoall`` / ``compressed_alltoall`` entries model the
+        expert-parallel permute wire, where ``n`` is this rank's
+        *stacked* W-lane dispatch/combine payload and each rank
+        sends/receives ``(W-1)/W x`` of it (its own lane stays local).
         """
         if workers < 1:
             raise ValueError(f"workers must be >= 1, got {workers}")
@@ -415,5 +422,46 @@ class CompressionConfig:
             "link_bytes": innet if W > 1 else 0,
             "root_link_bytes": innet if W > 1 else 0,
             "exponent_bytes": exp_bytes,
+        }
+        for entry in out.values():
+            if isinstance(entry, dict):
+                entry["pattern"] = "allreduce"
+        # ---- the permute pattern (PR 8) ------------------------------
+        # ``n`` is reinterpreted as this rank's *stacked* all-to-all
+        # payload (all W destination lanes); each destination's slice of
+        # ceil(n/W) elements gets its own bucket run. Every rank keeps
+        # its own lane local and sends/receives the other W-1 —
+        # (W-1)/W x the stacked payload each way, the all-to-all analogue
+        # of the reduce-scatter factor. The compressed wire ships the
+        # sketch+bitmap of each lane instead of the raw slice; the
+        # psum-emulation fallback (0.4.x partial-auto, multi-axis EP)
+        # reduces the whole stack at ring AllReduce volume
+        # (``link_bytes_emulated``; bitmap additionally at
+        # ``or_emulated_factor``).
+        n_d = -(-n // W)                  # per-destination slice elems
+        be_d = self.bucket_elems_for(n_d)
+        nb_d = self.num_buckets(n_d)
+        lane_elems = nb_d * be_d
+        lane_sketch = (lane_elems // self.block_elems) * self.sketch_elems * 4
+        if self.index == "bitmap":
+            lane_idx = (lane_elems // 32) * 4
+        else:
+            lane_idx = int(lane_elems * self.bloom_bits_ratio / 32 + 1) * 4
+        lane_bytes = lane_sketch + lane_idx
+        comp_stack = W * lane_bytes
+        out["dense_alltoall"] = {
+            "pattern": "alltoall",
+            "payload_bytes": dense,
+            "rank_payload_bytes": int(dense * rs),
+            "link_bytes": int(dense * rs),
+        }
+        out["compressed_alltoall"] = {
+            "pattern": "alltoall",
+            "n_lane_buckets": nb_d,
+            "lane_payload_bytes": lane_bytes,
+            "payload_bytes": comp_stack,
+            "rank_payload_bytes": int(comp_stack * rs),
+            "link_bytes": int(comp_stack * rs),
+            "link_bytes_emulated": int(comp_stack * ring),
         }
         return out

@@ -130,6 +130,40 @@ def analytic_bucket_costs(plan: BucketPlan, cfg: CompressionConfig,
     }
 
 
+def analytic_alltoall_costs(n: int, cfg: CompressionConfig,
+                            workers: int, grad_bytes_per_elem: int = 4
+                            ) -> Dict[str, float]:
+    """Analytic per-exchange cost (seconds) of the permute-pattern wires
+    (PR 8): the all-to-all analogue of :func:`analytic_bucket_costs`,
+    priced from the ``dense_alltoall`` / ``compressed_alltoall`` entries
+    of :meth:`CompressionConfig.strategy_wire_bytes` and the same
+    bandwidth priors.
+
+    ``n`` is one rank's *stacked* W-lane dispatch/combine payload.  The
+    link term ships ``(W-1)/W x`` the payload; the codec term charges
+    the producer for encoding the full lane stack but the consumer only
+    for peeling this rank's merged ``1/W`` lane — the same asymmetry as
+    the reduce-scatter wire's per-rank peel.  The dense exchange has no
+    codec term.  Serial wire+codec, like the all-reduce model: the
+    overlap win is what measured probes would capture.
+    """
+    from repro.kernels.ops import wire_codec_passes  # late: jax-heavy
+    acc = cfg.strategy_wire_bytes(n, workers,
+                                  grad_bytes_per_elem=grad_bytes_per_elem)
+    link_bw = cfg.auto_link_gbps * 1e9 / 8
+    codec_bw = cfg.auto_codec_gbps * 1e9 / 8
+    p = wire_codec_passes(cfg)
+    comp = acc["compressed_alltoall"]
+    stack_elems = comp["n_lane_buckets"] * workers * \
+        cfg.bucket_elems_for(-(-n // workers))
+    t_pass = stack_elems * 4 / codec_bw
+    return {
+        "dense": acc["dense_alltoall"]["link_bytes"] / link_bw,
+        "compressed": comp["link_bytes"] / link_bw
+        + (p["producer"] + p["consumer"] / workers) * t_pass,
+    }
+
+
 def analytic_plan(plan: BucketPlan, cfg: CompressionConfig,
                   workers: int, grad_bytes_per_elem: int = 4) -> WirePlan:
     """The zero-telemetry plan the ``auto`` strategy executes before its

@@ -277,6 +277,121 @@ def make_stream_plan(plan: BucketPlan, cfg: CompressionConfig, *,
 
 
 # ----------------------------------------------------------------------
+# The all-to-all (permute pattern) chunk grid — PR 8
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AllToAllStreamPlan:
+    """Static chunk grid for the permute-pattern wire.
+
+    The payload is ``lanes`` per-destination bucket runs of
+    ``n_buckets`` buckets each (one :class:`~repro.core.bucketing`
+    plan per destination EP rank, identical geometry).  A wire chunk
+    carries ``chunk_buckets`` buckets *of every lane* — the producer
+    encodes one stacked ``(lanes, chunk_buckets, E)`` slab per chunk in
+    a single fused pass, and the same double-buffered
+    :func:`stream_schedule` overlaps chunk ``i``'s ppermutes with chunk
+    ``i+1``'s encode.
+
+    Block ids are chunk-major: bucket ``j`` of lane ``d`` in chunk ``c``
+    encodes at global bucket ``(c * lanes + d) * chunk_buckets + j``, so
+    each chunk's producer pass covers one *contiguous* block range (the
+    PR 7 one-producer contract) while every lane keeps a fixed offset
+    within it.  The fused (``n_chunks = 1``) grid degenerates to plain
+    lane-major offsets ``d * n_buckets``.
+    """
+
+    lanes: int            # W destination ranks (one ppermute lane each)
+    n_buckets: int        # per-destination buckets
+    bucket_elems: int
+    blocks_per_bucket: int
+    words_per_bucket: int
+    n_chunks: int
+    chunk_buckets: int
+    base_block: int = 0
+
+    def __post_init__(self):
+        if self.lanes < 1:
+            raise ValueError(f"lanes must be >= 1, got {self.lanes}")
+        if self.n_chunks * self.chunk_buckets != self.n_buckets:
+            raise ValueError(
+                f"chunk grid {self.n_chunks} x {self.chunk_buckets} does "
+                f"not tile the per-destination bucket run "
+                f"({self.n_buckets} buckets)")
+
+    @property
+    def chunk_elems(self) -> int:
+        return self.chunk_buckets * self.bucket_elems
+
+    @property
+    def streamed(self) -> bool:
+        return self.n_chunks > 1
+
+    def chunk_start_block(self, chunk):
+        """Global block id of chunk ``chunk``'s first block (lane 0) —
+        the producer's ``block_offset`` for the stacked slab."""
+        return self.base_block + chunk * (
+            self.lanes * self.chunk_buckets * self.blocks_per_bucket)
+
+    def lane_start_block(self, chunk, lane):
+        """Global block id of lane ``lane``'s first block inside chunk
+        ``chunk`` — the consumer's peel offset at the receiving rank
+        (both args may be traced)."""
+        return self.chunk_start_block(chunk) + \
+            lane * (self.chunk_buckets * self.blocks_per_bucket)
+
+    def chunk_view(self, lane_buckets: jnp.ndarray) -> jnp.ndarray:
+        """``(lanes, n_buckets, E) -> (n_chunks, lanes, chunk_buckets,
+        E)`` — the per-chunk stacked slabs :func:`stream_schedule`
+        scans over."""
+        if lane_buckets.shape != (self.lanes, self.n_buckets,
+                                  self.bucket_elems):
+            raise ValueError(
+                f"lane buckets shape {lane_buckets.shape} != "
+                f"({self.lanes}, {self.n_buckets}, {self.bucket_elems})")
+        return lane_buckets.reshape(
+            self.lanes, self.n_chunks, self.chunk_buckets,
+            self.bucket_elems).transpose(1, 0, 2, 3)
+
+
+def make_alltoall_stream_plan(plan: BucketPlan, cfg: CompressionConfig, *,
+                              lanes: int,
+                              base_block: int = 0) -> AllToAllStreamPlan:
+    """Resolve the chunk grid for one all-to-all exchange.
+
+    ``plan`` is the per-destination :class:`BucketPlan` (every lane
+    shares it).  The chunk count comes from ``cfg.stream_chunks`` when
+    set, else ``cfg.overlap`` picks the per-bucket grid and ``False``
+    one fused chunk — same policy as :func:`make_stream_plan`.  The
+    count must divide the per-destination bucket run exactly: the
+    permute wire's chunk-major block-id scheme interleaves all ``lanes``
+    lanes inside each chunk, so a ragged tail chunk would shift every
+    later lane's hash block ids.
+    """
+    if lanes < 1:
+        raise ValueError(f"lanes must be >= 1, got {lanes}")
+    nb = plan.n_buckets
+    streaming = cfg.overlap or cfg.stream_chunks is not None
+    req = cfg.stream_chunks if cfg.stream_chunks is not None \
+        else (nb if streaming else 1)
+    if req < 1:
+        raise ValueError(f"stream_chunks must be >= 1, got {req}")
+    req = min(req, nb)
+    if nb % req:
+        raise ValueError(
+            f"stream_chunks={req} misaligns the all-to-all lane grid: "
+            f"the permute wire interleaves all {lanes} destination lanes "
+            f"chunk-major, so the chunk count must divide the "
+            f"per-destination bucket count n_buckets = {nb} "
+            f"(valid counts: divisors of {nb})")
+    return AllToAllStreamPlan(
+        lanes=lanes, n_buckets=nb, bucket_elems=plan.bucket_elems,
+        blocks_per_bucket=plan.blocks_per_bucket(cfg),
+        words_per_bucket=plan.words_per_bucket,
+        n_chunks=req, chunk_buckets=nb // req, base_block=base_block)
+
+
+# ----------------------------------------------------------------------
 # The double-buffered pipeline driver
 # ----------------------------------------------------------------------
 

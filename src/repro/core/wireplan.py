@@ -35,6 +35,31 @@ from typing import Optional, Sequence, Tuple
 # search space and the executable strategies can never drift apart.
 WIRES = ("dense", "compressed", "compressed_rs", "compressed_innet")
 
+# Collective *patterns* a group may run its wire over (PR 8).  The plan
+# layer is pattern-parametric: ``allreduce`` is the gradient-aggregation
+# shape every wire above supports; ``alltoall`` is the expert-parallel
+# dispatch/combine permute shape, carried today by the ``dense`` and
+# ``compressed`` wires only (RS/innet are reduce-tree refinements of the
+# all-reduce pattern and have no permute analogue).
+PATTERNS = ("allreduce", "alltoall")
+
+# wires that can execute each pattern
+_PATTERN_WIRES = {
+    "allreduce": WIRES,
+    "alltoall": ("dense", "compressed"),
+}
+
+
+def pattern_wires(pattern: str) -> Tuple[str, ...]:
+    """The wires able to execute ``pattern`` — the controller's search
+    space per pattern (``core/aggregators.py`` asserts its exchange
+    registry against the ``alltoall`` entry the same way it pins
+    ``AGGREGATORS`` against :data:`WIRES`)."""
+    if pattern not in PATTERNS:
+        raise ValueError(
+            f"unknown pattern {pattern!r}; valid patterns: {PATTERNS}")
+    return _PATTERN_WIRES[pattern]
+
 
 @dataclasses.dataclass(frozen=True)
 class WireGroup:
@@ -46,11 +71,21 @@ class WireGroup:
     stream_chunks: Optional[int] = None
     # per-group chunk-grid override (None = the config's grid); lets the
     # controller tune overlap granularity per group
+    pattern: str = "allreduce"   # one of PATTERNS
 
     def __post_init__(self):
         if self.wire not in WIRES:
             raise ValueError(
                 f"unknown wire {self.wire!r}; valid wires: {WIRES}")
+        if self.pattern not in PATTERNS:
+            raise ValueError(
+                f"unknown pattern {self.pattern!r}; valid patterns: "
+                f"{PATTERNS}")
+        if self.wire not in _PATTERN_WIRES[self.pattern]:
+            raise ValueError(
+                f"wire {self.wire!r} cannot run the {self.pattern!r} "
+                f"pattern; {self.pattern!r} wires: "
+                f"{_PATTERN_WIRES[self.pattern]}")
         if self.start < 0:
             raise ValueError(f"start must be >= 0, got {self.start}")
         if self.n_buckets < 1:
@@ -100,6 +135,18 @@ class WirePlan:
         if pos != self.n_buckets:
             raise ValueError(
                 f"groups cover {pos} buckets, plan has {self.n_buckets}")
+        patterns = {g.pattern for g in self.groups}
+        if len(patterns) > 1:
+            raise ValueError(
+                "a WirePlan must be single-pattern: all groups must share "
+                "one collective pattern (a bucket stream is packed for "
+                "either the allreduce or the alltoall shape, never both); "
+                f"got {sorted(patterns)}")
+
+    @property
+    def pattern(self) -> str:
+        """The plan's (single, validated) collective pattern."""
+        return self.groups[0].pattern
 
     @property
     def uniform_wire(self) -> Optional[str]:
@@ -125,19 +172,21 @@ class WirePlan:
         raise AssertionError("unreachable: plan validated as covering")
 
     def describe(self) -> str:
+        pat = "" if self.pattern == "allreduce" else f" @{self.pattern}"
         return " | ".join(
             f"[{g.start}:{g.stop}]={g.wire}"
             + (f"/c{g.stream_chunks}" if g.stream_chunks else "")
-            for g in self.groups)
+            for g in self.groups) + pat
 
 
 def uniform_plan(n_buckets: int, wire: str,
-                 stream_chunks: Optional[int] = None) -> WirePlan:
+                 stream_chunks: Optional[int] = None,
+                 pattern: str = "allreduce") -> WirePlan:
     """The degenerate plan: every bucket on one wire (today's fixed
     strategies are exactly these plans)."""
     return WirePlan(n_buckets=n_buckets, groups=(
         WireGroup(start=0, n_buckets=n_buckets, wire=wire,
-                  stream_chunks=stream_chunks),))
+                  stream_chunks=stream_chunks, pattern=pattern),))
 
 
 def plan_from_assignments(wires: Sequence[str]) -> WirePlan:

@@ -129,7 +129,10 @@ class ModelConfig:
             if self.family == "hybrid":
                 is_attn = (layer % self.attn_period) == self.attn_offset
                 total += (attn_params() if is_attn else ssm_params())
-                is_moe = (layer % 2) == 1
+                # MoE cadence follows the config (jamba: every_k_layers=2
+                # -> odd positions), matching _init_hybrid_superblock
+                k = self.moe.every_k_layers if self.moe is not None else 0
+                is_moe = k > 0 and (layer % k) == (k - 1)
                 total += (moe_ffn() if is_moe else dense_ffn()) + 3 * D
                 continue
             # dense / moe / vlm / encdec decoder layers
@@ -151,7 +154,9 @@ class ModelConfig:
         m = self.moe
         full_experts = self.n_layers * m.num_experts * 3 * self.d_model * m.expert_d_ff
         if self.family == "hybrid":
-            n_moe_layers = sum(1 for l in range(self.n_layers) if l % 2 == 1)
+            k = m.every_k_layers
+            n_moe_layers = sum(1 for l in range(self.n_layers)
+                               if l % k == k - 1)
             full_experts = n_moe_layers * m.num_experts * 3 * self.d_model * m.expert_d_ff
             active = n_moe_layers * m.top_k * 3 * self.d_model * m.expert_d_ff
         else:

@@ -320,7 +320,8 @@ def init_moe(key, cfg: ModelConfig):
 
 
 def moe_ffn(x: jnp.ndarray, p, m: MoEConfig,
-            capacity_factor: Optional[float] = None
+            capacity_factor: Optional[float] = None,
+            ep_exchange=None
             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """x: (T, D) tokens -> (out (T, D), aux_loss scalar).
 
@@ -328,6 +329,28 @@ def moe_ffn(x: jnp.ndarray, p, m: MoEConfig,
     static capacity C. Dispatch/combine are gathers/scatter-adds keyed by a
     sorted slot assignment, so the expert einsums see a dense (E, C, D)
     tensor shardable on the expert axis (EP).
+
+    ``ep_exchange`` (PR 8): an all-to-all exchange from
+    :func:`repro.core.aggregators.make_exchange`, usable only inside a
+    manual region where its EP axes are bound.  When set, the combine
+    runs the expert-parallel wire: each EP rank scatter-adds only *its
+    own expert group's* contributions (experts ``rank * ceil(E/W) ..``),
+    cuts that partial output into ``W`` token blocks, and the exchange
+    merges block ``r`` of every rank's partial at rank ``r`` — on the
+    compressed wire the sum happens homomorphically in the sketch while
+    in flight.  An ``all_gather`` of the merged blocks restores the full
+    ``(T, D)`` output.  Mathematically identical to the local combine
+    (every expert contribution added exactly once); float summation
+    order differs, so train-level parity is allclose, not bitwise.
+
+    The wire carries the forward value only; the *gradient* routes
+    through the local combine (``local + stop_gradient(wire - local)``).
+    The two are the same linear map of ``y``, so the local vjp is exact
+    — and it is the only replica-consistent one in the regime the train
+    step enables the wire in (full-manual regions, where expert weights
+    enter replicated over the EP axes: every replica must see the
+    full-slot gradient, not its group's slice scaled by the all_gather
+    transpose's cross-replica sum).
     """
     T, D = x.shape
     E, K = m.num_experts, m.top_k
@@ -371,6 +394,29 @@ def moe_ffn(x: jnp.ndarray, p, m: MoEConfig,
 
     out = jnp.zeros((T + 1, D), jnp.float32).at[gather_idx].add(
         y.astype(jnp.float32) * slot_w[:, None])[:T]
+    if ep_exchange is not None:
+        from repro.core.collectives import linear_rank  # late: jax-heavy
+        W = ep_exchange.workers
+        rank = linear_rank(ep_exchange.ep_axes)
+        group_size = -(-E // W)           # experts per EP rank group
+        slot_expert = jnp.arange(E * C) // C
+        mine = (slot_expert // group_size) == rank
+        # partial combine: only this rank's expert group lands; other
+        # groups' slots scatter to the drop row
+        safe_idx = jnp.where(mine, gather_idx, T)
+        partial = jnp.zeros((T + 1, D), jnp.float32).at[safe_idx].add(
+            y.astype(jnp.float32) * slot_w[:, None])[:T]
+        T_blk = -(-T // W)
+        payload = jnp.pad(partial, ((0, W * T_blk - T), (0, 0))
+                          ).reshape(W, T_blk, D)
+        merged = ep_exchange(payload)     # (T_blk, D): my block, combined
+        full = jax.lax.all_gather(merged, tuple(ep_exchange.ep_axes),
+                                  axis=0, tiled=False)
+        wire = full.reshape(W * T_blk, D)[:T]
+        # wire value forward, local-combine vjp backward (see docstring);
+        # when the wire is exact (W=1, or dyadic payloads) the correction
+        # term is exactly zero and `out` stays bitwise the local combine
+        out = out + jax.lax.stop_gradient(wire - out)
     out = out.astype(x.dtype)
 
     if m.shared_experts:

@@ -53,8 +53,8 @@ def model_api(cfg: ModelConfig) -> ModelAPI:
     return ModelAPI(
         cfg=cfg,
         init=lambda key: T.init_lm(key, cfg),
-        loss=lambda p, batch, remat="none": T.lm_loss(p, cfg, batch,
-                                                      remat=remat),
+        loss=lambda p, batch, remat="none", ep_exchange=None: T.lm_loss(
+            p, cfg, batch, remat=remat, ep_exchange=ep_exchange),
         prefill=_prefill,
         decode=lambda p, tok, cache, pos: T.lm_decode(p, cfg, tok, cache, pos),
         init_cache=lambda p, b, s: T.init_cache(p, cfg, b, s),

@@ -58,9 +58,11 @@ def _init_hybrid_superblock(key, cfg: ModelConfig) -> Dict[str, Any]:
             sub["attn"] = L.init_attention(ks[3 * pos], cfg)
         else:
             sub["mamba"] = S.init_mamba(ks[3 * pos], cfg)
-        # FFN on every layer: MoE on odd positions, dense on even.
+        # FFN on every layer: MoE every ``every_k_layers`` positions
+        # (jamba's k=2 puts MoE on odd positions, dense on even).
         sub["ln2"] = L.init_rmsnorm(cfg.d_model)
-        if cfg.moe is not None and pos % 2 == 1:
+        k_moe = cfg.moe.every_k_layers if cfg.moe is not None else 0
+        if cfg.moe is not None and pos % k_moe == k_moe - 1:
             sub["moe"] = L.init_moe(ks[3 * pos + 1], cfg)
         else:
             sub["ffn"] = L.init_mlp(ks[3 * pos + 1], cfg.d_model, cfg.d_ff,
@@ -97,32 +99,39 @@ def init_lm(key, cfg: ModelConfig):
 # Blocks (forward)
 # ----------------------------------------------------------------------
 
-def _apply_ffn(x, p, cfg: ModelConfig, decode: bool = False):
-    """Post-attention FFN (dense or MoE). x: (B, S, D) -> (out, aux)."""
+def _apply_ffn(x, p, cfg: ModelConfig, decode: bool = False,
+               ep_exchange=None):
+    """Post-attention FFN (dense or MoE). x: (B, S, D) -> (out, aux).
+
+    ``ep_exchange`` (PR 8): the expert-parallel all-to-all combine wire,
+    threaded from the train step (see :func:`repro.models.layers.moe_ffn`);
+    train-path only, decode keeps the local combine.
+    """
     B, Sq, D = x.shape
     if "moe" in p:
         cf = cfg.moe.capacity_factor_decode if decode else None
         out, aux = L.moe_ffn(x.reshape(B * Sq, D), p["moe"], cfg.moe,
-                             capacity_factor=cf)
+                             capacity_factor=cf,
+                             ep_exchange=None if decode else ep_exchange)
         return out.reshape(B, Sq, D), aux
     return L.mlp(x, p["ffn"]), jnp.float32(0.0)
 
 
-def _attn_block(x, p, cfg: ModelConfig, positions):
+def _attn_block(x, p, cfg: ModelConfig, positions, ep_exchange=None):
     h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
     o, kv = L.attention_train(h, p["attn"], cfg, positions=positions)
     x = x + o
     h = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
-    ff, aux = _apply_ffn(h, p, cfg)
+    ff, aux = _apply_ffn(h, p, cfg, ep_exchange=ep_exchange)
     return x + ff, aux, kv
 
 
-def _ssm_block(x, p, cfg: ModelConfig):
+def _ssm_block(x, p, cfg: ModelConfig, ep_exchange=None):
     h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
     x = x + S.mamba_forward(h, p["mamba"], cfg)
     if "ln2" in p:
         h = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
-        ff, aux = _apply_ffn(h, p, cfg)
+        ff, aux = _apply_ffn(h, p, cfg, ep_exchange=ep_exchange)
         return x + ff, aux
     return x, jnp.float32(0.0)
 
@@ -146,7 +155,7 @@ def _unembed(params, cfg: ModelConfig, x):
 
 
 def lm_hidden(params, cfg: ModelConfig, tokens, vis_embed=None,
-              remat: str = "none"):
+              remat: str = "none", ep_exchange=None):
     """Token (+ visual prefix) embedding through all blocks. -> (x, aux)."""
     x = _embed(params, cfg, tokens, vis_embed)
     Sq = x.shape[1]
@@ -164,9 +173,11 @@ def lm_hidden(params, cfg: ModelConfig, tokens, vis_embed=None,
             for pos in range(cfg.attn_period):
                 sub = p_sb[f"pos{pos}"]
                 if pos == cfg.attn_offset:
-                    xx, a, _ = _attn_block(xx, sub, cfg, _positions())
+                    xx, a, _ = _attn_block(xx, sub, cfg, _positions(),
+                                           ep_exchange=ep_exchange)
                 else:
-                    xx, a = _ssm_block(xx, sub, cfg)
+                    xx, a = _ssm_block(xx, sub, cfg,
+                                       ep_exchange=ep_exchange)
                 aux = aux + a
             return (xx, aux), None
         body = super_body
@@ -174,13 +185,14 @@ def lm_hidden(params, cfg: ModelConfig, tokens, vis_embed=None,
     elif cfg.family == "ssm":
         def body(carry, p_l):
             xx, aux = carry
-            xx, a = _ssm_block(xx, p_l, cfg)
+            xx, a = _ssm_block(xx, p_l, cfg, ep_exchange=ep_exchange)
             return (xx, aux + a), None
         stacked = params["layers"]
     else:
         def body(carry, p_l):
             xx, aux = carry
-            xx, a, _ = _attn_block(xx, p_l, cfg, _positions())
+            xx, a, _ = _attn_block(xx, p_l, cfg, _positions(),
+                                   ep_exchange=ep_exchange)
             return (xx, aux + a), None
         stacked = params["layers"]
 
@@ -198,12 +210,16 @@ def lm_hidden(params, cfg: ModelConfig, tokens, vis_embed=None,
 
 
 def lm_loss(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
-            remat: str = "none") -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+            remat: str = "none", ep_exchange=None
+            ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
     """Causal-LM cross entropy. batch: tokens (B,S), labels (B,S),
-    optional vis_embed (B,V,D). Loss only over token positions."""
+    optional vis_embed (B,V,D). Loss only over token positions.
+    ``ep_exchange``: the PR 8 expert-parallel combine wire (see
+    :func:`lm_hidden` / :func:`repro.models.layers.moe_ffn`)."""
     tokens, labels = batch["tokens"], batch["labels"]
     vis = batch.get("vis_embed")
-    x, aux = lm_hidden(params, cfg, tokens, vis, remat=remat)
+    x, aux = lm_hidden(params, cfg, tokens, vis, remat=remat,
+                       ep_exchange=ep_exchange)
     if vis is not None:
         x = x[:, vis.shape[1]:]                     # text positions only
     logits = _unembed(params, cfg, x)

@@ -39,6 +39,16 @@ class TrainConfig:
         default_factory=ShardingProfile)
     remat: str = "block"                 # "none" | "block" | "dots"
     accum_steps: int = 1                 # microbatch gradient accumulation
+    ep_exchange: str = "none"            # PR 8: wire for the MoE expert-
+                                         # parallel combine all-to-all.
+                                         # "none" keeps the local scatter-
+                                         # add combine; "dense" |
+                                         # "compressed" route the partial
+                                         # expert outputs through
+                                         # core/aggregators.make_exchange
+                                         # (applied only when the model is
+                                         # MoE and the profile's ep_axes
+                                         # are manual in the train step)
     rs_gather_skip: bool = True          # with compressed_rs + zero1:
                                          # when the stream chunk grid
                                          # aligns with the ZeRO-1 slices
@@ -52,8 +62,12 @@ class TrainConfig:
     seed: int = 0
 
     def __post_init__(self):
-        from repro.core.aggregators import AGGREGATORS  # avoid import cycle
+        from repro.core.aggregators import AGGREGATORS, EXCHANGES  # cycle
         if self.aggregator not in AGGREGATORS:
             raise ValueError(
                 f"unknown aggregator {self.aggregator!r}; have "
                 f"{sorted(AGGREGATORS)}")
+        if self.ep_exchange != "none" and self.ep_exchange not in EXCHANGES:
+            raise ValueError(
+                f"unknown ep_exchange {self.ep_exchange!r}; have "
+                f"{['none'] + sorted(EXCHANGES)}")

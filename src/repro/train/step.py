@@ -233,7 +233,14 @@ def build_train_step(api: ModelAPI, tc: TrainConfig, mesh, *,
         """Per-worker gradients, with optional microbatch accumulation."""
         def loss_fn(p, b):
             with logical_axis_rules(inside_rules, mesh=rules_mesh):
-                loss, metrics = api.loss(p, b, remat=tc.remat)
+                # ep_exchange is bound below (after the manual-axes set is
+                # known) and read here at trace time, inside the manual
+                # region where its collectives are legal.
+                if ep_exchange is None:
+                    loss, metrics = api.loss(p, b, remat=tc.remat)
+                else:
+                    loss, metrics = api.loss(p, b, remat=tc.remat,
+                                             ep_exchange=ep_exchange)
             return loss, metrics
 
         def pin(grads):
@@ -286,6 +293,26 @@ def build_train_step(api: ModelAPI, tc: TrainConfig, mesh, *,
     # the wire of the zero-pad + psum trick kept for partial-auto.
     manual_all_gather = bool(dp_axes) and \
         compat.full_manual_region(step_manual, mesh)
+
+    # PR 8: the MoE expert-parallel combine wire. Built only when the
+    # step can legally run it: MoE model, the profile's EP axes live on
+    # this mesh, and every EP axis is manual in the step region (the
+    # permute lanes need collective axis names — with no DP axes the
+    # step runs under plain jit, so the model keeps the local combine).
+    # The exchange codec runs at ratio 2.5 with EF/top-k off: expert
+    # outputs are dense payloads, and at 2.5 the sketch capacity covers
+    # the block even when every slot is occupied, so recovery — hence
+    # the combine itself — is exact (no feedback residue to carry).
+    ep_exchange = None
+    ep_axes_eff = tuple(ax for ax in prof.ep_axes if ax in mesh.shape)
+    if (tc.ep_exchange != "none" and getattr(api.cfg, "moe", None) is not None
+            and dp_axes and ep_axes_eff
+            and set(ep_axes_eff) <= set(step_manual)):
+        ex_cfg = dataclasses.replace(tc.compression, ratio=2.5,
+                                     topk_ratio=None, error_feedback=False)
+        ep_exchange = agg_lib.make_exchange(
+            tc.ep_exchange, ex_cfg, mesh, ep_axes_eff,
+            outer_manual=step_manual)
 
     def make_aggregate(agg):
         def aggregate(grads, residual, pspecs):

@@ -50,6 +50,13 @@ Validates, on a (2, 2, 2) pod/data/model mesh:
      the ``auto`` strategy — are bit-identical to the fixed
      ``compressed`` run over 3 EF steps, outputs and residuals, at W=4
      over the (pod, data) axes (every wire is exact on dyadic values).
+ 12. the all-to-all exchange (PR 8): stacked (W, n) payloads routed
+     slice-r-to-rank-r; the compressed permute wire (sketch add + bitmap
+     OR merged in flight, ratio 2.5 = always-exact peel) equals the
+     dense wire and the numpy per-destination sum bit-for-bit over 3
+     steps — native single-axis ppermute lanes (W=2), the psum-emulated
+     multi-axis wire (W=4 over pod x data), and a chunked
+     (stream_chunks=2) lane grid.
 """
 import os
 os.environ.setdefault(
@@ -713,6 +720,81 @@ for label, wp in mixed_plans:
                     f"{step} leaf {k}"
         print(f"OK mixed wire plan ({strat}): {label} == compressed, "
               "3 EF steps")
+
+# ---- 12. the all-to-all exchange (PR 8) ------------------------------
+# The expert-parallel dispatch/combine wire: each rank holds a stacked
+# (W, n) payload — slice r routed to rank r — and the exchange must
+# deliver merged_r = sum_s payload_s[r] at rank r. Dyadic payloads make
+# every fp sum exact, so the compressed permute wire (sketch add +
+# bitmap OR in flight, ratio 2.5 = always-exact peel) must equal the
+# dense wire AND the numpy reference bit-for-bit, over 3 steps of
+# evolving payloads, on the native single-axis ppermute leg (W=2 over
+# "data"; the region is full-manual so it runs on both JAX legs), the
+# psum-emulated multi-axis leg (W=4 over pod x data), and a chunked
+# (stream_chunks=2) lane grid.
+from repro.core.aggregators import make_exchange
+
+cfg_a2a = dataclasses.replace(cfg_ef, ratio=2.5, topk_ratio=None,
+                              error_feedback=False)
+N_DEST = 2 * 1536          # 2 buckets/dest: the chunked grid divides it
+
+
+def dyadic_payload(seed, w):
+    r = np.random.default_rng(seed)
+    out = np.zeros((w, N_DEST), np.float32)
+    for d in range(w):
+        n_nz = int(N_DEST * 0.9)
+        idx = r.choice(N_DEST, size=n_nz, replace=False)
+        out[d, idx] = (r.choice([-1.0, 1.0], size=n_nz)
+                       * np.exp2(r.integers(-2, 3, size=n_nz)))
+    return out
+
+
+for label, ep_axes, w_ep, in_spec, out_spec in (
+        ("native W=2 (data)", ("data",), 2,
+         P("data", None, None), P("data", None)),
+        ("emulated W=4 (pod,data)", ("pod", "data"), 4,
+         P("pod", "data", None, None), P("pod", "data", None))):
+    for chunks in (None, 2):
+        outs = {}
+        for wire in ("dense", "compressed"):
+            cfg_w = dataclasses.replace(cfg_a2a, stream_chunks=chunks)
+            ex = make_exchange(wire, cfg_w, mesh, ep_axes,
+                               outer_manual=("pod", "data", "model"))
+
+            def body(stack, ex=ex, n_lead=len(ep_axes)):
+                local = stack
+                for _ in range(n_lead):
+                    local = local[0]
+                merged = ex({"g": local})["g"]
+                for _ in range(n_lead):
+                    merged = merged[None]
+                return merged
+
+            fn = jax.jit(shard_map(
+                body, mesh=mesh, in_specs=(in_spec,), out_specs=out_spec,
+                axis_names={"pod", "data", "model"}, check_vma=False))
+            step_outs = []
+            for step in range(3):
+                pay = np.stack([dyadic_payload(1000 + 10 * step + s, w_ep)
+                                for s in range(w_ep)])
+                lead = (2, 2) if len(ep_axes) > 1 else (2,)
+                put_a2a = jax.device_put(
+                    jnp.asarray(pay.reshape(lead + (w_ep, N_DEST))),
+                    NamedSharding(mesh, in_spec))
+                got = np.asarray(fn(put_a2a)).reshape(w_ep, N_DEST)
+                want = pay.sum(axis=0)     # merged_r = sum_s payload_s[r]
+                assert np.array_equal(got, want), \
+                    (label, chunks, wire, step)
+                step_outs.append(got)
+            outs[wire] = step_outs
+        for step in range(3):
+            assert np.array_equal(outs["dense"][step],
+                                  outs["compressed"][step]), \
+                (label, chunks, step)
+        grid = f"chunked x{chunks}" if chunks else "fused"
+        print(f"OK a2a exchange [{label}, {grid}]: compressed == dense "
+              "== numpy, 3 steps")
 
 # ---- 4. reduce-scatter aggregator on the TP-sharded tree -------------
 got_rs = jax.jit(shard_map(

@@ -1,6 +1,9 @@
 """8-device driver: full train_step (manual DP + auto TP) with dense and
 compressed aggregation, ZeRO-1 on and off. Asserts loss decreases and the
-two aggregators track each other."""
+two aggregators track each other. Also drives the PR 8 expert-parallel
+all-to-all exchange (`TrainConfig.ep_exchange`) through the MoE combine
+at W=2 and asserts both exchange wires train bit-identically to the
+local combine."""
 import os
 os.environ.setdefault(
     "XLA_FLAGS",
@@ -236,4 +239,42 @@ assert ag_skip < ag_gather, (
 assert all(abs(a - b) < 1e-5 for a, b in zip(l_skip, l_gather)), \
     f"gather-skip training diverged: {l_skip} vs {l_gather}"
 assert l_skip[-1] < l_skip[0], "stub training loss must decrease"
+
+# PR 8: the expert-parallel all-to-all exchange inside the real train
+# step. On the full-manual leg the MoE combine routes each rank's
+# expert-group partial sums through the dense / compressed exchange
+# (W=2 over the profile's "model" EP axis; the executor pins the
+# always-exact ratio=2.5 codec) and the stop_gradient splice keeps the
+# backward pass on the local-combine cotangent — so training must be
+# BIT-identical to the local combine, under Adam and, stricter, under
+# the linear momentum optimizer. On the partial-auto leg the hook's
+# full-manual gate leaves the local combine in place and the runs are
+# trivially identical.
+ep_comp = CompressionConfig(lanes=128, rows=6, chunk_blocks=8)
+
+
+def run_ep(ep, o=opt):
+    return run(TrainConfig(aggregator="dense", optimizer=o,
+                           sharding=ShardingProfile(zero1=False),
+                           remat="block", ep_exchange=ep,
+                           compression=ep_comp))
+
+
+l_ep_none = run_ep("none")
+l_ep_dense = run_ep("dense")
+l_ep_comp = run_ep("compressed")
+print("ep none      :", [round(x, 4) for x in l_ep_none])
+print("ep dense     :", [round(x, 4) for x in l_ep_dense])
+print("ep compressed:", [round(x, 4) for x in l_ep_comp])
+assert l_ep_none == l_ep_dense, \
+    f"dense exchange diverged from local combine: {l_ep_none} vs {l_ep_dense}"
+assert l_ep_none == l_ep_comp, \
+    f"compressed exchange diverged from local combine: {l_ep_none} vs {l_ep_comp}"
+assert l_ep_none[-1] < l_ep_none[0], "ep-exchange training must decrease"
+l_epm_none = run_ep("none", opt_m)
+l_epm_comp = run_ep("compressed", opt_m)
+print("ep none (mom):", [round(x, 5) for x in l_epm_none])
+print("ep comp (mom):", [round(x, 5) for x in l_epm_comp])
+assert l_epm_none == l_epm_comp, \
+    f"exchange diverged under momentum: {l_epm_none} vs {l_epm_comp}"
 print("ALL OK")

@@ -180,4 +180,32 @@ for W in (2, 4):
     print(f"OK W={W} compressed_innet: wire model self-consistent, "
           "f32 arm == compressed bitwise")
 
+    # ---- all-to-all exchange (PR 8): W-1 permute lanes, exact --------
+    # The mesh's single manual axis makes the region full-manual, so the
+    # native ppermute wire runs on BOTH legs and each rank ships exactly
+    # (W-1)/W of its stacked payload: the analytic *_alltoall entries
+    # must match the jaxpr-counted bytes with no emulation factor. N/W
+    # fills the per-destination bucket grid exactly (no padding slack).
+    from repro.core.aggregators import make_exchange
+    n_d = N // W
+    assert n_d % cfg.bucket_elems_for(n_d) == 0
+    a2a_payload = {"g": jnp.asarray(np.stack(
+        [dyadic(n_d, seed=100 + w) for w in range(W)]))}
+    for wire in ("dense_alltoall", "compressed_alltoall"):
+        ex = make_exchange(wire.split("_")[0], cfg, mesh, ("data",),
+                           outer_manual=("data",))
+        fn = jax.jit(compat.shard_map(
+            lambda p, ex=ex: jax.tree.map(lambda l: l[None], ex(p)),
+            mesh=mesh, in_specs=({"g": P()},),
+            out_specs={"g": P("data", None)},
+            axis_names={"data"}, check_vma=False))
+        jx = jax.make_jaxpr(fn)(a2a_payload)
+        got = _count_link_bytes(jx, W)
+        want = acc[wire]["link_bytes"]
+        assert round(got) == want, (W, wire, got, want)
+        print(f"OK W={W} {wire}: measured {round(got)} == analytic {want}")
+    assert acc["compressed_alltoall"]["rank_payload_bytes"] \
+        < acc["dense_alltoall"]["rank_payload_bytes"], \
+        "compressed a2a must undercut dense per-rank bytes at this ratio"
+
 print("ALL OK")

@@ -3,7 +3,9 @@
 ``benchmarks/roofline.py`` must stay importable and runnable at tiny
 sizes — they are exercised by hand and from CI artifacts, so a refactor
 that breaks their imports or call signatures should fail fast here, not
-in a nightly run.
+in a nightly run. PR 8 extends the net to the remaining entry points:
+``benchmarks/run.py`` (the one-shot all-tables driver) and
+``benchmarks/hlo_analysis.py`` (the trip-count-corrected HLO analyzer).
 
 The heavyweight benchmark (``aggregation.py``) has its own CI smoke run
 (all ``--compare-*`` arms); here we only pin its import + pure helpers.
@@ -77,13 +79,13 @@ def test_roofline_report_handles_empty_artifacts():
         assert f"mesh={mesh}" in txt
 
 
-def test_aggregation_helpers_and_schema3():
+def test_aggregation_helpers_and_schema4():
     agg = importlib.import_module("benchmarks.aggregation")
     # the jaxpr counters are shared with tests/drivers/wirebytes_driver
     assert callable(agg._count_collectives)
     assert callable(agg._count_collective_launches)
     assert callable(agg._count_link_bytes)
-    # schema-3 normalized JSON round-trips the auto section
+    # schema-4 normalized JSON round-trips the auto + alltoall sections
     auto_rows = [
         {"case": "compare_auto", "arm": "dense", "wall_s": 0.001,
          "link_bytes": 10, "measured_link_bytes": 10,
@@ -94,13 +96,100 @@ def test_aggregation_helpers_and_schema3():
          "wall_ratio_vs_best_fixed": 1.0,
          "decision_trace": {"probing": False}},
     ]
+    a2a_rows = [
+        {"case": "compare_a2a", "arm": "dense_alltoall",
+         "pattern": "alltoall", "workers": 4, "total_elems": 100,
+         "rank_payload_bytes": 300, "link_bytes": 300,
+         "measured_link_bytes": 300, "collective_ops": 3,
+         "collective_launches": 3, "wall_s": 0.001},
+        {"case": "compare_a2a", "arm": "compressed_alltoall",
+         "pattern": "alltoall", "workers": 4, "total_elems": 100,
+         "rank_payload_bytes": 100, "link_bytes": 100,
+         "measured_link_bytes": 100, "collective_ops": 6,
+         "collective_launches": 6, "wall_s": 0.001},
+    ]
     import tempfile
     with tempfile.TemporaryDirectory() as d:
         path = os.path.join(d, "norm.json")
-        agg.write_normalized(path, [], auto_rows=auto_rows)
+        agg.write_normalized(path, [], auto_rows=auto_rows,
+                             a2a_rows=a2a_rows)
         with open(path) as f:
             payload = json.load(f)
-    assert payload["schema"] == 3
+    assert payload["schema"] == 4
     assert payload["auto"]["chosen_wire"] == "dense"
     assert payload["auto"]["wall_ratio_vs_best_fixed"] == 1.0
     assert payload["auto"]["fixed"]["dense"]["measured_link_bytes"] == 10
+    a2a = payload["alltoall"]
+    assert set(a2a) == {"dense_alltoall", "compressed_alltoall"}
+    assert a2a["compressed_alltoall"]["pattern"] == "alltoall"
+    assert (a2a["compressed_alltoall"]["rank_payload_bytes"]
+            < a2a["dense_alltoall"]["rank_payload_bytes"])
+
+
+def test_run_driver_entry_point():
+    """``benchmarks/run.py`` is the one-shot all-tables driver CI and
+    humans both invoke; it imports the other benchmark modules lazily
+    inside main(), so pin the module surface and the timing helper
+    (running main() would replay every paper table — too heavy here)."""
+    run = importlib.import_module("benchmarks.run")
+    assert callable(run.main)
+    out, us = run._timed(lambda a, b: a + b, 2, 3)
+    assert out == 5 and us >= 0.0
+
+
+_PIN_HLO = """
+HloModule pin
+
+%body (p.1: (s32[], f32[8,16], f32[16,4])) -> (s32[], f32[8,16], f32[16,4]) {
+  %p.1 = (s32[], f32[8,16], f32[16,4]) parameter(0)
+  %it = s32[] get-tuple-element(%p.1), index=0
+  %one = s32[] constant(1)
+  %next = s32[] add(%it, %one)
+  %a = f32[8,16] get-tuple-element(%p.1), index=1
+  %b = f32[16,4] get-tuple-element(%p.1), index=2
+  %d = f32[8,4] dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %cp = f32[8,4] collective-permute(%d), source_target_pairs={{0,1},{1,0}}
+  ROOT %t = (s32[], f32[8,16], f32[16,4]) tuple(%next, %a, %b)
+}
+
+%cond (p.2: (s32[], f32[8,16], f32[16,4])) -> pred[] {
+  %p.2 = (s32[], f32[8,16], f32[16,4]) parameter(0)
+  %it2 = s32[] get-tuple-element(%p.2), index=0
+  %n = s32[] constant(7)
+  ROOT %lt = pred[] compare(%it2, %n), direction=LT
+}
+
+ENTRY %main (x: s32[], a0: f32[8,16], b0: f32[16,4]) -> (s32[], f32[8,16], f32[16,4]) {
+  %x = s32[] parameter(0)
+  %a0 = f32[8,16] parameter(1)
+  %b0 = f32[16,4] parameter(2)
+  %init = (s32[], f32[8,16], f32[16,4]) tuple(%x, %a0, %b0)
+  ROOT %w = (s32[], f32[8,16], f32[16,4]) while(%init), condition=%cond, body=%body
+}
+"""
+
+
+def test_hlo_analysis_trip_corrected_pins():
+    """``benchmarks/hlo_analysis.py``'s whole point is the trip-count
+    correction cost_analysis() lacks: a dot inside a while body must
+    count once per trip. Pin it on a hand-written module (a 7-trip loop
+    around an 8x16 @ 16x4 dot + one collective-permute), plus the shape
+    parser, plus an analyze() smoke over real compiled HLO (whose op
+    mix shifts across jax versions — only invariants asserted there)."""
+    import jax
+    import jax.numpy as jnp
+    hlo = importlib.import_module("benchmarks.hlo_analysis")
+    summary = hlo.analyze(_PIN_HLO)
+    assert summary.dot_flops == 7 * 2 * 8 * 4 * 16
+    cp = summary.collectives["collective-permute"]
+    assert cp["count"] == 7
+    assert summary.collective_wire_bytes() == 7 * 8 * 4 * 4
+    elems, nbytes = hlo.shape_elems_bytes("f32[8,16]")
+    assert (elems, nbytes) == (8 * 16, 8 * 16 * 4)
+    # real lowering: must parse without error and see the dot's work
+    x = jnp.ones((8, 16), jnp.float32)
+    w = jnp.ones((16, 4), jnp.float32)
+    txt = jax.jit(lambda a, b: a @ b).lower(x, w).compile().as_text()
+    real = hlo.analyze(txt)
+    assert real.dot_flops > 0
+    assert real.collectives == {}           # single device: no wire

@@ -346,3 +346,94 @@ def test_fused_wire_parity_over_ef_steps(name, wire_dtype):
             assert np.array_equal(on[k], oa[k]), (name, step, k)
     for k in res_n:
         assert np.array_equal(res_n[k], res_a[k]), (name, k)
+
+
+# ----------------------------------------------------------------------
+# The all-to-all exchange (PR 8): the compressed permute wire must be
+# bit-for-bit the dense one on identical routed payloads — the exchange
+# codec runs at ratio 2.5, where sketch capacity exceeds the block even
+# when every slot is occupied, so recovery of these dyadic payloads is
+# exact. Pinned over 3 steps of evolving payloads, both backends, fused
+# and chunked (stream_chunks > 1) lane grids; the multi-rank permute
+# legs live in tests/drivers/collectives_driver.py.
+# ----------------------------------------------------------------------
+
+from repro.core.aggregators import make_exchange  # noqa: E402
+
+# ratio 2.5 -> group=2, block=256 elems; two blocks per bucket
+A2A_BASE = dataclasses.replace(
+    BASE, ratio=2.5, topk_ratio=None, error_feedback=False,
+    bucket_bytes=2 * 2 * BASE.lanes * 4)
+
+
+def _a2a_payload(seed):
+    r = np.random.default_rng(seed)
+
+    def dyadic(shape, frac):
+        n = int(np.prod(shape))
+        return dyadic_sparse(n, frac, seed=r.integers(1 << 30)).reshape(shape)
+
+    # leading axis = destination ranks (W=1 here); dense-ish payloads
+    # exercise the full-occupancy recovery regime the exchange relies on
+    # 825 + 1152 elems -> 4 buckets of 512: divisible by the chunked
+    # grid below (the lane grid requires chunk count | bucket count)
+    return {"x": dyadic((1, 3 * A2A_BASE.block_elems + 57), 0.9),
+            "y": dyadic((1, 18, 64), 0.8)}
+
+
+def _run_exchange(cfg, name, steps=3):
+    mesh = make_mesh((1,), ("data",))
+    exchange = make_exchange(name, cfg, mesh, ("data",),
+                             outer_manual=("data",))
+
+    def fn(payload):
+        return exchange(payload)
+
+    jfn = jax.jit(shard_map(
+        fn, mesh=mesh,
+        in_specs=(jax.tree.map(lambda _: P(), _a2a_payload(0)),),
+        out_specs=jax.tree.map(lambda _: P(), exchange_out_struct(cfg)),
+        axis_names={"data"}, check_vma=False))
+    outs = []
+    for s in range(steps):
+        payload = jax.tree.map(jnp.asarray, _a2a_payload(seed=s))
+        outs.append(jax.tree.map(np.asarray, jfn(payload)))
+    return outs
+
+
+def exchange_out_struct(cfg):
+    # merged output drops the destination axis: one slice per leaf
+    return {k: v[0] for k, v in _a2a_payload(0).items()}
+
+
+@pytest.mark.parametrize("backend", ["never", "always"])
+@pytest.mark.parametrize("chunks", [None, 2], ids=["fused", "chunked"])
+def test_exchange_compressed_matches_dense_bitwise(backend, chunks):
+    cfg = dataclasses.replace(A2A_BASE, use_pallas=backend,
+                              stream_chunks=chunks)
+    outs_d = _run_exchange(cfg, "dense")
+    outs_c = _run_exchange(cfg, "compressed")
+    for step, (od, oc) in enumerate(zip(outs_d, outs_c)):
+        for k in od:
+            assert np.array_equal(od[k], oc[k]), (backend, chunks, step, k)
+            # W=1: the merge is the identity on the only source's payload
+            want = _a2a_payload(seed=step)[k][0]
+            np.testing.assert_array_equal(od[k], want, err_msg=str((step, k)))
+
+
+def test_exchange_backend_parity_bitwise():
+    outs = {b: _run_exchange(dataclasses.replace(A2A_BASE, use_pallas=b),
+                             "compressed")
+            for b in ("never", "always")}
+    for step, (on, oa) in enumerate(zip(outs["never"], outs["always"])):
+        for k in on:
+            assert np.array_equal(on[k], oa[k]), (step, k)
+
+
+def test_exchange_rejects_bloom_index():
+    cfg = dataclasses.replace(A2A_BASE, index="bloom")
+    mesh = make_mesh((1,), ("data",))
+    exchange = make_exchange("compressed", cfg, mesh, ("data",),
+                             outer_manual=("data",))
+    with pytest.raises(ValueError, match="bitmap"):
+        exchange(jax.tree.map(jnp.asarray, _a2a_payload(0)))

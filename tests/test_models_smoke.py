@@ -69,6 +69,65 @@ def test_published_param_counts():
         assert lo <= n <= hi, f"{name}: {n/1e9:.2f}B outside [{lo},{hi}]"
 
 
+def test_hybrid_moe_cadence_follows_config():
+    """PR 8 satellite: the hybrid family's MoE cadence comes from
+    ``MoEConfig.every_k_layers`` — it was hardcoded to every-other-layer,
+    so only jamba's k=2 counted correctly.  Pin jamba-style analytic
+    counts at k=3 against a by-hand sum, and check init agrees with the
+    analytic count at a non-default cadence too."""
+    import dataclasses
+    from repro.models.config import ModelConfig, MoEConfig, SSMConfig
+
+    base = get_arch("jamba-v0.1-52b").model
+    assert base.moe.every_k_layers == 2
+
+    def expect(cfg):
+        # independent recomputation: every_k=k -> MoE on layers with
+        # l % k == k - 1, dense FFN elsewhere
+        k = cfg.moe.every_k_layers
+        n_moe = sum(1 for l in range(cfg.n_layers) if l % k == k - 1)
+        m = cfg.moe
+        moe_p = (cfg.d_model * m.num_experts
+                 + (m.num_experts + m.shared_experts)
+                 * 3 * cfg.d_model * m.expert_d_ff)
+        dense_p = 3 * cfg.d_model * cfg.d_ff
+        # swap cadences against the k=1 (all-MoE) reference
+        all_moe = dataclasses.replace(cfg, moe=dataclasses.replace(
+            m, every_k_layers=1))
+        return all_moe.param_count() - (cfg.n_layers - n_moe) * (
+            moe_p - dense_p)
+
+    for k in (1, 2, 3, 4):
+        cfg = dataclasses.replace(base, moe=dataclasses.replace(
+            base.moe, every_k_layers=k))
+        assert cfg.param_count() == expect(cfg), f"k={k}"
+    # k=3 on a 32-layer model: 10 MoE layers, not 16
+    cfg3 = dataclasses.replace(base, moe=dataclasses.replace(
+        base.moe, every_k_layers=3))
+    assert cfg3.param_count() < base.param_count()
+    assert cfg3.active_param_count() < base.active_param_count()
+
+    # init must lay down MoE params exactly where the analytic count
+    # assumes: smoke-size hybrid, k=3, superblock of 6
+    smoke = dataclasses.replace(
+        get_arch("jamba-v0.1-52b").smoke, n_layers=6, attn_period=6,
+        attn_offset=1,
+        moe=dataclasses.replace(get_arch("jamba-v0.1-52b").smoke.moe,
+                                every_k_layers=3))
+    params = model_api(smoke).init(jax.random.PRNGKey(0))
+    sup = params["superblocks"]
+    moe_pos = sorted(int(k[3:]) for k in sup if "moe" in sup[k])
+    assert moe_pos == [2, 5], moe_pos
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    # embedding uses the 128-padded vocab, and the analytic SSM block is
+    # a close approximation — allow 1% while still catching a cadence
+    # mismatch (one swapped MoE/dense FFN here is a ~25% shift)
+    pad = (smoke.padded_vocab - smoke.vocab) * smoke.d_model
+    pad *= 1 if smoke.tie_embeddings else 2
+    assert abs(n_params - (smoke.param_count() + pad)) < 0.01 * n_params, \
+        (n_params, smoke.param_count(), pad)
+
+
 def test_moe_active_params():
     a = get_arch("kimi-k2-1t-a32b").model
     assert 30e9 <= a.active_param_count() <= 38e9

@@ -103,6 +103,56 @@ def test_plan_from_assignments_coalesces():
 
 
 # ----------------------------------------------------------------------
+# The pattern axis (PR 8)
+# ----------------------------------------------------------------------
+
+def test_pattern_wires_and_exchange_registry_in_sync():
+    from repro.core.aggregators import EXCHANGES
+    from repro.core.wireplan import PATTERNS, pattern_wires
+    assert set(PATTERNS) == {"allreduce", "alltoall"}
+    assert pattern_wires("allreduce") == WIRES
+    assert set(pattern_wires("alltoall")) == set(EXCHANGES)
+    with pytest.raises(ValueError, match="unknown pattern"):
+        pattern_wires("broadcast")
+
+
+def test_group_rejects_pattern_incapable_wire():
+    # RS/innet wires are reduce-tree refinements of all-reduce; they have
+    # no permute analogue and must be rejected on the alltoall pattern
+    for wire in ("compressed_rs", "compressed_innet"):
+        with pytest.raises(ValueError,
+                           match=f"wire '{wire}' cannot run the 'alltoall'"):
+            WireGroup(0, 2, wire, pattern="alltoall")
+    with pytest.raises(ValueError, match="unknown pattern"):
+        WireGroup(0, 2, "dense", pattern="gossip")
+    # the capable pair is accepted
+    assert WireGroup(0, 2, "dense", pattern="alltoall").pattern == "alltoall"
+    assert WireGroup(0, 2, "compressed", pattern="alltoall").stop == 2
+
+
+def test_plan_rejects_mixed_patterns():
+    groups = (WireGroup(0, 3, "compressed"),
+              WireGroup(3, 3, "compressed", pattern="alltoall"))
+    with pytest.raises(ValueError,
+                       match="must be single-pattern.*allreduce or the "
+                             "alltoall shape"):
+        WirePlan(6, groups)
+
+
+def test_uniform_plan_pattern_and_describe():
+    p = uniform_plan(6, "compressed", pattern="alltoall")
+    assert p.pattern == "alltoall"
+    assert p.describe().endswith("@alltoall")
+    # default stays allreduce and existing describe() output is unchanged
+    q = uniform_plan(6, "compressed")
+    assert q.pattern == "allreduce"
+    assert "@" not in q.describe()
+    # positional back-compat: pattern rides after stream_chunks
+    g = WireGroup(0, 6, "compressed", 3, "alltoall")
+    assert g.stream_chunks == 3 and g.pattern == "alltoall"
+
+
+# ----------------------------------------------------------------------
 # BucketPlan.group_view / StreamPlan.base_block (the execute-side seams)
 # ----------------------------------------------------------------------
 
