@@ -1,0 +1,212 @@
+"""Elastic aggregation benchmark (PR 9): synchronous barrier vs async
+sketch-fold at intermittent-client cohorts.
+
+The paper's aggregation point never decompresses in flight: sketches
+merge by integer/float add and bitmaps by OR, so a payload can be folded
+the moment it arrives. This benchmark measures what that buys once
+clients arrive at different times (Poisson arrivals + injected
+stragglers via ``ft.failures.FailureSimulator``): the **barrier** arm
+holds every payload until the last arrival and then folds all W of them
+(the synchronous psum shape), while the **async** arm folds each payload
+on arrival, leaving only one fold + finalize after the last arrival.
+Both arms run the *same* ``FoldEngine`` code and must produce bitwise
+identical streams — the contrast is purely *when* the fold work happens.
+
+Fold throughput is normalized to the close-out tail: folded bytes
+divided by the compute remaining after the last folded arrival. That is
+the round's critical path — arrival gaps hide the async arm's folds but
+cannot hide the barrier's — and it is robust to timer noise (the barrier
+tail carries W measured folds vs the async arm's one).
+
+Writes ``BENCH_elastic.json`` and enforces the CI gate in-process:
+async fold throughput must strictly exceed the barrier baseline at
+cohort >= 64.
+
+    PYTHONPATH=src python benchmarks/elastic.py --json BENCH_elastic.json
+"""
+import argparse
+import dataclasses
+import json
+import time
+
+import numpy as np
+
+from repro.core.bucketing import make_bucket_plan
+from repro.core.config import CompressionConfig
+from repro.elastic import ElasticClient, FoldEngine, negotiate_contract
+from repro.ft.failures import FailureSimulator, SwitchRetransmitPolicy
+
+CFG = CompressionConfig(ratio=1.0, lanes=128, rows=6, rounds=10,
+                        chunk_blocks=8, topk_ratio=0.1, topk_exact=True,
+                        error_feedback=True, bucket_bytes=2 * 768 * 4)
+SHAPES = {"w": (4000,)}
+TEMPLATE = {k: np.zeros(sh, np.float32) for k, sh in SHAPES.items()}
+POOL = 4          # distinct encoded payloads, reused cyclically: setup
+                  # stays O(1) while the fold loop still sees W clients
+
+
+def _grad_tree(seed):
+    r = np.random.default_rng(seed)
+    return {k: r.normal(0, 1, sh).astype(np.float32)
+            for k, sh in SHAPES.items()}
+
+
+def _payload_pool(contract, cfg):
+    """POOL distinct payloads; cohort slot w reuses pool[w % POOL]."""
+    clients = [ElasticClient(w, cfg) for w in range(POOL)]
+    if cfg.wire_dtype == "fxp32":
+        props = [clients[w].propose(contract, _grad_tree(w))
+                 for w in range(POOL)]
+        shared = props[0].exponents
+        for p in props[1:]:
+            shared = np.maximum(shared, p.exponents)
+        pool = [clients[w].payload(
+            contract, dataclasses.replace(
+                props[w], exponents=np.asarray(shared)).exponents)
+            for w in range(POOL)]
+        return pool, [p.exponents for p in props], np.asarray(shared)
+    pool = [clients[w].contribute(contract, _grad_tree(w))
+            for w in range(POOL)]
+    return pool, None, None
+
+
+def _arrivals(workers, sim, deadline):
+    """Poisson arrival times + injected straggler delays; returns
+    (arrival_s per client, folded client list in arrival order,
+    deferred client list)."""
+    rng = np.random.default_rng(workers)
+    base = rng.exponential(scale=0.002, size=workers).cumsum()
+    arr = np.array([base[w] + sim.client_delay(0, w)
+                    for w in range(workers)])
+    folded = sorted((w for w in range(workers) if arr[w] <= deadline),
+                    key=lambda w: arr[w])
+    deferred = [w for w in range(workers) if arr[w] > deadline]
+    return arr, folded, deferred
+
+
+def _run_arm(engine, pool, order, delays, proposals, shared):
+    """Fold `order` into a fresh state, timing each fold; returns
+    (stream, per-fold seconds, finalize seconds, retransmits).
+
+    ``delays[w]`` is the client's *lateness* into its aggregation window
+    (the injected straggle), which is what the retransmit policy prices
+    — not the absolute Poisson arrival time.
+    """
+    policy = SwitchRetransmitPolicy(timeout_s=0.05, max_retries=64)
+    st = engine.init_state()
+    if proposals is not None:
+        for w in order:
+            engine.propose_exponents(st, w, proposals[w % POOL])
+        sealed = engine.seal_exponents(st)
+        assert np.array_equal(np.asarray(sealed), shared)
+    fold_s = []
+    for w in order:
+        p = dataclasses.replace(pool[w % POOL], client=w)
+        t0 = time.perf_counter()
+        engine.fold(st, p, arrival_s=float(delays[w]), policy=policy)
+        fold_s.append(time.perf_counter() - t0)
+    t0 = time.perf_counter()
+    stream = engine.finalize(st)
+    return stream, fold_s, time.perf_counter() - t0, st.retransmits
+
+
+def bench_cohort(workers, cfg=CFG):
+    plan = make_bucket_plan(TEMPLATE, cfg)
+    contract = negotiate_contract(0, range(workers), plan, cfg)
+    engine = FoldEngine(contract, cfg)
+    pool, proposals, shared = _payload_pool(contract, cfg)
+    payload_bytes = pool[0].nbytes
+
+    # one mid-delay straggler (pays retransmits, still folds) and one
+    # past-deadline straggler (deferred into the next round's residual)
+    deadline = 0.002 * workers + 0.25
+    sim = FailureSimulator(straggle_s=((1 % workers, 0.12),),
+                           straggle_at=((0, 2 % workers, deadline + 1.0),))
+    arrivals, folded, deferred = _arrivals(workers, sim, deadline)
+    last_arrival = max(arrivals[w] for w in folded)
+    delays = [sim.client_delay(0, w) for w in range(workers)]
+
+    # warmup: compile/caches for fold + finalize (recover's peel is
+    # jitted), so both timed arms see steady-state costs; cover every
+    # pool slot so the fxp32 warm round seals the pool-wide exponents
+    warm, seen = [], set()
+    for w in folded:
+        if w % POOL not in seen:
+            seen.add(w % POOL)
+            warm.append(w)
+    _run_arm(engine, pool, warm, delays, proposals, shared)
+
+    out_async, folds_a, fin_a, retr_a = _run_arm(
+        engine, pool, folded, delays, proposals, shared)
+    out_barrier, folds_b, fin_b, retr_b = _run_arm(
+        engine, pool, folded, delays, proposals, shared)
+    assert np.array_equal(out_async, out_barrier), \
+        "async fold and barrier fold must be the same aggregate"
+    assert retr_a == retr_b and retr_a > 0, "straggler must pay retransmits"
+
+    folded_bytes = payload_bytes * len(folded)
+    # fold tail: fold compute still pending after the last folded
+    # arrival. Async: one fold (arrival gaps hid the rest); barrier:
+    # all of them. The finalize pass is identical in both arms and
+    # lands in close-out latency, not fold throughput — so the gate
+    # margin is ~W x and cannot flip on timer noise.
+    tail_async = folds_a[-1]
+    tail_barrier = sum(folds_b)
+
+    def arm(tail, fin):
+        return {"fold_tail_s": round(tail, 6),
+                "finalize_s": round(fin, 6),
+                "close_out_latency_s": round(float(last_arrival)
+                                             + tail + fin, 4),
+                "fold_throughput_bytes_per_s": round(
+                    folded_bytes / tail)}
+
+    row = {"workers": workers, "wire": cfg.wire_dtype,
+           "payload_bytes": payload_bytes,
+           "folded": len(folded), "deferred": len(deferred),
+           "retransmits": retr_a,
+           "last_arrival_s": round(float(last_arrival), 4),
+           "async": arm(tail_async, fin_a),
+           "barrier": arm(tail_barrier, fin_b)}
+    print(f"W={workers:4d} {cfg.wire_dtype:5s} folded={len(folded):4d} "
+          f"deferred={len(deferred)} retransmits={retr_a:3d} | "
+          f"async fold tail {tail_async*1e6:8.1f}us vs barrier "
+          f"{tail_barrier*1e6:9.1f}us -> {tail_barrier/tail_async:6.1f}x")
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default="BENCH_elastic.json")
+    ap.add_argument("--cohorts", type=int, nargs="*",
+                    default=[8, 64, 512])
+    args = ap.parse_args()
+
+    rows = [bench_cohort(w) for w in args.cohorts]
+    # fxp32 leg: same contrast over the integer wire at the base cohort
+    fxp_row = bench_cohort(8, dataclasses.replace(CFG, wire_dtype="fxp32"))
+
+    payload = {"schema": 1, "cohorts": {str(r["workers"]): r
+                                        for r in rows},
+               "fxp32": fxp_row}
+    with open(args.json, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {args.json}")
+
+    # CI gate (also re-checked from the artifact by the workflow):
+    # at cohort >= 64 the async fold must strictly beat the barrier.
+    for r in rows:
+        if r["workers"] >= 64:
+            a = r["async"]["fold_throughput_bytes_per_s"]
+            b = r["barrier"]["fold_throughput_bytes_per_s"]
+            if not a > b:
+                raise SystemExit(
+                    f"GATE FAIL: async fold throughput {a} <= barrier "
+                    f"{b} at cohort {r['workers']}")
+            print(f"GATE OK: W={r['workers']} async {a:.3g} B/s > "
+                  f"barrier {b:.3g} B/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -186,13 +186,16 @@ def _local_shape(shape, spec, mesh):
     return tuple(sz // div(i) for i, sz in enumerate(shape))
 
 
-def _sparsify_leaf(flat: jnp.ndarray, res: jnp.ndarray,
-                   cfg: CompressionConfig):
+def sparsify_leaf(flat: jnp.ndarray, res: jnp.ndarray,
+                  cfg: CompressionConfig):
     """Per-leaf phase-0: top-k budget + error feedback on one flat leaf.
 
     Identical math to the per-leaf path this layer replaced (pinned
     bit-for-bit by the collectives driver): k is proportional to *this
-    leaf's* (shard-local) element count.
+    leaf's* (shard-local) element count. Public because the elastic
+    client (``repro.elastic.client``) must sparsify with exactly these
+    semantics for its folds to be bit-identical to the in-mesh
+    strategies.
     """
     new_res = res
     if cfg.topk_ratio is not None:
@@ -205,6 +208,9 @@ def _sparsify_leaf(flat: jnp.ndarray, res: jnp.ndarray,
         else:
             flat = topk_lib.sparsify_threshold(flat, k)
     return flat, new_res
+
+
+_sparsify_leaf = sparsify_leaf      # internal call sites / back-compat
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,48 @@
+"""Elastic aggregation service (PR 9): async sketch-fold for
+intermittent many-client training.
+
+The fixed-mesh aggregators (``core/aggregators.py``) assume W SPMD
+ranks that all arrive at the collective together. This package is the
+parameter-server-shaped tier for the ROADMAP's "millions of users"
+regime: an open population of clients whose payloads *fold* into an
+aggregation point as they arrive — which the paper's homomorphic wire
+makes possible without barriers and without ever decompressing:
+
+- :mod:`repro.elastic.membership` — roster + the per-round
+  :class:`RoundContract` handshake. Membership changes renegotiate the
+  wire each round (the fxp32 mantissa budget is W-dependent:
+  ``30 - ceil_log2(W)``); stale-contract payloads are rejected or
+  re-encoded, never silently folded.
+- :mod:`repro.elastic.fold` — the incremental fold engine: sketch add
+  + bitmap OR + contribution counter, O(1) aggregation state in the
+  cohort size, streamed through the ``SwitchModel`` slot pool
+  (bounded in-flight buckets, per-client RX accounting, int32
+  overflow checks on fxp32), recovered through the one-consumer
+  ``kernels/ops`` contract.
+- :mod:`repro.elastic.server` / :mod:`repro.elastic.client` — round
+  orchestration: admission (continuous-batcher slot shape),
+  quorum/deadline close-out, straggler timeout/retransmit via
+  ``ft/failures.py``, and late payloads carried into the *next*
+  round's error-feedback residual rather than dropped.
+
+Fold-equivalence is pinned bit-for-bit against the fixed-mesh
+``compressed`` strategy (f32) and ``FixedPointWire.roundtrip_reference``
+(fxp32) by ``tests/drivers/collectives_driver.py``;
+``benchmarks/elastic.py`` measures async fold vs the synchronous
+barrier baseline.
+"""
+
+from .membership import (ClientPayload, ExponentProposal, Membership,
+                         RoundContract, StaleContractError,
+                         negotiate_contract)
+from .fold import FoldEngine, FoldError, FoldState
+from .client import ElasticClient
+from .server import (AdmissionPolicy, ElasticServer, QuorumNotReached,
+                     RoundReport)
+
+__all__ = [
+    "AdmissionPolicy", "ClientPayload", "ElasticClient", "ElasticServer",
+    "ExponentProposal", "FoldEngine", "FoldError", "FoldState",
+    "Membership", "QuorumNotReached", "RoundContract", "RoundReport",
+    "StaleContractError", "negotiate_contract",
+]

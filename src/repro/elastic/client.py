@@ -1,0 +1,176 @@
+"""Elastic client: sparsify + EF + compress, re-encode on renegotiation.
+
+The client side of the PR 9 round protocol:
+
+1. ``propose(contract, grads)`` — per-leaf top-k + error feedback
+   (*exactly* the fixed-mesh aggregators' :func:`sparsify_leaf`, so the
+   residual semantics match the in-mesh strategies bit-for-bit), pack
+   through the shared :class:`BucketPlan` geometry, and run ONE fused
+   ``compress_wire`` producer pass. On the fxp32 wire this returns the
+   client's :class:`ExponentProposal` (per-bucket exponents from the
+   producer's per-block maxabs byproduct — max-of-maxes is exact);
+   the f32 wire has no phase A and returns ``None``.
+2. ``payload(contract, shared_exponents)`` — stamp the cached sketch
+   with the round contract; fxp32 quantizes the cached f32 sketch
+   against the *sealed* shared exponents (a sketch-sized op, not a
+   stream pass — mirroring the in-mesh quantize-post-pmax order).
+
+Error feedback is applied once, at ``propose`` time: the sparsified
+values *will* reach the aggregate (on time, or via the server's
+deferred-residual path), so the residual must not be re-charged if the
+round closes before this client lands. ``reencode(new_contract)``
+therefore re-stamps the *cached* compressed payload under a new
+contract without touching EF — the recovery move after a
+:class:`StaleContractError`.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.aggregators import sparsify_leaf
+from repro.core.bucketing import make_bucket_plan
+from repro.core.compressor import HomomorphicCompressor
+from repro.core.config import CompressionConfig
+
+from .membership import (ClientPayload, ExponentProposal, RoundContract,
+                         StaleContractError)
+
+
+class ElasticClient:
+    """One intermittent training client."""
+
+    def __init__(self, client: int, cfg: CompressionConfig):
+        self.client = int(client)
+        self.cfg = cfg
+        self.comp = HomomorphicCompressor(cfg)
+        self._plan = None
+        self._residual = None        # pytree leaves, flat f32 (EF state)
+        self._cache = None           # dict: one encoded round payload
+
+    # ------------------------------------------------------------------
+
+    @property
+    def residual(self):
+        """Per-leaf EF residual pytree (None before the first propose)."""
+        if self._plan is None or self._residual is None:
+            return None
+        import jax
+        leaves = [np.asarray(r).reshape(sh) for r, sh in
+                  zip(self._residual, self._plan.shapes)]
+        return jax.tree.unflatten(self._plan.treedef, leaves)
+
+    def _check_geometry(self, contract: RoundContract) -> None:
+        p = self._plan
+        if (p.n_buckets, p.bucket_elems, p.total) != \
+                (contract.n_buckets, contract.bucket_elems,
+                 contract.total_elems):
+            raise ValueError(
+                f"client plan ({p.n_buckets}x{p.bucket_elems}/{p.total}) "
+                f"does not match contract geometry "
+                f"({contract.n_buckets}x{contract.bucket_elems}"
+                f"/{contract.total_elems})")
+
+    # ---- phase A ------------------------------------------------------
+
+    def propose(self, contract: RoundContract,
+                grads: Any) -> Optional[ExponentProposal]:
+        """Sparsify (EF), compress, cache the wire payload; fxp32
+        returns the exponent proposal for the server's max-fold."""
+        if self._plan is None:
+            self._plan = make_bucket_plan(grads, self.cfg)
+        self._check_geometry(contract)
+        plan = self._plan
+        leaves = plan.treedef.flatten_up_to(grads)
+        if self._residual is None:
+            self._residual = [jnp.zeros((n,), jnp.float32)
+                              for n in plan.sizes]
+        sparse, new_res = [], []
+        for leaf, res in zip(leaves, self._residual):
+            flat = jnp.asarray(leaf).reshape(-1).astype(jnp.float32)
+            sp, nr = sparsify_leaf(flat, res, self.cfg)
+            sparse.append(sp)
+            new_res.append(nr)
+        self._residual = new_res
+        stream = plan.pack_flat(sparse)
+        comp, maxabs = self.comp.compress_wire(stream.reshape(-1))
+        bucket_max = np.asarray(maxabs).reshape(
+            plan.n_buckets, -1).max(axis=1)
+        self._cache = {
+            "contract_id": contract.contract_id,
+            "sketch": np.asarray(comp.sketch),        # f32, pre-quantize
+            "index_words": np.asarray(comp.index_words),
+            "bucket_max": bucket_max,
+        }
+        return self._proposal_from_cache(contract)
+
+    def reencode(self, contract: RoundContract
+                 ) -> Optional[ExponentProposal]:
+        """Re-stamp the cached payload under a new contract — EF is NOT
+        re-applied (the sparsified values were never delivered, so the
+        residual charge from ``propose`` still stands). The fxp32
+        proposal is re-derived from the cached maxima under the new
+        cohort's wire, which re-prices the mantissa budget."""
+        if self._cache is None:
+            raise StaleContractError(
+                f"client {self.client} has nothing to re-encode — call "
+                "propose() first")
+        self._check_geometry(contract)
+        self._cache["contract_id"] = contract.contract_id
+        return self._proposal_from_cache(contract)
+
+    def _proposal_from_cache(self, contract: RoundContract
+                             ) -> Optional[ExponentProposal]:
+        if contract.wire_dtype != "fxp32":
+            return None
+        exps = np.asarray(contract.wire.exponents_from_maxabs(
+            jnp.asarray(self._cache["bucket_max"]))).astype(np.int32)
+        return ExponentProposal(client=self.client,
+                                contract_id=contract.contract_id,
+                                exponents=exps)
+
+    # ---- phase B ------------------------------------------------------
+
+    def payload(self, contract: RoundContract,
+                shared_exponents: Optional[np.ndarray] = None
+                ) -> ClientPayload:
+        """Build the wire payload for the round. fxp32 quantizes the
+        cached f32 sketch against the sealed shared exponents."""
+        if self._cache is None:
+            raise StaleContractError(
+                f"client {self.client} must propose() before payload()")
+        if self._cache["contract_id"] != contract.contract_id:
+            raise StaleContractError(
+                f"client {self.client}'s cached payload was encoded "
+                f"under {self._cache['contract_id']}, round is "
+                f"{contract.contract_id} — reencode() first")
+        sk = self._cache["sketch"]
+        if contract.wire_dtype == "fxp32":
+            if shared_exponents is None:
+                raise ValueError("fxp32 payload needs the sealed shared "
+                                 "exponents")
+            exps = np.asarray(shared_exponents).astype(np.int32)
+            q = np.asarray(contract.wire.encode(
+                jnp.asarray(sk).reshape(contract.n_buckets, -1),
+                jnp.asarray(exps))).reshape(sk.shape)
+            return ClientPayload(
+                client=self.client, contract_id=contract.contract_id,
+                sketch=q, index_words=self._cache["index_words"],
+                exponents=exps)
+        return ClientPayload(
+            client=self.client, contract_id=contract.contract_id,
+            sketch=sk, index_words=self._cache["index_words"])
+
+    def contribute(self, contract: RoundContract, grads: Any
+                   ) -> ClientPayload:
+        """f32 convenience: propose + payload in one call (the f32 wire
+        has no exponent phase to wait on)."""
+        if contract.wire_dtype != "f32":
+            raise ValueError(
+                "contribute() is the single-phase f32 path; fxp32 "
+                "rounds go propose() -> seal -> payload()")
+        self.propose(contract, grads)
+        return self.payload(contract)

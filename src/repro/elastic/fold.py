@@ -1,0 +1,333 @@
+"""Asynchronous sketch-fold engine (PR 9).
+
+The paper's wire format is homomorphic — sketches merge by addition,
+bitmaps by OR — so an aggregation point can *fold* payloads one at a
+time, as they arrive, without barriering on the cohort and without ever
+decompressing. This module is that fold:
+
+- :meth:`FoldEngine.fold` is incremental: sketch add + bitmap OR +
+  contribution counter. The aggregation state is **O(1) in the cohort
+  size** — one payload-shaped accumulator per round, whether 8 clients
+  contribute or 8000 (per-client RX byte counters are telemetry, not
+  aggregation state).
+- Streaming-window mode: each fold runs through a
+  :class:`repro.net.switch.SwitchModel` slot pool (fxp32) or an
+  equivalent windowed loop (f32), so at most ``window_slots`` bucket
+  chunks are in flight at once — the switch SRAM bound is the
+  backpressure model — with the switch's running-partial int32
+  overflow check live on every fxp32 window.
+- :meth:`FoldEngine.finalize` recovers the folded stream through the
+  existing one-consumer contract: a single
+  ``HomomorphicCompressor.recover`` call, with the fxp32 dequant folded
+  into the fused consumer pass (``dequant=(exponents, mantissa_bits)``).
+
+fxp32 rounds are two-phase, mirroring the in-mesh ``pmax`` → encode
+order of the ``compressed_innet`` strategy: clients first propose
+per-bucket exponents (max-folds — order-free), the server seals the
+elementwise max, and only then do clients quantize and ship int32
+sketches. The folded integers therefore equal
+``FixedPointWire.roundtrip_reference`` bit-for-bit for any arrival
+order — integer adds are exact in every association order.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Set
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.blocks import make_plan
+from repro.core.compressor import CompressedLeaf, HomomorphicCompressor
+from repro.core.config import CompressionConfig
+from repro.ft.failures import SwitchRetransmitPolicy
+from repro.net.switch import SwitchModel
+
+from .membership import ClientPayload, RoundContract, StaleContractError
+
+
+class FoldError(RuntimeError):
+    """A payload that can never be folded into this round (duplicate
+    client, unknown client, oversubscribed cohort, wrong geometry)."""
+
+
+@dataclasses.dataclass
+class FoldState:
+    """One round's aggregation state.
+
+    ``sketch`` / ``index_words`` / ``exponents`` are payload-shaped —
+    O(1) in the cohort size. ``clients`` / ``rx_bytes`` are per-client
+    *telemetry* (who contributed, what the wire carried), not inputs to
+    the aggregate.
+    """
+
+    contract: RoundContract
+    sketch: np.ndarray               # (n_blocks, rows, lanes) f32|int32
+    index_words: np.ndarray          # (n_buckets, words_per_bucket) u32
+    exponents: Optional[np.ndarray]  # sealed shared exps (fxp32)
+    exp_acc: Optional[np.ndarray]    # running max during phase A
+    exp_clients: Set[int] = dataclasses.field(default_factory=set)
+    contributions: int = 0
+    clients: Set[int] = dataclasses.field(default_factory=set)
+    rx_bytes: Dict[int, int] = dataclasses.field(default_factory=dict)
+    retransmits: int = 0
+    windows: int = 0
+    occupancy_peak: int = 0
+
+
+class FoldEngine:
+    """Per-round async fold over one :class:`RoundContract`."""
+
+    def __init__(self, contract: RoundContract, cfg: CompressionConfig,
+                 window_slots: Optional[int] = None):
+        if cfg.wire_dtype != contract.wire_dtype:
+            raise ValueError(
+                f"config wire_dtype {cfg.wire_dtype!r} != contract "
+                f"{contract.wire_dtype!r}")
+        if contract.bucket_elems % cfg.block_elems:
+            raise ValueError(
+                f"bucket_elems {contract.bucket_elems} is not a whole "
+                f"number of sketch blocks ({cfg.block_elems})")
+        self.contract = contract
+        self.cfg = cfg
+        self.comp = HomomorphicCompressor(cfg)
+        self.window_slots = int(window_slots or cfg.switch_slots)
+        if self.window_slots < 1:
+            raise ValueError(
+                f"window_slots must be >= 1, got {self.window_slots}")
+        # static stream geometry, shared with every client's compressor
+        self.padded = contract.n_buckets * contract.bucket_elems
+        splan = make_plan(self.padded, cfg)
+        self.blocks_per_bucket = contract.bucket_elems // cfg.block_elems
+        self.n_blocks = splan.nb
+        self.sketch_shape = (splan.nb, cfg.rows, cfg.lanes)
+        self.words_per_bucket = contract.bucket_elems // 32
+        self.n_words = self.padded // 32
+        self.fxp32 = contract.wire_dtype == "fxp32"
+        # the slot pool: 2 ports (resident accumulator + the arriving
+        # payload), window_slots resident bucket chunks — the switch's
+        # windowing, occupancy accounting and running-partial int32
+        # register check all apply to every incremental fxp32 fold
+        self._switch = SwitchModel(ports=2, slots=self.window_slots) \
+            if self.fxp32 else None
+        # the engine's geometry is fixed for the round, so the recover
+        # pass compiles once and every finalize/decode hits the cache —
+        # recover called eagerly re-dispatches its fused consumer every
+        # time, which dominates the round close-out tail
+        if self.fxp32:
+            self._recover_jit = jax.jit(
+                lambda sk, wd, exps: self.comp.recover(
+                    CompressedLeaf(sketch=sk, index_words=wd),
+                    self.padded,
+                    dequant=(exps, self.contract.mantissa_bits)))
+        else:
+            self._recover_jit = jax.jit(
+                lambda sk, wd: self.comp.recover(
+                    CompressedLeaf(sketch=sk, index_words=wd),
+                    self.padded))
+
+    # ------------------------------------------------------------------
+
+    def init_state(self) -> FoldState:
+        dt = np.int32 if self.fxp32 else np.float32
+        return FoldState(
+            contract=self.contract,
+            sketch=np.zeros(self.sketch_shape, dt),
+            index_words=np.zeros(
+                (self.contract.n_buckets, self.words_per_bucket),
+                np.uint32),
+            exponents=None,
+            exp_acc=None)
+
+    # ---- phase A (fxp32): exponent negotiation -----------------------
+
+    def propose_exponents(self, state: FoldState, client: int,
+                          exponents: np.ndarray,
+                          contract_id: Optional[str] = None) -> None:
+        """Max-fold one client's per-bucket exponent proposal.
+
+        Homomorphic like the sketch itself (max is associative and
+        commutative), so proposals fold in any arrival order.
+        """
+        if not self.fxp32:
+            raise FoldError("the f32 wire negotiates no exponents")
+        if contract_id is not None and \
+                contract_id != self.contract.contract_id:
+            raise StaleContractError(
+                f"proposal quotes {contract_id}, round is "
+                f"{self.contract.contract_id}")
+        client = int(client)
+        if client not in self.contract.cohort:
+            raise FoldError(
+                f"client {client} is not in this round's cohort")
+        if client in state.exp_clients:
+            raise FoldError(f"client {client} already proposed exponents")
+        if state.exponents is not None:
+            raise FoldError("exponents already sealed for this round")
+        e = np.asarray(exponents)
+        if e.shape != (self.contract.n_buckets,) or e.dtype != np.int32:
+            raise FoldError(
+                f"exponent proposal must be ({self.contract.n_buckets},) "
+                f"int32, got {e.shape} {e.dtype}")
+        state.exp_acc = e.copy() if state.exp_acc is None \
+            else np.maximum(state.exp_acc, e)
+        state.exp_clients.add(client)
+
+    def seal_exponents(self, state: FoldState) -> np.ndarray:
+        """Freeze the shared exponents (elementwise max of proposals);
+        every payload must be quantized against exactly this vector."""
+        if not self.fxp32:
+            raise FoldError("the f32 wire negotiates no exponents")
+        if state.exp_acc is None:
+            raise FoldError("no exponent proposals to seal")
+        if state.exponents is None:
+            state.exponents = state.exp_acc.copy()
+        return state.exponents
+
+    # ---- phase B: the fold -------------------------------------------
+
+    def fold(self, state: FoldState, payload: ClientPayload,
+             arrival_s: float = 0.0,
+             policy: Optional[SwitchRetransmitPolicy] = None) -> int:
+        """Fold one payload into the round: sketch add + bitmap OR +
+        contribution counter. Returns the retransmit count the arrival
+        cost under ``policy`` (0 without one).
+
+        Raises :class:`StaleContractError` for a payload quoting another
+        contract (or, on fxp32, quantized against non-sealed exponents)
+        and :class:`repro.ft.failures.SwitchStragglerTimeout` — state
+        untouched — when the arrival delay blows the retransmit budget.
+        """
+        if payload.contract_id != self.contract.contract_id:
+            raise StaleContractError(
+                f"payload quotes {payload.contract_id}, round is "
+                f"{self.contract.contract_id} — re-encode under the "
+                "current contract")
+        client = int(payload.client)
+        if client not in self.contract.cohort:
+            raise FoldError(
+                f"client {client} is not in this round's cohort")
+        if client in state.clients:
+            raise FoldError(
+                f"client {client} already contributed this round")
+        if state.contributions >= self.contract.workers:
+            raise FoldError(
+                f"{state.contributions} payloads already folded on a "
+                f"wire sized for {self.contract.workers} workers "
+                "(overflow bound would not hold)")
+        sk = np.asarray(payload.sketch)
+        wd = np.asarray(payload.index_words)
+        want_dt = np.int32 if self.fxp32 else np.float32
+        if sk.shape != self.sketch_shape or sk.dtype != want_dt:
+            raise FoldError(
+                f"sketch must be {self.sketch_shape} "
+                f"{np.dtype(want_dt).name}, got {sk.shape} {sk.dtype}")
+        if wd.shape != (self.n_words,) or wd.dtype != np.uint32:
+            raise FoldError(
+                f"index_words must be ({self.n_words},) uint32, got "
+                f"{wd.shape} {wd.dtype}")
+        if self.fxp32:
+            if state.exponents is None:
+                raise StaleContractError(
+                    "fxp32 payload before the shared exponents were "
+                    "sealed — nothing to verify the quantization against")
+            if payload.exponents is None or not np.array_equal(
+                    np.asarray(payload.exponents), state.exponents):
+                raise StaleContractError(
+                    f"client {client}'s payload was quantized against "
+                    "exponents that are not this round's sealed vector "
+                    "— re-encode")
+
+        nb = self.contract.n_buckets
+        # per-bucket chunks: the streaming unit of the slot pool
+        sk_b = sk.reshape(nb, -1)
+        wd_b = wd.reshape(nb, self.words_per_bucket)
+        acc_sk = state.sketch.reshape(nb, -1)
+        acc_wd = state.index_words
+
+        # straggler accounting first (state must stay untouched when the
+        # arrival blows the budget): the client is uniformly late, so
+        # every window of its payload pays the same delay
+        retries = 0
+        rx = payload.nbytes
+        if policy is not None and arrival_s > 0:
+            cohort_port = self.contract.cohort.index(client)
+            row_bytes = sk_b[0].nbytes + wd_b[0].nbytes
+            for w, w0 in enumerate(range(0, nb, self.window_slots)):
+                w1 = min(w0 + self.window_slots, nb)
+                r = policy.on_window(state.windows + w, cohort_port,
+                                     float(arrival_s),
+                                     (w1 - w0) * row_bytes)
+                retries += r
+                rx += r * (w1 - w0) * row_bytes
+
+        if self.fxp32:
+            self._switch.reset()
+            out_sk, out_wd = self._switch.aggregate(
+                np.stack([acc_sk, sk_b]), np.stack([acc_wd, wd_b]))
+            state.sketch = out_sk.reshape(self.sketch_shape)
+            state.index_words = out_wd
+            rep = self._switch.report()
+            state.windows += rep["windows"]
+            state.occupancy_peak = max(state.occupancy_peak,
+                                       rep["occupancy_peak"])
+        else:
+            # idealized float tier: same windowed slot-pool walk, plain
+            # f32 adds (a real switch can't — see net/fixedpoint.py)
+            for w0 in range(0, nb, self.window_slots):
+                w1 = min(w0 + self.window_slots, nb)
+                acc_sk[w0:w1] += sk_b[w0:w1]
+                acc_wd[w0:w1] |= wd_b[w0:w1]
+                state.windows += 1
+                state.occupancy_peak = max(state.occupancy_peak, w1 - w0)
+
+        state.contributions += 1
+        state.clients.add(client)
+        state.rx_bytes[client] = state.rx_bytes.get(client, 0) + rx
+        state.retransmits += retries
+        return retries
+
+    # ---- recovery ----------------------------------------------------
+
+    def finalize(self, state: FoldState) -> np.ndarray:
+        """Recover the folded *sum* stream: ONE consumer call
+        (``HomomorphicCompressor.recover``), fxp32 dequant folded in via
+        ``dequant=(per_block_exponents, mantissa_bits)``. Returns
+        ``(n_buckets, bucket_elems)`` f32."""
+        if state.contributions == 0:
+            raise FoldError("nothing folded — cannot finalize")
+        sk = jnp.asarray(state.sketch)
+        wd = jnp.asarray(state.index_words.reshape(-1))
+        if self.fxp32:
+            if state.exponents is None:
+                raise FoldError("fxp32 round closed without sealed "
+                                "exponents")
+            rec = self._recover_jit(
+                sk, wd, jnp.asarray(
+                    np.repeat(state.exponents, self.blocks_per_bucket)))
+        else:
+            rec = self._recover_jit(sk, wd)
+        return np.asarray(rec).reshape(self.contract.n_buckets,
+                                       self.contract.bucket_elems)
+
+    def decode_payload(self, payload: ClientPayload) -> np.ndarray:
+        """Recover ONE payload on its own (used for late arrivals that
+        missed the round: their contribution is decoded and carried into
+        the next round's residual rather than dropped). The payload's
+        own sealed exponents make the single-payload dequant exact to
+        the documented roundtrip."""
+        sk = jnp.asarray(np.asarray(payload.sketch))
+        wd = jnp.asarray(np.asarray(payload.index_words).reshape(-1))
+        if self.fxp32:
+            if payload.exponents is None:
+                raise FoldError("fxp32 payload without exponents")
+            rec = self._recover_jit(
+                sk, wd, jnp.asarray(
+                    np.repeat(np.asarray(payload.exponents),
+                              self.blocks_per_bucket)))
+        else:
+            rec = self._recover_jit(sk, wd)
+        return np.asarray(rec).reshape(self.contract.n_buckets,
+                                       self.contract.bucket_elems)

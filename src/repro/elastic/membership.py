@@ -1,0 +1,242 @@
+"""Round membership + the versioned wire contract (PR 9).
+
+The elastic tier aggregates payloads from an *open* population of
+clients — joining and leaving between rounds — instead of a fixed mesh
+of W SPMD ranks. That breaks the one assumption every fixed-mesh wire
+bakes in at trace time: the fxp32 mantissa budget is W-dependent
+(``FixedPointWire.mantissa_bits = 30 - ceil_log2(W)``), so a payload
+quantized for a 4-client round is *numerically wrong* in a 5-client
+round — the decode scale is off by an exact power of two, and worse,
+the int32 overflow-freedom proof no longer holds.
+
+:class:`RoundContract` is therefore the versioned handshake: one frozen
+record per round carrying the cohort, the bucket geometry, the wire
+dtype and the fxp32 mantissa budget. Every payload quotes the
+``contract_id`` it was encoded under, and the fold engine refuses
+(:class:`StaleContractError`) anything quoting a different contract —
+stale payloads are *rejected or re-encoded, never silently folded*.
+
+:class:`Membership` owns the roster and renegotiates the contract at
+every round open; the renegotiation goes through
+:meth:`repro.net.fixedpoint.FixedPointWire.with_workers` so the mantissa
+budget always tracks the live cohort size. ``local_mesh`` is the
+device-side sizing hook: when the cohort is emulated on local devices,
+it sizes the data axis through :func:`repro.ft.failures.elastic_mesh`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.bucketing import BucketPlan
+from repro.core.config import CompressionConfig
+from repro.net.fixedpoint import FixedPointWire
+
+
+class StaleContractError(RuntimeError):
+    """A payload (or proposal) quotes a contract other than the open
+    round's — the sender must re-encode under the current contract."""
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundContract:
+    """The per-round wire handshake (frozen, hashable).
+
+    ``mantissa_bits`` is *derived state*: it must equal the
+    ``FixedPointWire`` budget for ``len(cohort)`` workers (validated at
+    construction) — it is carried explicitly so the contract id, which
+    every payload quotes, changes whenever a membership change crosses
+    a power-of-two boundary and re-prices the wire.
+    """
+
+    round_id: int
+    cohort: Tuple[int, ...]          # sorted, unique client ids
+    n_buckets: int
+    bucket_elems: int
+    total_elems: int                 # true stream elems (pre-padding)
+    wire_dtype: str                  # "f32" | "fxp32"
+    mantissa_bits: Optional[int]     # fxp32 only; None on f32
+
+    def __post_init__(self):
+        if not self.cohort:
+            raise ValueError("a round needs a non-empty cohort")
+        if tuple(sorted(set(self.cohort))) != self.cohort:
+            raise ValueError(
+                f"cohort must be sorted and unique, got {self.cohort}")
+        if self.wire_dtype not in ("f32", "fxp32"):
+            raise ValueError(f"unknown wire_dtype {self.wire_dtype!r}")
+        if self.wire_dtype == "fxp32":
+            want = FixedPointWire(workers=len(self.cohort)).mantissa_bits
+            if self.mantissa_bits != want:
+                raise ValueError(
+                    f"mantissa_bits={self.mantissa_bits} does not match "
+                    f"the FixedPointWire budget for W={len(self.cohort)} "
+                    f"({want}) — renegotiate via negotiate_contract()")
+        elif self.mantissa_bits is not None:
+            raise ValueError("f32 wire carries no mantissa budget")
+
+    @property
+    def workers(self) -> int:
+        return len(self.cohort)
+
+    @property
+    def wire(self) -> FixedPointWire:
+        """The fxp32 codec this round's payloads quantize through."""
+        if self.wire_dtype != "fxp32":
+            raise ValueError("the f32 wire has no fixed-point codec")
+        return FixedPointWire(workers=self.workers)
+
+    @property
+    def contract_id(self) -> str:
+        """Stable fingerprint every payload quotes (process-independent:
+        no salted ``hash()``). Round id + cohort size + wire pricing +
+        bucket geometry — everything the fold must agree on."""
+        m = "-" if self.mantissa_bits is None else str(self.mantissa_bits)
+        return (f"r{self.round_id}:W{self.workers}:{self.wire_dtype}:"
+                f"m{m}:{self.n_buckets}x{self.bucket_elems}"
+                f"/{self.total_elems}")
+
+
+def negotiate_contract(round_id: int, cohort, plan: BucketPlan,
+                       cfg: CompressionConfig) -> RoundContract:
+    """Build the round contract for the live cohort.
+
+    The fxp32 budget is renegotiated through ``with_workers`` — the
+    single renegotiation seam — so a cohort-size change that crosses a
+    power-of-two boundary re-prices ``mantissa_bits`` here and nowhere
+    else.
+    """
+    cohort = tuple(sorted(set(int(c) for c in cohort)))
+    mant = None
+    if cfg.wire_dtype == "fxp32":
+        mant = FixedPointWire(workers=1).with_workers(
+            len(cohort)).mantissa_bits
+    return RoundContract(
+        round_id=int(round_id), cohort=cohort, n_buckets=plan.n_buckets,
+        bucket_elems=plan.bucket_elems, total_elems=plan.total,
+        wire_dtype=cfg.wire_dtype, mantissa_bits=mant)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExponentProposal:
+    """Phase A of an fxp32 round: one client's per-bucket exponents
+    (from its local sketch maxima). Max-folds homomorphically — the
+    server may fold proposals in any arrival order."""
+
+    client: int
+    contract_id: str
+    exponents: np.ndarray            # (n_buckets,) int32
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientPayload:
+    """One client's wire payload for one round.
+
+    ``exponents`` (fxp32 only) are the *sealed shared* exponents the
+    sketch was quantized against — the fold engine verifies they match
+    the round's sealed vector bit-for-bit before integer-summing.
+    """
+
+    client: int
+    contract_id: str
+    sketch: np.ndarray               # (n_blocks, rows, lanes) f32|int32
+    index_words: np.ndarray          # (padded // 32,) uint32
+    exponents: Optional[np.ndarray] = None   # (n_buckets,) int32
+
+    @property
+    def nbytes(self) -> int:
+        n = self.sketch.nbytes + self.index_words.nbytes
+        if self.exponents is not None:
+            n += self.exponents.nbytes
+        return n
+
+
+class Membership:
+    """Explicit client roster with per-round contract renegotiation.
+
+    Joins/leaves take effect at the next :meth:`contract` call (round
+    open) — mid-round membership is frozen by the contract itself.
+    ``max_cohort`` bounds the roster; surplus joiners queue in arrival
+    order and are admitted as roster slots free up (the
+    ``ContinuousBatcher`` admission shape, applied to clients).
+    """
+
+    def __init__(self, max_cohort: Optional[int] = None):
+        if max_cohort is not None and max_cohort < 1:
+            raise ValueError(f"max_cohort must be >= 1, got {max_cohort}")
+        self.max_cohort = max_cohort
+        self._roster: set = set()
+        self._queue: List[int] = []
+
+    # ---- roster ------------------------------------------------------
+
+    @property
+    def roster(self) -> Tuple[int, ...]:
+        return tuple(sorted(self._roster))
+
+    @property
+    def queued(self) -> Tuple[int, ...]:
+        return tuple(self._queue)
+
+    def join(self, client: int) -> str:
+        """Returns ``"admitted"`` or ``"queued"`` (roster full)."""
+        client = int(client)
+        if client in self._roster or client in self._queue:
+            raise ValueError(f"client {client} already joined")
+        if self.max_cohort is not None and \
+                len(self._roster) >= self.max_cohort:
+            self._queue.append(client)
+            return "queued"
+        self._roster.add(client)
+        return "admitted"
+
+    def leave(self, client: int) -> None:
+        client = int(client)
+        if client in self._roster:
+            self._roster.discard(client)
+        elif client in self._queue:
+            self._queue.remove(client)
+        else:
+            raise KeyError(f"client {client} is not a member")
+
+    def admit_queued(self) -> Tuple[int, ...]:
+        """Fill freed roster slots from the queue (called at round
+        open); returns the newly admitted clients."""
+        admitted = []
+        while self._queue and (self.max_cohort is None or
+                               len(self._roster) < self.max_cohort):
+            c = self._queue.pop(0)
+            self._roster.add(c)
+            admitted.append(c)
+        return tuple(admitted)
+
+    # ---- per-round renegotiation ------------------------------------
+
+    def contract(self, round_id: int, plan: BucketPlan,
+                 cfg: CompressionConfig) -> RoundContract:
+        if not self._roster:
+            raise ValueError("cannot open a round with an empty roster")
+        return negotiate_contract(round_id, self._roster, plan, cfg)
+
+    # ---- device-side sizing hook ------------------------------------
+
+    def local_mesh(self, model_parallel: int = 1,
+                   axis_names=("data", "model")):
+        """Size a local device mesh for this cohort.
+
+        When the elastic cohort is emulated on (or spills onto) local
+        devices, the data axis must fit both the device pool and the
+        cohort: :func:`repro.ft.failures.elastic_mesh` shrinks it to the
+        largest power of two that divides evenly — the same policy the
+        failure-recovery path uses, now driven by membership.
+        """
+        import jax
+        from repro.ft.failures import elastic_mesh
+        if not self._roster:
+            raise ValueError("cannot size a mesh for an empty roster")
+        avail = min(len(jax.devices()),
+                    len(self._roster) * model_parallel)
+        return elastic_mesh(avail, model_parallel, axis_names)

@@ -1,0 +1,269 @@
+"""Elastic aggregation server: round orchestration over the async fold.
+
+The service loop the dormant serve scaffolding
+(:class:`repro.serve.engine.ContinuousBatcher`) models for token
+requests, applied to gradient payloads:
+
+- **Admission** — a bounded roster (:class:`AdmissionPolicy.max_cohort`)
+  with a join queue drained at round open, exactly the slot-pool
+  admission shape of the continuous batcher.
+- **Round open** — membership changes take effect here: the contract is
+  renegotiated (new cohort, new fxp32 mantissa budget) and published.
+- **Submit** — payloads fold incrementally as they arrive (the
+  :class:`repro.elastic.fold.FoldEngine`), with straggler
+  timeout/retransmit accounting through
+  :class:`repro.ft.failures.SwitchRetransmitPolicy` and arrival-latency
+  outlier detection through
+  :class:`repro.ft.failures.StragglerMonitor`.
+- **Close-out** — at full attendance, or at the deadline with quorum.
+  Late payloads (past the deadline, or past the retransmit budget) are
+  **deferred, not dropped**: they are decoded individually under their
+  own (still-current) contract and carried into the *next* round's
+  output as a server-side error-feedback residual — so the accounting
+  stays loss-free across membership changes (the deferred contribution
+  re-enters even though the next round's contract may price the wire
+  differently).
+
+All times are caller-supplied simulated seconds relative to the round
+open — the server is deterministic and event-driven, which is what lets
+the tests and benchmarks replay arrival schedules exactly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.bucketing import BucketPlan, make_bucket_plan
+from repro.core.config import CompressionConfig
+from repro.ft.failures import (StragglerMonitor, SwitchRetransmitPolicy,
+                               SwitchStragglerTimeout)
+
+from .fold import FoldEngine, FoldState
+from .membership import (ClientPayload, ExponentProposal, Membership,
+                         RoundContract, StaleContractError)
+
+
+class QuorumNotReached(RuntimeError):
+    """close_round() before quorum folded (and no deadline override)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionPolicy:
+    """Roster bound + close-out rule."""
+
+    max_cohort: int = 1024
+    quorum: float = 0.5              # fraction of the cohort that must
+                                     # fold before a deadline close
+    deadline_s: float = 1.0          # round close-out deadline (seconds
+                                     # from round open)
+
+    def __post_init__(self):
+        if self.max_cohort < 1:
+            raise ValueError(f"max_cohort must be >= 1, got "
+                             f"{self.max_cohort}")
+        if not (0.0 < self.quorum <= 1.0):
+            raise ValueError(f"quorum must be in (0, 1], got "
+                             f"{self.quorum}")
+        if self.deadline_s <= 0:
+            raise ValueError(f"deadline_s must be > 0, got "
+                             f"{self.deadline_s}")
+
+    def quorum_count(self, workers: int) -> int:
+        return max(1, int(np.ceil(self.quorum * workers)))
+
+
+@dataclasses.dataclass
+class RoundReport:
+    """Per-round close-out accounting."""
+
+    round_id: int
+    contract_id: str
+    workers: int
+    folded: int
+    deferred: int
+    rejected_stale: int
+    retransmits: int
+    close_reason: str                # complete | deadline | quorum
+    rx_bytes_total: int
+    residual_carried_in: bool        # previous rounds' late payloads
+                                     # were added to this output
+    windows: int
+    occupancy_peak: int
+    straggler_events: int
+
+
+class ElasticServer:
+    """Round-orchestrating aggregation service over the async fold."""
+
+    def __init__(self, template: Any, cfg: CompressionConfig,
+                 policy: Optional[AdmissionPolicy] = None,
+                 retransmit: Optional[SwitchRetransmitPolicy] = None,
+                 monitor: Optional[StragglerMonitor] = None,
+                 window_slots: Optional[int] = None):
+        self.cfg = cfg
+        self.plan: BucketPlan = make_bucket_plan(template, cfg)
+        self.policy = policy or AdmissionPolicy()
+        self.retransmit = retransmit
+        self.monitor = monitor
+        self.window_slots = window_slots
+        self.membership = Membership(max_cohort=self.policy.max_cohort)
+        self.reports: List[RoundReport] = []
+        self._round_id = 0
+        self._contract: Optional[RoundContract] = None
+        self._engine: Optional[FoldEngine] = None
+        self._state: Optional[FoldState] = None
+        self._deferred: List[ClientPayload] = []
+        self._rejected_stale = 0
+        # server-side EF residual: deferred late payloads land here and
+        # ride the NEXT round's output (never dropped)
+        self._residual = np.zeros(
+            (self.plan.n_buckets, self.plan.bucket_elems), np.float32)
+        self._residual_pending = False
+
+    # ---- membership ---------------------------------------------------
+
+    def join(self, client: int) -> str:
+        return self.membership.join(client)
+
+    def leave(self, client: int) -> None:
+        self.membership.leave(client)
+
+    # ---- round lifecycle ---------------------------------------------
+
+    @property
+    def contract(self) -> Optional[RoundContract]:
+        return self._contract
+
+    def open_round(self) -> RoundContract:
+        if self._contract is not None:
+            raise RuntimeError(
+                f"round {self._contract.round_id} is still open")
+        self.membership.admit_queued()
+        self._contract = self.membership.contract(
+            self._round_id, self.plan, self.cfg)
+        self._engine = FoldEngine(self._contract, self.cfg,
+                                  window_slots=self.window_slots)
+        self._state = self._engine.init_state()
+        self._deferred = []
+        self._rejected_stale = 0
+        return self._contract
+
+    def _require_open(self) -> None:
+        if self._contract is None:
+            raise RuntimeError("no round is open")
+
+    def submit_exponents(self, proposal: ExponentProposal) -> None:
+        """Phase A (fxp32): max-fold one exponent proposal."""
+        self._require_open()
+        self._engine.propose_exponents(
+            self._state, proposal.client, proposal.exponents,
+            contract_id=proposal.contract_id)
+
+    def seal_exponents(self) -> np.ndarray:
+        """Freeze + publish the shared exponents for this round."""
+        self._require_open()
+        return self._engine.seal_exponents(self._state)
+
+    def submit(self, payload: ClientPayload,
+               arrival_s: float = 0.0) -> str:
+        """Fold one arriving payload; returns ``"folded"`` or
+        ``"deferred"`` (past the deadline or past the retransmit
+        budget — carried into the next round's residual).
+
+        A payload quoting a stale contract raises
+        :class:`StaleContractError` — the client must ``reencode()``
+        and resubmit; it is never silently folded OR silently deferred
+        (a stale payload cannot even be decoded under this round's
+        budget).
+        """
+        self._require_open()
+        if payload.contract_id != self._contract.contract_id:
+            self._rejected_stale += 1
+            raise StaleContractError(
+                f"payload quotes {payload.contract_id}, round is "
+                f"{self._contract.contract_id} — re-encode under the "
+                "current contract")
+        if self.monitor is not None:
+            self.monitor.observe(self._round_id, float(arrival_s))
+        if arrival_s > self.policy.deadline_s:
+            self._deferred.append(payload)
+            return "deferred"
+        try:
+            self._engine.fold(self._state, payload,
+                              arrival_s=float(arrival_s),
+                              policy=self.retransmit)
+        except SwitchStragglerTimeout:
+            self._deferred.append(payload)
+            return "deferred"
+        return "folded"
+
+    def close_round(self, now_s: Optional[float] = None
+                    ) -> Tuple[np.ndarray, RoundReport]:
+        """Close the round; returns ``(sum_stream, report)`` where
+        ``sum_stream`` is the recovered ``(n_buckets, bucket_elems)``
+        f32 *sum* over contributions (callers divide by
+        ``contract.workers`` for the mean), including any residual
+        carried from previous rounds' deferred payloads.
+
+        Close is allowed at full attendance, or once ``now_s`` reaches
+        the deadline with quorum folded; otherwise
+        :class:`QuorumNotReached`.
+        """
+        self._require_open()
+        c, st = self._contract, self._state
+        folded = st.contributions
+        quorum = self.policy.quorum_count(c.workers)
+        if folded == c.workers:
+            reason = "complete"
+        elif folded >= quorum and now_s is not None and \
+                now_s >= self.policy.deadline_s:
+            reason = "deadline"
+        elif folded >= quorum and folded + len(self._deferred) == \
+                c.workers:
+            # every cohort member is accounted for (folded or deferred):
+            # nothing left to wait on, close without burning the deadline
+            reason = "quorum"
+        else:
+            raise QuorumNotReached(
+                f"round {c.round_id}: {folded}/{c.workers} folded, "
+                f"quorum is {quorum} (pass now_s >= deadline_s to close "
+                "at quorum)")
+
+        out = self._engine.finalize(st)
+        carried = self._residual_pending
+        if carried:
+            out = out + self._residual
+        # this round's late payloads become the NEXT round's residual
+        self._residual = np.zeros_like(self._residual)
+        self._residual_pending = bool(self._deferred)
+        for p in self._deferred:
+            self._residual += self._engine.decode_payload(p)
+
+        report = RoundReport(
+            round_id=c.round_id, contract_id=c.contract_id,
+            workers=c.workers, folded=folded,
+            deferred=len(self._deferred),
+            rejected_stale=self._rejected_stale,
+            retransmits=st.retransmits, close_reason=reason,
+            rx_bytes_total=sum(st.rx_bytes.values()),
+            residual_carried_in=carried, windows=st.windows,
+            occupancy_peak=st.occupancy_peak,
+            straggler_events=(len(self.monitor.events)
+                              if self.monitor is not None else 0))
+        self.reports.append(report)
+        self._round_id += 1
+        self._contract = None
+        self._engine = None
+        self._state = None
+        self._deferred = []
+        return out, report
+
+    @property
+    def pending_residual(self) -> np.ndarray:
+        """The deferred-contribution stream that will ride the next
+        round's output (zeros when nothing is pending) — exposed so
+        loss-free accounting is assertable from outside."""
+        return self._residual.copy()

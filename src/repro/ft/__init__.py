@@ -1,5 +1,9 @@
 """Fault tolerance: failure injection/detection, stragglers, elastic."""
 from .failures import (FailureSimulator, InjectedFailure, RecoveryPolicy,
-                       StragglerMonitor, elastic_mesh)
+                       StragglerMonitor, SwitchRetransmitPolicy,
+                       SwitchStragglerTimeout, elastic_data_parallel,
+                       elastic_mesh)
 __all__ = ["FailureSimulator", "InjectedFailure", "RecoveryPolicy",
-           "StragglerMonitor", "elastic_mesh"]
+           "StragglerMonitor", "SwitchRetransmitPolicy",
+           "SwitchStragglerTimeout", "elastic_data_parallel",
+           "elastic_mesh"]

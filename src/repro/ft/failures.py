@@ -32,11 +32,23 @@ class InjectedFailure(RuntimeError):
 
 @dataclasses.dataclass
 class FailureSimulator:
-    """Bernoulli per-step failure with deterministic seed."""
+    """Bernoulli per-step failure with deterministic seed.
+
+    Also injects deterministic *arrival delays* for the elastic tier
+    (PR 9): ``straggle_s`` marks clients late by a fixed amount every
+    round, ``straggle_at`` one specific (round, client) arrival —
+    :meth:`client_delay` is what the elastic server/benchmark add to
+    each payload's simulated arrival time to exercise the
+    quorum/deadline and deferred-residual paths.
+    """
     p_fail: float = 0.0
     n_nodes: int = 1
     seed: int = 0
     fail_at_steps: Tuple[int, ...] = ()   # deterministic injections
+    straggle_s: Tuple[Tuple[int, float], ...] = ()
+                                          # (client, delay_s) every round
+    straggle_at: Tuple[Tuple[int, int, float], ...] = ()
+                                          # (round, client, delay_s) once
     _fired: set = dataclasses.field(default_factory=set, init=False)
 
     def check(self, step: int):
@@ -48,6 +60,18 @@ class FailureSimulator:
                 np.random.SeedSequence([self.seed, step, 0xFA11]))
             if rng.random() < self.p_fail:
                 raise InjectedFailure(step, node=int(rng.integers(self.n_nodes)))
+
+    def client_delay(self, round_id: int, client: int) -> float:
+        """Injected extra arrival delay for one client in one round
+        (seconds; 0.0 when the client is healthy)."""
+        delay = 0.0
+        for c, d in self.straggle_s:
+            if c == client:
+                delay += d
+        for r, c, d in self.straggle_at:
+            if r == round_id and c == client:
+                delay += d
+        return delay
 
 
 @dataclasses.dataclass
@@ -173,14 +197,20 @@ class SwitchRetransmitPolicy:
 # Elastic re-meshing
 # ----------------------------------------------------------------------
 
-def elastic_mesh(available_devices: int, model_parallel: int,
-                 axis_names=("data", "model")):
-    """Largest (data, model) mesh fitting the surviving devices.
+def elastic_data_parallel(available_devices: int,
+                          model_parallel: int) -> int:
+    """Pure sizing rule behind :func:`elastic_mesh`: the data-axis size
+    for a surviving device count.
 
-    Keeps the model axis intact (parameter shards must stay complete) and
-    shrinks the data axis — the standard elastic-DP policy. The restored
-    checkpoint is resharded onto the new mesh by ckpt.restore(shardings=…).
+    Keeps the model axis intact (parameter shards must stay complete)
+    and shrinks the data axis to the largest power of two that fits —
+    power-of-2 axes keep collectives regular. Unit-testable without any
+    devices (non-divisible counts included); :func:`elastic_mesh` and
+    ``repro.elastic.Membership.local_mesh`` both build on it.
     """
+    if model_parallel < 1:
+        raise ValueError(
+            f"model_parallel must be >= 1, got {model_parallel}")
     if available_devices < model_parallel:
         raise ValueError(
             f"cannot keep model_parallel={model_parallel} with only "
@@ -189,6 +219,20 @@ def elastic_mesh(available_devices: int, model_parallel: int,
     # largest power-of-2 data axis keeps collectives regular
     while data & (data - 1):
         data -= 1
+    return data
+
+
+def elastic_mesh(available_devices: int, model_parallel: int,
+                 axis_names=("data", "model")):
+    """Largest (data, model) mesh fitting the surviving devices.
+
+    Sizing is :func:`elastic_data_parallel`; the restored checkpoint is
+    resharded onto the new mesh by ckpt.restore(shardings=…). Also the
+    elastic tier's device-side sizing hook
+    (``repro.elastic.Membership.local_mesh``) when a cohort maps onto
+    local devices.
+    """
+    data = elastic_data_parallel(available_devices, model_parallel)
     devs = jax.devices()[: data * model_parallel]
     import numpy as _np
     arr = _np.array(devs).reshape(data, model_parallel)

@@ -93,6 +93,20 @@ class FixedPointWire:
 
     # ---- static geometry ---------------------------------------------
 
+    def with_workers(self, workers: int) -> "FixedPointWire":
+        """The same wire re-priced for a different cohort size.
+
+        This is the elastic tier's renegotiation seam: the mantissa
+        budget is W-dependent (``30 - ceil_log2(W)``), so crossing a
+        power-of-two cohort boundary (e.g. W=4 -> 5) *changes the wire*
+        — payloads quantized under the old budget decode mis-scaled by
+        an exact power of two and void the overflow-freedom proof.
+        Callers must never mix budgets: the elastic
+        :class:`repro.elastic.membership.RoundContract` carries the
+        budget per round and rejects stale payloads outright.
+        """
+        return dataclasses.replace(self, workers=workers)
+
     @property
     def headroom_bits(self) -> int:
         """Bits reserved so W-worker sums cannot overflow int32."""

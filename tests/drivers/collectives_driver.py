@@ -472,6 +472,7 @@ plan_fx = make_bucket_plan(
 wire_fx = FixedPointWire(workers=n_workers)
 res_fx = {k: np.zeros((n_workers, int(np.prod(sh))), np.float32)
           for k, sh in ef_shapes.items()}
+fx_replay_refs = []   # per-step replay trees, reused by section 13
 for step in range(3):
     per_w = [dyadic_tree(100 + 10 * step + w) for w in range(n_workers)]
     sks, wrds = [], []
@@ -500,6 +501,7 @@ for step in range(3):
     ref_tree = plan_fx.unpack(
         jnp.asarray(rec).reshape(plan_fx.n_buckets, plan_fx.bucket_elems)
         / n_workers)
+    fx_replay_refs.append(jax.tree.map(np.asarray, ref_tree))
     out_fx = got_fx[step][0]
     for k in ef_shapes:
         assert np.array_equal(out_fx[k], np.asarray(ref_tree[k])), \
@@ -810,4 +812,59 @@ for k in ("w1", "w2", "scale"):
     print(f"{'OK' if ok else 'FAIL'} compressed_rs[{k}] "
           f"maxerr={np.abs(np.asarray(got_rs[k]) - mean_ref[k]).max():.2e}")
     assert ok, k
+
+# ---- 13. elastic aggregation service (PR 9) vs the in-mesh strategies
+# Fold-equivalence gate: a fixed-membership elastic round is the same
+# aggregate as the synchronous collective. Per EF step, every client
+# contributes the same dyadic gradient its in-mesh worker saw and the
+# server folds payloads in a permuted arrival order; the finalized
+# stream must match the `compressed` strategy's psum+OR output (f32)
+# and both the `compressed_innet` output and section 8's host replay of
+# FixedPointWire.roundtrip_reference (fxp32) — bit-for-bit, residuals
+# included.
+from repro.elastic import ElasticClient, ElasticServer
+
+el_template = {k: np.zeros(sh, np.float32) for k, sh in ef_shapes.items()}
+perm_rng = np.random.default_rng(13)
+for wire_name, el_cfg, refs in (
+        ("f32", cfg_ef, [(got_ef[s][0], got_ef[s][1]) for s in range(3)]),
+        ("fxp32", cfg_fx, [(got_fx[s][0], got_fx[s][1]) for s in range(3)])):
+    srv = ElasticServer(el_template, el_cfg)
+    clients = [ElasticClient(w, el_cfg) for w in range(n_workers)]
+    for w in range(n_workers):
+        srv.join(w)
+    for step in range(3):
+        contract = srv.open_round()
+        trees = [jax.tree.map(jnp.asarray,
+                              dyadic_tree(100 + 10 * step + w))
+                 for w in range(n_workers)]
+        if wire_name == "fxp32":
+            for w in range(n_workers):
+                srv.submit_exponents(clients[w].propose(contract, trees[w]))
+            shared = srv.seal_exponents()
+            payloads = [clients[w].payload(contract, shared)
+                        for w in range(n_workers)]
+        else:
+            payloads = [clients[w].contribute(contract, trees[w])
+                        for w in range(n_workers)]
+        for w in perm_rng.permutation(n_workers):
+            assert srv.submit(payloads[w]) == "folded"
+        stream, rep = srv.close_round()
+        assert rep.close_reason == "complete" and rep.folded == n_workers
+        out_tree = jax.tree.map(np.asarray,
+                                srv.plan.unpack(stream / n_workers))
+        want_out, want_res = refs[step]
+        for k in ef_shapes:
+            assert np.array_equal(out_tree[k], want_out[k]), \
+                f"elastic {wire_name} != in-mesh, step {step} leaf {k}"
+            if wire_name == "fxp32":
+                assert np.array_equal(out_tree[k], fx_replay_refs[step][k]), \
+                    f"elastic fxp32 != codec replay, step {step} leaf {k}"
+            for w in range(n_workers):
+                assert np.array_equal(
+                    np.asarray(clients[w].residual[k]), want_res[k][w]), \
+                    (f"elastic {wire_name} EF residual drift, step {step} "
+                     f"leaf {k} client {w}")
+    print(f"OK elastic {wire_name} rounds == in-mesh aggregate, 3 EF steps")
+
 print("ALL OK")

@@ -1,0 +1,66 @@
+"""Elastic re-meshing on real (fake-CPU) devices — PR 9 satellite.
+
+``ft.failures.elastic_mesh`` was dead code until the elastic tier made
+it the device-side sizing hook: when a cohort maps onto local devices
+(``Membership.local_mesh``), the data axis must shrink to the largest
+power of two that fits the survivors while keeping the model axis
+intact. This driver runs under 8 forced host devices and checks the
+built meshes — non-divisible device counts included — plus a live
+collective on a degraded mesh.
+
+Run via tests/test_multidevice.py with
+XLA_FLAGS="--xla_force_host_platform_device_count=8 ...".
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.elastic import Membership
+from repro.ft.failures import elastic_mesh
+
+assert jax.device_count() == 8, "driver expects 8 forced host devices"
+
+# ---- 1. elastic_mesh on non-divisible survivor counts ----------------
+for avail, mp, want in [(8, 1, (8, 1)), (7, 1, (4, 1)), (6, 2, (2, 2)),
+                        (5, 4, (1, 4)), (8, 2, (4, 2)), (3, 2, (1, 2)),
+                        (6, 3, (2, 3)), (1, 1, (1, 1))]:
+    m = elastic_mesh(avail, mp)
+    got = (m.shape["data"], m.shape["model"])
+    assert got == want, (avail, mp, got, want)
+    assert m.devices.size == want[0] * want[1]
+    # the mesh holds real, distinct devices
+    assert len({d.id for d in m.devices.reshape(-1)}) == m.devices.size
+print("OK elastic_mesh sizes (data, model) for non-divisible survivors")
+
+# ---- 2. Membership.local_mesh tracks the roster ----------------------
+mem = Membership()
+for c in range(3):
+    mem.join(c)
+m3 = mem.local_mesh()                 # 3 clients on 8 devices -> data=2
+assert m3.shape == {"data": 2, "model": 1}
+for c in range(3, 10):
+    mem.join(c)
+m10 = mem.local_mesh()                # 10 clients capped by 8 devices
+assert m10.shape == {"data": 8, "model": 1}
+m10mp = mem.local_mesh(model_parallel=2)
+assert m10mp.shape == {"data": 4, "model": 2}
+mem.leave(0)
+mem.leave(1)
+assert mem.local_mesh().shape == {"data": 8, "model": 1}
+print("OK Membership.local_mesh follows joins/leaves")
+
+# ---- 3. a real collective on a degraded (5 -> 4x1) mesh --------------
+m = elastic_mesh(5, 1)
+W = m.shape["data"]
+x = jnp.arange(W * 6, dtype=jnp.float32).reshape(W, 6)
+out = jax.jit(shard_map(
+    lambda a: jax.lax.psum(a, "data"), mesh=m,
+    in_specs=(P("data"),), out_specs=P("data"),
+    axis_names={"data", "model"}, check_vma=False))(x)
+want = np.tile(np.asarray(x).sum(axis=0), (W, 1))
+assert np.array_equal(np.asarray(out), want)
+print("OK psum on the degraded elastic mesh")
+
+print("ALL OK")

@@ -4,7 +4,8 @@ import pytest
 
 from repro.data.pipeline import batch_fn, Prefetcher
 from repro.ft.failures import (FailureSimulator, InjectedFailure,
-                               StragglerMonitor, elastic_mesh)
+                               StragglerMonitor, elastic_data_parallel,
+                               elastic_mesh)
 from repro.models import ModelConfig
 
 CFG = ModelConfig(name="t", family="dense", n_layers=1, d_model=32,
@@ -52,3 +53,40 @@ def test_elastic_mesh_single_device():
     assert m.shape == {"data": 1, "model": 1}
     with pytest.raises(ValueError):
         elastic_mesh(available_devices=1, model_parallel=2)
+
+
+@pytest.mark.parametrize("avail,mp,data", [
+    (7, 1, 4),     # non-divisible survivor count rounds down to a pow2
+    (6, 2, 2),     # 3 data shards fit but 2 keeps collectives regular
+    (5, 4, 1),     # barely enough for the model axis
+    (12, 3, 4),
+    (8, 2, 4),     # exact fit stays exact
+    (3, 2, 1),
+    (1, 1, 1),
+])
+def test_elastic_data_parallel_sizing(avail, mp, data):
+    assert elastic_data_parallel(avail, mp) == data
+
+
+def test_elastic_data_parallel_validation():
+    with pytest.raises(ValueError, match="devices"):
+        elastic_data_parallel(1, 2)
+    with pytest.raises(ValueError, match="model_parallel"):
+        elastic_data_parallel(4, 0)
+
+
+def test_failure_simulator_client_delay():
+    sim = FailureSimulator(straggle_s=((2, 0.5),),
+                           straggle_at=((1, 3, 2.0),))
+    # recurring delay hits client 2 every round
+    assert sim.client_delay(0, 2) == 0.5
+    assert sim.client_delay(7, 2) == 0.5
+    # one-shot delay hits (round 1, client 3) only
+    assert sim.client_delay(0, 3) == 0.0
+    assert sim.client_delay(1, 3) == 2.0
+    assert sim.client_delay(2, 3) == 0.0
+    # healthy clients are on time, and both kinds stack
+    assert sim.client_delay(1, 0) == 0.0
+    sim2 = FailureSimulator(straggle_s=((0, 0.1),),
+                            straggle_at=((0, 0, 1.0),))
+    assert sim2.client_delay(0, 0) == pytest.approx(1.1)

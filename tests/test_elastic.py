@@ -1,0 +1,418 @@
+"""Elastic aggregation service (PR 9): contract renegotiation, async
+fold, straggler/deferred-residual close-out.
+
+The bit-for-bit pins against the in-mesh ``compressed`` strategy run in
+``tests/drivers/collectives_driver.py`` (multi-device); here the
+single-device semantics: the round contract as the versioned handshake
+(stale payloads rejected, never silently folded), arrival-order
+invariance of the fold, the dynamic-W fxp32 gate (renegotiated mantissa
+budget never overflows int32 — while the stale budget provably would),
+and the quorum/deadline/deferred-residual close-out with loss-free
+accounting.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core.bucketing import make_bucket_plan
+from repro.core.compressor import CompressedLeaf, HomomorphicCompressor
+from repro.core.config import CompressionConfig
+from repro.elastic import (AdmissionPolicy, ElasticClient, ElasticServer,
+                           FoldEngine, FoldError, Membership,
+                           QuorumNotReached, RoundContract,
+                           StaleContractError, negotiate_contract)
+from repro.ft.failures import (FailureSimulator, StragglerMonitor,
+                               SwitchRetransmitPolicy)
+from repro.net.fixedpoint import FixedPointWire
+from repro.net.switch import SwitchModel
+
+CFG = CompressionConfig(ratio=1.0, lanes=128, rows=6, rounds=10,
+                        chunk_blocks=8, topk_ratio=0.1, topk_exact=True,
+                        error_feedback=True, bucket_bytes=2 * 768 * 4)
+CFG_FX = dataclasses.replace(CFG, wire_dtype="fxp32")
+SHAPES = {"a": (2000,), "b": (50, 20)}
+TEMPLATE = {k: np.zeros(sh, np.float32) for k, sh in SHAPES.items()}
+
+
+def dyadic_tree(seed):
+    """sign * 2^e values: every summation order is exact, so bitwise
+    equality checks the fold math (same trick as the drivers)."""
+    r = np.random.default_rng(seed)
+    out = {}
+    for k, sh in SHAPES.items():
+        n = int(np.prod(sh))
+        g = np.zeros(n, np.float32)
+        idx = r.choice(n, size=max(1, n // 3), replace=False)
+        g[idx] = (r.choice([-1.0, 1.0], size=idx.size)
+                  * np.exp2(r.integers(-2, 3, size=idx.size))
+                  ).astype(np.float32)
+        out[k] = jnp.asarray(g.reshape(sh))
+    return out
+
+
+def _plan(cfg=CFG):
+    return make_bucket_plan(TEMPLATE, cfg)
+
+
+# ----------------------------------------------------------------------
+# RoundContract: the versioned handshake
+# ----------------------------------------------------------------------
+
+def test_contract_negotiation_and_validation():
+    plan = _plan(CFG_FX)
+    c4 = negotiate_contract(0, [3, 1, 0, 2], plan, CFG_FX)
+    assert c4.cohort == (0, 1, 2, 3)
+    assert c4.workers == 4
+    assert c4.mantissa_bits == 28          # 30 - ceil_log2(4)
+    assert c4.wire.mantissa_bits == 28
+    # crossing the power-of-two boundary reprices the wire
+    c5 = negotiate_contract(1, range(5), plan, CFG_FX)
+    assert c5.mantissa_bits == 27
+    assert c4.contract_id != c5.contract_id
+    # mantissa is derived state: carrying the wrong budget is an error
+    with pytest.raises(ValueError, match="renegotiate"):
+        RoundContract(round_id=1, cohort=(0, 1, 2, 3, 4),
+                      n_buckets=plan.n_buckets,
+                      bucket_elems=plan.bucket_elems,
+                      total_elems=plan.total, wire_dtype="fxp32",
+                      mantissa_bits=28)
+    with pytest.raises(ValueError, match="sorted"):
+        RoundContract(round_id=0, cohort=(2, 1), n_buckets=1,
+                      bucket_elems=1536, total_elems=1536,
+                      wire_dtype="f32", mantissa_bits=None)
+    with pytest.raises(ValueError, match="no mantissa"):
+        RoundContract(round_id=0, cohort=(0,), n_buckets=1,
+                      bucket_elems=1536, total_elems=1536,
+                      wire_dtype="f32", mantissa_bits=30)
+    f32 = negotiate_contract(0, [0, 1], _plan(), CFG)
+    assert f32.mantissa_bits is None
+    with pytest.raises(ValueError):
+        f32.wire
+
+
+def test_membership_admission_queue_and_leave():
+    m = Membership(max_cohort=2)
+    assert m.join(0) == "admitted"
+    assert m.join(1) == "admitted"
+    assert m.join(2) == "queued"
+    assert m.roster == (0, 1) and m.queued == (2,)
+    with pytest.raises(ValueError):
+        m.join(1)
+    m.leave(0)
+    assert m.admit_queued() == (2,)
+    assert m.roster == (1, 2)
+    with pytest.raises(KeyError):
+        m.leave(0)
+
+
+# ----------------------------------------------------------------------
+# Fold engine: arrival-order invariance, O(1) state, windows
+# ----------------------------------------------------------------------
+
+def _f32_payloads(contract, n, seed0=40):
+    clients = [ElasticClient(w, CFG) for w in range(n)]
+    return clients, [clients[w].contribute(contract, dyadic_tree(seed0 + w))
+                     for w in range(n)]
+
+
+def test_fold_is_arrival_order_invariant_and_loss_free():
+    plan = _plan()
+    contract = negotiate_contract(0, range(3), plan, CFG)
+    engine = FoldEngine(contract, CFG)
+    _, payloads = _f32_payloads(contract, 3)
+    outs = []
+    for perm in ([0, 1, 2], [2, 0, 1], [1, 2, 0]):
+        st = engine.init_state()
+        for w in perm:
+            engine.fold(st, payloads[w])
+        outs.append(engine.finalize(st))
+    assert np.array_equal(outs[0], outs[1])
+    assert np.array_equal(outs[0], outs[2])
+    # dyadic data: the folded aggregate equals the sum of individually
+    # decoded payloads, exactly
+    want = sum(engine.decode_payload(p) for p in payloads)
+    assert np.array_equal(outs[0], want)
+
+
+def test_fold_state_is_payload_shaped_and_windowed():
+    plan = _plan()
+    contract = negotiate_contract(0, range(3), plan, CFG)
+    engine = FoldEngine(contract, CFG, window_slots=1)
+    st = engine.init_state()
+    _, payloads = _f32_payloads(contract, 3)
+    base = (st.sketch.nbytes, st.index_words.nbytes)
+    for p in payloads:
+        engine.fold(st, p)
+    # O(1) aggregation state: folding did not grow the accumulators
+    assert (st.sketch.nbytes, st.index_words.nbytes) == base
+    # window_slots=1 with 2 buckets: 2 windows per fold, occupancy <= 1
+    assert st.windows == 3 * plan.n_buckets
+    assert st.occupancy_peak == 1
+    assert st.contributions == 3
+    assert set(st.rx_bytes) == {0, 1, 2}
+    assert all(v == payloads[0].nbytes for v in st.rx_bytes.values())
+
+
+def test_fold_rejects_duplicates_unknown_and_oversubscription():
+    plan = _plan()
+    contract = negotiate_contract(0, range(2), plan, CFG)
+    engine = FoldEngine(contract, CFG)
+    st = engine.init_state()
+    _, payloads = _f32_payloads(contract, 2)
+    engine.fold(st, payloads[0])
+    with pytest.raises(FoldError, match="already contributed"):
+        engine.fold(st, payloads[0])
+    stranger = dataclasses.replace(payloads[1], client=7)
+    with pytest.raises(FoldError, match="not in this round's cohort"):
+        engine.fold(st, stranger)
+    engine.fold(st, payloads[1])
+    ghost = dataclasses.replace(payloads[0], client=0)
+    with pytest.raises(FoldError, match="already contributed"):
+        engine.fold(st, ghost)
+    # a wire sized for W can never fold more than W payloads
+    st2 = engine.init_state()
+    st2.contributions = 2
+    with pytest.raises(FoldError, match="overflow bound"):
+        engine.fold(st2, payloads[0])
+
+
+# ----------------------------------------------------------------------
+# fxp32: two-phase rounds == the documented codec roundtrip
+# ----------------------------------------------------------------------
+
+def test_fxp32_fold_matches_roundtrip_reference_bitwise():
+    plan = _plan(CFG_FX)
+    W = 5
+    contract = negotiate_contract(0, range(W), plan, CFG_FX)
+    engine = FoldEngine(contract, CFG_FX)
+    st = engine.init_state()
+    clients = [ElasticClient(w, CFG_FX) for w in range(W)]
+    # non-dyadic values: the quantize/rint rounding is live here, so
+    # this pins the *documented* roundtrip, not just exact arithmetic
+    r = np.random.default_rng(11)
+    trees = [{k: jnp.asarray(r.normal(0, 1, sh).astype(np.float32))
+              for k, sh in SHAPES.items()} for _ in range(W)]
+    for w in range(W):
+        p = clients[w].propose(contract, trees[w])
+        engine.propose_exponents(st, p.client, p.exponents, p.contract_id)
+    shared = engine.seal_exponents(st)
+    payloads = [clients[w].payload(contract, shared) for w in range(W)]
+    for w in np.random.default_rng(2).permutation(W):
+        engine.fold(st, payloads[w])
+    got = engine.finalize(st)
+
+    wire = FixedPointWire(workers=W)
+    sks = [c._cache["sketch"] for c in clients]
+    dec = wire.roundtrip_reference(
+        [jnp.asarray(s).reshape(plan.n_buckets, -1) for s in sks])
+    words = clients[0]._cache["index_words"].copy()
+    for c in clients[1:]:
+        words = words | c._cache["index_words"]
+    comp = HomomorphicCompressor(CFG_FX)
+    rec = comp.recover(
+        CompressedLeaf(sketch=jnp.asarray(dec).reshape(sks[0].shape),
+                       index_words=jnp.asarray(words)), plan.padded)
+    want = np.asarray(rec).reshape(plan.n_buckets, plan.bucket_elems)
+    assert np.array_equal(got, want)
+
+
+def test_fxp32_payload_against_wrong_exponents_is_rejected():
+    plan = _plan(CFG_FX)
+    contract = negotiate_contract(0, range(2), plan, CFG_FX)
+    engine = FoldEngine(contract, CFG_FX)
+    st = engine.init_state()
+    clients = [ElasticClient(w, CFG_FX) for w in range(2)]
+    for w in range(2):
+        p = clients[w].propose(contract, dyadic_tree(60 + w))
+        engine.propose_exponents(st, p.client, p.exponents)
+    shared = engine.seal_exponents(st)
+    good = clients[0].payload(contract, shared)
+    # quantized against exponents that are not the sealed vector
+    bad = dataclasses.replace(good, exponents=good.exponents + 1)
+    with pytest.raises(StaleContractError, match="sealed"):
+        engine.fold(st, bad)
+    # before sealing, no payload is verifiable at all
+    st2 = engine.init_state()
+    with pytest.raises(StaleContractError, match="sealed"):
+        engine.fold(st2, good)
+    engine.fold(st, good)
+
+
+# ----------------------------------------------------------------------
+# Dynamic-W gate: renegotiation, stale rejection, overflow freedom
+# ----------------------------------------------------------------------
+
+def test_dynamic_w_renegotiates_and_rejects_stale_payloads():
+    srv = ElasticServer(TEMPLATE, CFG_FX,
+                        policy=AdmissionPolicy(max_cohort=16))
+    for w in range(4):
+        srv.join(w)
+    clients = {w: ElasticClient(w, CFG_FX) for w in range(4)}
+    c0 = srv.open_round()
+    assert c0.workers == 4 and c0.mantissa_bits == 28
+    trees = {w: dyadic_tree(80 + w) for w in range(4)}
+    for w in range(4):
+        srv.submit_exponents(clients[w].propose(c0, trees[w]))
+    shared0 = srv.seal_exponents()
+    # client 0 encodes for round 0 but misses the round entirely
+    late = clients[0].payload(c0, shared0)
+    for w in range(1, 4):
+        srv.submit(clients[w].payload(c0, shared0))
+    with pytest.raises(QuorumNotReached):
+        srv.close_round()                  # 3/4, before deadline
+    srv.close_round(now_s=2.0)             # quorum + deadline
+
+    # a 5th client joins: the contract reprices across the pow2 boundary
+    srv.join(4)
+    clients[4] = ElasticClient(4, CFG_FX)
+    c1 = srv.open_round()
+    assert c1.workers == 5 and c1.mantissa_bits == 27
+    # the stale payload is rejected, never silently folded
+    with pytest.raises(StaleContractError, match="re-encode"):
+        srv.submit(late)
+    assert srv.submit.__self__ is srv      # server survived the reject
+    # re-encode under the new contract (EF is not re-charged): client 0
+    # re-prices its cached sketch, everyone else proposes fresh
+    srv.submit_exponents(clients[0].reencode(c1))
+    trees[4] = dyadic_tree(84)
+    for w in range(1, 5):
+        srv.submit_exponents(clients[w].propose(c1, trees[w]))
+    shared1 = srv.seal_exponents()
+    # the cached round-0 payload still cannot sneak in
+    with pytest.raises(StaleContractError):
+        clients[0].payload(c0, shared1)
+    for w in range(5):
+        assert srv.submit(clients[w].payload(c1, shared1)) == "folded"
+    _, rep = srv.close_round()
+    assert rep.close_reason == "complete" and rep.folded == 5
+    assert rep.rejected_stale == 1
+
+
+def test_new_cohort_budget_never_overflows_int32_stale_budget_would():
+    """W grows 4 -> 9: the renegotiated budget (M=26) keeps a 9-way
+    worst-case sum inside int32; the stale budget (M=28) provably does
+    not — the SwitchModel's running-register check catches it."""
+    w4, w9 = FixedPointWire(4), FixedPointWire(4).with_workers(9)
+    assert (w4.mantissa_bits, w9.mantissa_bits) == (28, 26)
+    # worst-case cell: the largest float32 below 2^e quantizes to
+    # 2^M - 2^(M-24); nine of those under the stale budget exceed int32
+    y = np.nextafter(np.float32(1024.0), np.float32(0.0))
+    buckets = jnp.full((1, 128), y, jnp.float32)
+    e = w4.bucket_exponents(buckets)
+    q_stale = int(np.asarray(w4.encode(buckets, e))[0, 0])
+    q_new = int(np.asarray(w9.encode(buckets, e))[0, 0])
+    assert q_stale == 2**28 - 2**4
+    assert 9 * q_stale > 2**31 - 1          # stale budget: overflow
+    assert 9 * q_new <= 2**30               # renegotiated: provably safe
+
+    bm = np.zeros((9, 1, 4), np.uint32)
+    stale_chunks = np.full((9, 1, 128), q_stale, np.int32)
+    with pytest.raises(OverflowError, match="32-bit switch register"):
+        SwitchModel(ports=9, slots=4).aggregate(stale_chunks, bm)
+    new_chunks = np.full((9, 1, 128), q_new, np.int32)
+    out, _ = SwitchModel(ports=9, slots=4).aggregate(new_chunks, bm)
+    assert int(out[0, 0]) == 9 * q_new
+
+    # and through the real engine: a full-attendance 9-client fold of
+    # max-magnitude payloads raises nothing and recovers finite values
+    plan = _plan(CFG_FX)
+    contract = negotiate_contract(0, range(9), plan, CFG_FX)
+    engine = FoldEngine(contract, CFG_FX)
+    st = engine.init_state()
+    clients = [ElasticClient(w, CFG_FX) for w in range(9)]
+    r = np.random.default_rng(3)
+    for w in range(9):
+        big = {k: jnp.asarray((r.normal(0, 1, sh) * 1e30
+                               ).astype(np.float32))
+               for k, sh in SHAPES.items()}
+        p = clients[w].propose(contract, big)
+        engine.propose_exponents(st, p.client, p.exponents)
+    shared = engine.seal_exponents(st)
+    for w in range(9):
+        engine.fold(st, clients[w].payload(contract, shared))
+    out = engine.finalize(st)
+    assert np.isfinite(out).all()
+
+
+# ----------------------------------------------------------------------
+# Straggler gate: quorum/deadline close, deferred -> next-round residual
+# ----------------------------------------------------------------------
+
+def test_straggler_rounds_close_and_defer_loss_free():
+    sim = FailureSimulator(straggle_s=((2, 0.12),),
+                           straggle_at=((0, 3, 5.0),))
+    monitor = StragglerMonitor(warmup=2)
+    retrans = SwitchRetransmitPolicy(timeout_s=0.05, max_retries=3)
+    srv = ElasticServer(
+        TEMPLATE, CFG,
+        policy=AdmissionPolicy(max_cohort=8, quorum=0.5, deadline_s=1.0),
+        retransmit=retrans, monitor=monitor)
+    for w in range(4):
+        srv.join(w)
+    clients = [ElasticClient(w, CFG) for w in range(4)]
+
+    all_contributions = np.zeros(
+        (srv.plan.n_buckets, srv.plan.bucket_elems), np.float32)
+    outs = []
+    for rnd in range(2):
+        contract = srv.open_round()
+        engine = srv._engine
+        statuses = {}
+        for w in range(4):
+            p = clients[w].contribute(contract, dyadic_tree(
+                200 + 10 * rnd + w))
+            all_contributions += engine.decode_payload(p)
+            arrival = 0.01 * (w + 1) + sim.client_delay(rnd, w)
+            statuses[w] = srv.submit(p, arrival_s=arrival)
+        if rnd == 0:
+            # client 3 injected 5s late: past the deadline -> deferred;
+            # client 2 is 0.12s late: inside the retransmit budget
+            assert statuses[3] == "deferred"
+            assert statuses[2] == "folded"
+            # everyone is accounted for (3 folded + 1 deferred): the
+            # round closes at quorum without burning the deadline
+            out, rep = srv.close_round(now_s=0.5)
+            assert rep.close_reason == "quorum"
+            assert rep.folded == 3 and rep.deferred == 1
+            assert rep.retransmits > 0
+            assert retrans.events                  # accounted, not dropped
+            # the deferred contribution is pending, not lost
+            assert np.any(srv.pending_residual != 0)
+        else:
+            assert all(s == "folded" for s in statuses.values())
+            out, rep = srv.close_round()
+            assert rep.close_reason == "complete"
+            assert rep.residual_carried_in         # round-0 late payload
+        outs.append(out)
+    # loss-free accounting: folded + deferred == sum of ALL payloads
+    # (dyadic values -> bitwise)
+    total_out = outs[0] + outs[1] + srv.pending_residual
+    assert np.array_equal(total_out, all_contributions)
+    # the 5s arrival was flagged by the latency monitor
+    assert any(ev["dt"] >= 5.0 for ev in monitor.events)
+
+
+def test_quorum_not_reached_blocks_close():
+    srv = ElasticServer(TEMPLATE, CFG,
+                        policy=AdmissionPolicy(quorum=0.75,
+                                               deadline_s=1.0))
+    for w in range(4):
+        srv.join(w)
+    contract = srv.open_round()
+    c = ElasticClient(0, CFG)
+    srv.submit(c.contribute(contract, dyadic_tree(1)))
+    # 1/4 folded < quorum 3: not closeable even past the deadline
+    with pytest.raises(QuorumNotReached):
+        srv.close_round(now_s=5.0)
+
+
+def test_server_round_lifecycle_guards():
+    srv = ElasticServer(TEMPLATE, CFG)
+    with pytest.raises(RuntimeError, match="no round is open"):
+        srv.seal_exponents()
+    srv.join(0)
+    srv.open_round()
+    with pytest.raises(RuntimeError, match="still open"):
+        srv.open_round()

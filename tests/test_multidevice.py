@@ -38,3 +38,11 @@ def test_wirebytes_driver():
     """PR 6 satellite: analytic strategy_wire_bytes vs the bytes the
     launched collectives move (jaxpr-counted), W=2 and W=4."""
     _run("wirebytes_driver.py")
+
+
+@pytest.mark.slow
+def test_elastic_driver():
+    """PR 9 satellite: elastic_mesh / Membership.local_mesh sizing on 8
+    real fake-CPU devices (non-divisible survivor counts), plus a live
+    psum on a degraded mesh."""
+    _run("elastic_driver.py")

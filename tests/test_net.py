@@ -60,6 +60,39 @@ def test_wire_validation():
         FixedPointWire(workers=1 << 29)
 
 
+def test_with_workers_reprices_across_pow2_boundary():
+    """The elastic renegotiation seam: the mantissa budget is
+    W-dependent, so crossing a power-of-two cohort boundary changes the
+    wire — same-side resizes keep it."""
+    w4 = FixedPointWire(workers=4)
+    assert w4.mantissa_bits == 28
+    assert w4.with_workers(3).mantissa_bits == 28     # same pow2 bracket
+    assert w4.with_workers(5).mantissa_bits == 27     # W=4 -> 5 reprices
+    assert w4.with_workers(9).mantissa_bits == 26
+    assert w4.with_workers(4) == w4
+    with pytest.raises(ValueError, match="workers"):
+        w4.with_workers(0)
+
+
+def test_mixed_mantissa_budgets_decode_misscaled():
+    """Why the elastic contract must reject stale payloads outright:
+    ints encoded under the W=4 budget (M=28) and decoded under the W=5
+    budget (M=27) come back exactly 2x too large — plausible-looking,
+    silently wrong. The elastic tier turns this hazard into
+    StaleContractError."""
+    w4 = FixedPointWire(workers=4)
+    w5 = w4.with_workers(5)
+    r = np.random.default_rng(0)
+    buckets = jnp.asarray(r.normal(0, 3, (2, 256)).astype(np.float32))
+    e = w4.bucket_exponents(buckets)
+    q = w4.encode(buckets, e)
+    d4 = np.asarray(w4.decode(q, e))
+    d5 = np.asarray(w5.decode(q, e))
+    scale = 2.0 ** (w4.mantissa_bits - w5.mantissa_bits)
+    np.testing.assert_array_equal(d5, d4 * scale)
+    assert not np.array_equal(d5, d4)
+
+
 @pytest.mark.parametrize("workers", [1, 2, 7, 16])
 def test_encode_bound_and_sum_never_overflows(workers):
     """|q| <= 2^M per worker, so the W-way sum provably fits int32 —

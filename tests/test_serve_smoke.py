@@ -1,0 +1,76 @@
+"""Smoke pins for the serving entry points (PR 9 satellite).
+
+``launch/serve.py`` and ``examples/serve_lm.py`` were exercised only by
+hand; now that the elastic service hangs its ``--elastic`` mode off the
+serve launcher, a refactor that breaks the launcher's argument surface
+or the example's imports should fail here, not in a user's terminal.
+Style follows ``tests/test_benchmarks_smoke.py``: run the real entry
+point at tiny sizes, assert on its observable output.
+"""
+import os
+import runpy
+import sys
+
+import pytest
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+TINY = ["--arch", "qwen2-7b", "--smoke", "--batch", "2",
+        "--prompt-len", "4", "--max-new", "3"]
+
+
+def _run_launcher(argv, capsys):
+    from repro.launch import serve
+    old = sys.argv
+    sys.argv = ["serve.py"] + argv
+    try:
+        serve.main()
+    finally:
+        sys.argv = old
+    return capsys.readouterr().out
+
+
+@pytest.mark.slow
+def test_launch_serve_batch_mode(capsys):
+    out = _run_launcher(TINY, capsys)
+    assert "batch generate:" in out
+    assert "first row:" in out
+
+
+@pytest.mark.slow
+def test_launch_serve_continuous_mode(capsys):
+    out = _run_launcher(TINY + ["--continuous"], capsys)
+    assert "continuous:" in out
+    assert "4 requests" in out          # batch*2 submissions all finish
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("wire", ["f32", "fxp32"])
+def test_launch_serve_elastic_mode(wire, capsys):
+    out = _run_launcher(
+        TINY + ["--elastic", "--cohort", "2", "--rounds", "2",
+                "--wire", wire], capsys)
+    # round 1 admits a third client mid-run
+    assert "round 0: W=2" in out
+    assert "round 1: W=3" in out
+    assert f"wire={wire}" in out
+    assert "(0 lost)" in out
+
+
+@pytest.mark.slow
+def test_launch_serve_elastic_straggler_defers(capsys):
+    out = _run_launcher(
+        TINY + ["--elastic", "--cohort", "2", "--rounds", "2",
+                "--straggle"], capsys)
+    assert "deferred=1" in out          # the injected late payload
+    assert "(0 lost)" in out
+
+
+@pytest.mark.slow
+def test_example_serve_lm_runs(capsys):
+    # the example asserts len(done) == 10 itself; run it for real
+    runpy.run_path(os.path.join(REPO, "examples", "serve_lm.py"),
+                   run_name="__main__")
+    out = capsys.readouterr().out
+    assert "batched generate:" in out
+    assert "continuous batching: 10 requests" in out
