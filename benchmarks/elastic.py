@@ -1,39 +1,59 @@
-"""Elastic aggregation benchmark (PR 9): synchronous barrier vs async
-sketch-fold at intermittent-client cohorts.
+"""Elastic aggregation benchmark (PR 9/10): synchronous barrier vs
+async sketch-fold, and the sharded+batched fold pipeline's scale-out.
 
 The paper's aggregation point never decompresses in flight: sketches
 merge by integer/float add and bitmaps by OR, so a payload can be folded
-the moment it arrives. This benchmark measures what that buys once
-clients arrive at different times (Poisson arrivals + injected
-stragglers via ``ft.failures.FailureSimulator``): the **barrier** arm
-holds every payload until the last arrival and then folds all W of them
-(the synchronous psum shape), while the **async** arm folds each payload
-on arrival, leaving only one fold + finalize after the last arrival.
-Both arms run the *same* ``FoldEngine`` code and must produce bitwise
-identical streams — the contrast is purely *when* the fold work happens.
+the moment it arrives — and the fold can be partitioned (shards) and
+amortized (microbatches) without changing a bit of the result.
 
-Fold throughput is normalized to the close-out tail: folded bytes
-divided by the compute remaining after the last folded arrival. That is
-the round's critical path — arrival gaps hide the async arm's folds but
-cannot hide the barrier's — and it is robust to timer noise (the barrier
-tail carries W measured folds vs the async arm's one).
+Two experiments:
 
-Writes ``BENCH_elastic.json`` and enforces the CI gate in-process:
-async fold throughput must strictly exceed the barrier baseline at
-cohort >= 64.
+1. **Barrier vs async** (PR 9): Poisson arrivals + injected stragglers
+   via ``ft.failures.FailureSimulator``. The **barrier** arm holds every
+   payload until the last arrival and then folds all W of them (the
+   synchronous psum shape); the **async** arm folds each payload on
+   arrival, leaving only one fold + finalize after the last arrival.
+   Both arms run the *same* ``FoldEngine`` schedule and must produce
+   bitwise identical streams — the contrast is purely *when* the fold
+   work happens. Fold throughput is normalized to the close-out tail
+   (folded bytes / fold compute remaining after the last folded
+   arrival).
+2. **Sharded scale-out** (PR 10): cohort 512 on the fxp32 wire through
+   ``ShardedFoldService`` at a shard-count sweep. Shards model
+   independent hosts — each shard range folds only its stripe — so the
+   round's fold wall is the **critical path**: the max over per-shard
+   fold walls (each measured on this host, charged only to its shard).
+   The microbatched combine (one jit-cached dispatch per ``batch_size``
+   arrivals, host int64 register check per flush) is what the
+   per-payload PR 9 walk is compared against; the sharded stream is
+   asserted bitwise equal to the sequential fold before any timing
+   counts.
+
+Timing discipline (PR 7, as in ``benchmarks/aggregation.py``): two
+warmup runs (compile + lazy first-dispatch), then median-of-k walls per
+arm — gates track steady state, not compile noise.
+
+Writes ``BENCH_elastic.json`` (schema 2: per-shard throughput rows +
+the shard sweep) and enforces the CI gates in-process: async fold must
+strictly beat the barrier at cohort >= 64, the S=4 sharded fold must be
+>= 2x the single-engine fold at cohort 512, and the sweep must be
+monotone non-decreasing up to the host's core count.
 
     PYTHONPATH=src python benchmarks/elastic.py --json BENCH_elastic.json
 """
 import argparse
 import dataclasses
 import json
+import os
+import statistics
 import time
 
 import numpy as np
 
 from repro.core.bucketing import make_bucket_plan
 from repro.core.config import CompressionConfig
-from repro.elastic import ElasticClient, FoldEngine, negotiate_contract
+from repro.elastic import (ElasticClient, FoldEngine, ShardedFoldService,
+                           negotiate_contract)
 from repro.ft.failures import FailureSimulator, SwitchRetransmitPolicy
 
 CFG = CompressionConfig(ratio=1.0, lanes=128, rows=6, rounds=10,
@@ -41,21 +61,28 @@ CFG = CompressionConfig(ratio=1.0, lanes=128, rows=6, rounds=10,
                         error_feedback=True, bucket_bytes=2 * 768 * 4)
 SHAPES = {"w": (4000,)}
 TEMPLATE = {k: np.zeros(sh, np.float32) for k, sh in SHAPES.items()}
+# the sharded sweep folds a much larger stream (128 buckets), so a
+# shard range is real work and the critical-path contrast is honest
+SHARD_SHAPES = {"w": (196608,)}
+SHARD_TEMPLATE = {k: np.zeros(sh, np.float32)
+                  for k, sh in SHARD_SHAPES.items()}
 POOL = 4          # distinct encoded payloads, reused cyclically: setup
                   # stays O(1) while the fold loop still sees W clients
+WARMUPS = 2
+REPS = 3
 
 
-def _grad_tree(seed):
+def _grad_tree(seed, shapes=SHAPES):
     r = np.random.default_rng(seed)
     return {k: r.normal(0, 1, sh).astype(np.float32)
-            for k, sh in SHAPES.items()}
+            for k, sh in shapes.items()}
 
 
-def _payload_pool(contract, cfg):
+def _payload_pool(contract, cfg, shapes=SHAPES):
     """POOL distinct payloads; cohort slot w reuses pool[w % POOL]."""
     clients = [ElasticClient(w, cfg) for w in range(POOL)]
     if cfg.wire_dtype == "fxp32":
-        props = [clients[w].propose(contract, _grad_tree(w))
+        props = [clients[w].propose(contract, _grad_tree(w, shapes))
                  for w in range(POOL)]
         shared = props[0].exponents
         for p in props[1:]:
@@ -65,7 +92,7 @@ def _payload_pool(contract, cfg):
                 props[w], exponents=np.asarray(shared)).exponents)
             for w in range(POOL)]
         return pool, [p.exponents for p in props], np.asarray(shared)
-    pool = [clients[w].contribute(contract, _grad_tree(w))
+    pool = [clients[w].contribute(contract, _grad_tree(w, shapes))
             for w in range(POOL)]
     return pool, None, None
 
@@ -126,23 +153,28 @@ def bench_cohort(workers, cfg=CFG):
     last_arrival = max(arrivals[w] for w in folded)
     delays = [sim.client_delay(0, w) for w in range(workers)]
 
-    # warmup: compile/caches for fold + finalize (recover's peel is
-    # jitted), so both timed arms see steady-state costs; cover every
-    # pool slot so the fxp32 warm round seals the pool-wide exponents
+    # PR 7 discipline: both arms run the SAME fold schedule (they
+    # differ only in which folds land in the close-out tail), so one
+    # rep sequence serves both — 2 warmups (the first also compiles
+    # fold + finalize; it covers every pool slot so the fxp32 warm
+    # round seals the pool-wide exponents), then median-of-REPS.
     warm, seen = [], set()
     for w in folded:
         if w % POOL not in seen:
             seen.add(w % POOL)
             warm.append(w)
     _run_arm(engine, pool, warm, delays, proposals, shared)
+    for _ in range(WARMUPS - 1):
+        _run_arm(engine, pool, folded, delays, proposals, shared)
 
-    out_async, folds_a, fin_a, retr_a = _run_arm(
-        engine, pool, folded, delays, proposals, shared)
-    out_barrier, folds_b, fin_b, retr_b = _run_arm(
-        engine, pool, folded, delays, proposals, shared)
-    assert np.array_equal(out_async, out_barrier), \
-        "async fold and barrier fold must be the same aggregate"
-    assert retr_a == retr_b and retr_a > 0, "straggler must pay retransmits"
+    reps = [_run_arm(engine, pool, folded, delays, proposals, shared)
+            for _ in range(REPS)]
+    out0, _, _, retr = reps[0]
+    for out_r, _, _, retr_r in reps[1:]:
+        assert np.array_equal(out0, out_r), \
+            "every rep of the fold schedule must be the same aggregate"
+        assert retr_r == retr
+    assert retr > 0, "straggler must pay retransmits"
 
     folded_bytes = payload_bytes * len(folded)
     # fold tail: fold compute still pending after the last folded
@@ -150,10 +182,12 @@ def bench_cohort(workers, cfg=CFG):
     # all of them. The finalize pass is identical in both arms and
     # lands in close-out latency, not fold throughput — so the gate
     # margin is ~W x and cannot flip on timer noise.
-    tail_async = folds_a[-1]
-    tail_barrier = sum(folds_b)
+    tail_async = statistics.median(folds[-1] for _, folds, _, _ in reps)
+    tail_barrier = statistics.median(sum(folds)
+                                     for _, folds, _, _ in reps)
+    fin = statistics.median(f for _, _, f, _ in reps)
 
-    def arm(tail, fin):
+    def arm(tail):
         return {"fold_tail_s": round(tail, 6),
                 "finalize_s": round(fin, 6),
                 "close_out_latency_s": round(float(last_arrival)
@@ -164,15 +198,151 @@ def bench_cohort(workers, cfg=CFG):
     row = {"workers": workers, "wire": cfg.wire_dtype,
            "payload_bytes": payload_bytes,
            "folded": len(folded), "deferred": len(deferred),
-           "retransmits": retr_a,
+           "retransmits": retr,
+           "warmups": WARMUPS, "reps": REPS,
            "last_arrival_s": round(float(last_arrival), 4),
-           "async": arm(tail_async, fin_a),
-           "barrier": arm(tail_barrier, fin_b)}
+           "async": arm(tail_async),
+           "barrier": arm(tail_barrier)}
     print(f"W={workers:4d} {cfg.wire_dtype:5s} folded={len(folded):4d} "
-          f"deferred={len(deferred)} retransmits={retr_a:3d} | "
+          f"deferred={len(deferred)} retransmits={retr:3d} | "
           f"async fold tail {tail_async*1e6:8.1f}us vs barrier "
-          f"{tail_barrier*1e6:9.1f}us -> {tail_barrier/tail_async:6.1f}x")
+          f"{tail_barrier*1e6:9.1f}us -> {tail_barrier/tail_async:6.1f}x "
+          f"(median of {REPS})")
     return row
+
+
+# ----------------------------------------------------------------------
+# Sharded scale-out sweep (PR 10)
+# ----------------------------------------------------------------------
+
+def _run_sequential(engine, pool, workers, proposals, shared):
+    """One full PR 9 single-engine fold round; returns (stream, total
+    fold wall)."""
+    st = engine.init_state()
+    if proposals is not None:
+        for w in range(workers):
+            engine.propose_exponents(st, w, proposals[w % POOL])
+        engine.seal_exponents(st)
+    wall = 0.0
+    for w in range(workers):
+        p = dataclasses.replace(pool[w % POOL], client=w)
+        t0 = time.perf_counter()
+        engine.fold(st, p)
+        wall += time.perf_counter() - t0
+    return engine.finalize(st), wall
+
+
+def _run_sharded(svc, pool, workers, proposals, shared):
+    """One sharded+batched round; returns (stream, per-shard fold
+    walls). Each shard's wall accumulates only that shard's microbatch
+    flushes — on a real deployment the shards are separate hosts, so
+    the round's fold wall is the max, not the sum."""
+    st = svc.init_state()
+    if proposals is not None:
+        for w in range(workers):
+            svc.propose_exponents(st, w, proposals[w % POOL])
+        svc.seal_exponents(st)
+    for w in range(workers):
+        svc.fold(st, dataclasses.replace(pool[w % POOL], client=w))
+    svc.flush(st)                    # drain remainders into the walls
+    stream = svc.finalize(st)
+    return stream, list(st.fold_s), svc.per_shard_report(st)
+
+
+def bench_sharded(workers=512, shards=(1, 2, 4, 8), batch_size=8):
+    """Shard-count sweep at one cohort on the fxp32 wire (the eager
+    batched integer combine; the wire the switch actually has)."""
+    cfg = dataclasses.replace(CFG, wire_dtype="fxp32")
+    plan = make_bucket_plan(SHARD_TEMPLATE, cfg)
+    contract = negotiate_contract(0, range(workers), plan, cfg)
+    pool, proposals, shared = _payload_pool(contract, cfg, SHARD_SHAPES)
+    payload_bytes = pool[0].nbytes
+    folded_bytes = payload_bytes * workers
+
+    print(f"sharded sweep: W={workers} fxp32, {plan.n_buckets} buckets "
+          f"x {plan.bucket_elems} elems, batch={batch_size}, "
+          f"payload {payload_bytes/1e6:.2f} MB")
+
+    # PR 9 single-engine baseline, same discipline
+    engine = FoldEngine(contract, cfg)
+    for _ in range(WARMUPS):
+        ref_stream, _ = _run_sequential(engine, pool, workers,
+                                        proposals, shared)
+    seq_reps = [_run_sequential(engine, pool, workers, proposals,
+                                shared) for _ in range(REPS)]
+    seq_wall = statistics.median(w for _, w in seq_reps)
+    single = {"fold_wall_s": round(seq_wall, 6),
+              "fold_throughput_bytes_per_s": round(
+                  folded_bytes / seq_wall)}
+    print(f"  single-engine: {seq_wall*1e3:8.1f}ms fold wall "
+          f"-> {single['fold_throughput_bytes_per_s']/1e9:6.2f} GB/s")
+
+    sweep = []
+    for S in shards:
+        svc = ShardedFoldService(contract, cfg, n_shards=S,
+                                 batch_size=batch_size, plan=plan)
+        for _ in range(WARMUPS):
+            stream, walls, _ = _run_sharded(svc, pool, workers,
+                                            proposals, shared)
+        assert np.array_equal(stream, ref_stream), \
+            f"S={S}: sharded fold is not the sequential aggregate"
+        rep_runs = [_run_sharded(svc, pool, workers, proposals, shared)
+                    for _ in range(REPS)]
+        crit = [max(walls) for _, walls, _ in rep_runs]
+        med = statistics.median(crit)
+        # per-shard rows from the median rep
+        med_rep = rep_runs[crit.index(
+            sorted(crit)[len(crit) // 2])]
+        row = {"shards": S, "batch_size": batch_size,
+               "critical_path_s": round(med, 6),
+               "fold_throughput_bytes_per_s": round(folded_bytes / med),
+               "speedup_vs_single_engine": round(seq_wall / med, 2),
+               "per_shard": [
+                   {k: (round(v, 6) if isinstance(v, float) else v)
+                    for k, v in r.items()}
+                   for r in med_rep[2]]}
+        sweep.append(row)
+        print(f"  S={S}: critical path {med*1e3:8.1f}ms "
+              f"-> {row['fold_throughput_bytes_per_s']/1e9:6.2f} GB/s "
+              f"({row['speedup_vs_single_engine']:5.1f}x single engine)")
+
+    return {"workers": workers, "wire": "fxp32",
+            "batch_size": batch_size,
+            "n_buckets": plan.n_buckets,
+            "payload_bytes": payload_bytes,
+            "host_cores": os.cpu_count() or 1,
+            "warmups": WARMUPS, "reps": REPS,
+            "single_engine": single, "sweep": sweep}
+
+
+def check_shard_gates(sharded):
+    """The PR 10 CI gates (also re-checked from the artifact): S=4
+    sharded fold >= 2x the single-engine fold, and the sweep monotone
+    non-decreasing up to the host's core count."""
+    base = sharded["single_engine"]["fold_throughput_bytes_per_s"]
+    rows = sorted(sharded["sweep"], key=lambda r: r["shards"])
+    s4 = next((r for r in rows if r["shards"] == 4), None)
+    if s4 is not None:
+        t4 = s4["fold_throughput_bytes_per_s"]
+        if not t4 >= 2 * base:
+            raise SystemExit(
+                f"GATE FAIL: S=4 sharded fold {t4} B/s < 2x "
+                f"single-engine {base} B/s at cohort "
+                f"{sharded['workers']}")
+        print(f"GATE OK: S=4 sharded {t4:.3g} B/s >= 2x single-engine "
+              f"{base:.3g} B/s")
+    cores = sharded["host_cores"]
+    in_core = [r for r in rows if r["shards"] <= cores]
+    for lo, hi in zip(in_core, in_core[1:]):
+        if hi["fold_throughput_bytes_per_s"] < \
+                lo["fold_throughput_bytes_per_s"]:
+            raise SystemExit(
+                f"GATE FAIL: sweep not monotone within the core count "
+                f"({cores}): S={hi['shards']} "
+                f"{hi['fold_throughput_bytes_per_s']} < S={lo['shards']} "
+                f"{lo['fold_throughput_bytes_per_s']}")
+    print(f"GATE OK: sweep monotone non-decreasing up to "
+          f"{cores} core(s) ({len(in_core)} row(s) in range)")
 
 
 def main():
@@ -180,21 +350,27 @@ def main():
     ap.add_argument("--json", default="BENCH_elastic.json")
     ap.add_argument("--cohorts", type=int, nargs="*",
                     default=[8, 64, 512])
+    ap.add_argument("--shards", type=int, nargs="*",
+                    default=[1, 2, 4, 8])
+    ap.add_argument("--sharded-workers", type=int, default=512)
+    ap.add_argument("--batch-size", type=int, default=8)
     args = ap.parse_args()
 
     rows = [bench_cohort(w) for w in args.cohorts]
     # fxp32 leg: same contrast over the integer wire at the base cohort
     fxp_row = bench_cohort(8, dataclasses.replace(CFG, wire_dtype="fxp32"))
+    sharded = bench_sharded(args.sharded_workers, tuple(args.shards),
+                            args.batch_size)
 
-    payload = {"schema": 1, "cohorts": {str(r["workers"]): r
+    payload = {"schema": 2, "cohorts": {str(r["workers"]): r
                                         for r in rows},
-               "fxp32": fxp_row}
+               "fxp32": fxp_row, "sharded": sharded}
     with open(args.json, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
         f.write("\n")
     print(f"wrote {args.json}")
 
-    # CI gate (also re-checked from the artifact by the workflow):
+    # CI gates (also re-checked from the artifact by the workflow):
     # at cohort >= 64 the async fold must strictly beat the barrier.
     for r in rows:
         if r["workers"] >= 64:
@@ -206,6 +382,7 @@ def main():
                     f"{b} at cohort {r['workers']}")
             print(f"GATE OK: W={r['workers']} async {a:.3g} B/s > "
                   f"barrier {b:.3g} B/s")
+    check_shard_gates(sharded)
 
 
 if __name__ == "__main__":

@@ -24,6 +24,13 @@ makes possible without barriers and without ever decompressing:
   quorum/deadline close-out, straggler timeout/retransmit via
   ``ft/failures.py``, and late payloads carried into the *next*
   round's error-feedback residual rather than dropped.
+- :mod:`repro.elastic.shard` — the scale-out fold path (PR 10):
+  :class:`ShardedFoldService` tiles the bucket range into contiguous
+  shard ranges (one ``FoldEngine`` + ``SwitchModel`` pool each, no
+  shared state), stripes payloads across them, and folds microbatches
+  through jit-cached vectorized combines; batched f32 folds reduce in
+  canonical client-sorted order, so f32 rounds are arrival-order
+  invariant bit-for-bit — the property PR 9 could only pin for fxp32.
 
 Fold-equivalence is pinned bit-for-bit against the fixed-mesh
 ``compressed`` strategy (f32) and ``FixedPointWire.roundtrip_reference``
@@ -36,6 +43,8 @@ from .membership import (ClientPayload, ExponentProposal, Membership,
                          RoundContract, StaleContractError,
                          negotiate_contract)
 from .fold import FoldEngine, FoldError, FoldState
+from .shard import (ShardRange, ShardedFoldService, ShardedFoldState,
+                    shard_contract, shard_ranges, stripe_payload)
 from .client import ElasticClient
 from .server import (AdmissionPolicy, ElasticServer, QuorumNotReached,
                      RoundReport)
@@ -44,5 +53,7 @@ __all__ = [
     "AdmissionPolicy", "ClientPayload", "ElasticClient", "ElasticServer",
     "ExponentProposal", "FoldEngine", "FoldError", "FoldState",
     "Membership", "QuorumNotReached", "RoundContract", "RoundReport",
-    "StaleContractError", "negotiate_contract",
+    "ShardRange", "ShardedFoldService", "ShardedFoldState",
+    "StaleContractError", "negotiate_contract", "shard_contract",
+    "shard_ranges", "stripe_payload",
 ]

@@ -164,6 +164,25 @@ class ElasticClient:
             client=self.client, contract_id=contract.contract_id,
             sketch=sk, index_words=self._cache["index_words"])
 
+    def payload_stripes(self, contract: RoundContract, n_shards: int,
+                        shared_exponents: Optional[np.ndarray] = None
+                        ) -> list:
+        """Client-side striping for a sharded aggregation point (PR 10):
+        the round payload pre-split into per-shard sub-payloads, so each
+        stripe can be shipped straight to the shard host that owns its
+        bucket range instead of transiting the full payload through one
+        ingress. The split is the server's own
+        :func:`repro.elastic.shard.stripe_payload` over the canonical
+        :func:`repro.elastic.shard.shard_ranges` tiling — the tests pin
+        client-side stripes byte-identical to the server striping the
+        full payload itself."""
+        from .shard import shard_ranges, stripe_payload
+        p = self.payload(contract, shared_exponents)
+        return stripe_payload(
+            p, contract, shard_ranges(contract.n_buckets, n_shards),
+            contract.bucket_elems // self.cfg.block_elems,
+            contract.bucket_elems // 32)
+
     def contribute(self, contract: RoundContract, grads: Any
                    ) -> ClientPayload:
         """f32 convenience: propose + payload in one call (the f32 wire

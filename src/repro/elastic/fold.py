@@ -33,6 +33,7 @@ order — integer adds are exact in every association order.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, Optional, Set
 
 import numpy as np
@@ -51,6 +52,42 @@ from .membership import ClientPayload, RoundContract, StaleContractError
 class FoldError(RuntimeError):
     """A payload that can never be folded into this round (duplicate
     client, unknown client, oversubscribed cohort, wrong geometry)."""
+
+
+@functools.lru_cache(maxsize=128)
+def _recover_fn(cfg: CompressionConfig, padded: int, wire_dtype: str,
+                mantissa_bits: Optional[int]):
+    """The round's jit-compiled recover pass, cached by contract
+    geometry — ``(padded = n_buckets * bucket_elems, wire dtype, fxp32
+    mantissa budget)`` plus the full compression config.
+
+    Engines used to hold a per-instance ``jax.jit`` closure, which
+    silently *retraced* the fused consumer every round (each
+    ``open_round`` builds a fresh engine); worse, had an engine been
+    reused across renegotiated geometries it would have *hit* a
+    stale-shaped compiled fn. Keying the cache by geometry gives
+    consecutive same-geometry rounds (and every shard of a sharded
+    round with equal bucket counts) one shared compiled fn, while a
+    renegotiated geometry — or a repriced fxp32 mantissa budget, which
+    changes the dequant scale — gets its own entry. ``block_offset`` is
+    a *traced* argument, so shards peeling at different global block
+    offsets share one compiled fn too.
+    """
+    comp = HomomorphicCompressor(cfg)
+    if wire_dtype == "fxp32":
+        @jax.jit
+        def rec(sk, wd, exps, block_offset):
+            return comp.recover(
+                CompressedLeaf(sketch=sk, index_words=wd), padded,
+                block_offset=block_offset,
+                dequant=(exps, mantissa_bits))
+    else:
+        @jax.jit
+        def rec(sk, wd, block_offset):
+            return comp.recover(
+                CompressedLeaf(sketch=sk, index_words=wd), padded,
+                block_offset=block_offset)
+    return rec
 
 
 @dataclasses.dataclass
@@ -81,7 +118,8 @@ class FoldEngine:
     """Per-round async fold over one :class:`RoundContract`."""
 
     def __init__(self, contract: RoundContract, cfg: CompressionConfig,
-                 window_slots: Optional[int] = None):
+                 window_slots: Optional[int] = None,
+                 block_offset: int = 0):
         if cfg.wire_dtype != contract.wire_dtype:
             raise ValueError(
                 f"config wire_dtype {cfg.wire_dtype!r} != contract "
@@ -112,21 +150,18 @@ class FoldEngine:
         # register check all apply to every incremental fxp32 fold
         self._switch = SwitchModel(ports=2, slots=self.window_slots) \
             if self.fxp32 else None
-        # the engine's geometry is fixed for the round, so the recover
-        # pass compiles once and every finalize/decode hits the cache —
-        # recover called eagerly re-dispatches its fused consumer every
-        # time, which dominates the round close-out tail
-        if self.fxp32:
-            self._recover_jit = jax.jit(
-                lambda sk, wd, exps: self.comp.recover(
-                    CompressedLeaf(sketch=sk, index_words=wd),
-                    self.padded,
-                    dequant=(exps, self.contract.mantissa_bits)))
-        else:
-            self._recover_jit = jax.jit(
-                lambda sk, wd: self.comp.recover(
-                    CompressedLeaf(sketch=sk, index_words=wd),
-                    self.padded))
+        # ``block_offset``: hash-plan id of this engine's first sketch
+        # block. 0 for a full-range engine; a sharded round's per-shard
+        # engines peel their bucket range at its global block position
+        # (the same offset rule the PR 3/5 per-chunk peels use).
+        self.block_offset = int(block_offset)
+        # the recover pass is cached by contract geometry (see
+        # _recover_fn): every finalize/decode of every same-geometry
+        # round hits one compiled fn — recover called eagerly
+        # re-dispatches its fused consumer every time, which dominates
+        # the round close-out tail
+        self._recover_jit = _recover_fn(
+            cfg, self.padded, contract.wire_dtype, contract.mantissa_bits)
 
     # ------------------------------------------------------------------
 
@@ -305,10 +340,12 @@ class FoldEngine:
                 raise FoldError("fxp32 round closed without sealed "
                                 "exponents")
             rec = self._recover_jit(
-                sk, wd, jnp.asarray(
-                    np.repeat(state.exponents, self.blocks_per_bucket)))
+                sk, wd,
+                jnp.asarray(np.repeat(state.exponents,
+                                      self.blocks_per_bucket)),
+                jnp.int32(self.block_offset))
         else:
-            rec = self._recover_jit(sk, wd)
+            rec = self._recover_jit(sk, wd, jnp.int32(self.block_offset))
         return np.asarray(rec).reshape(self.contract.n_buckets,
                                        self.contract.bucket_elems)
 
@@ -324,10 +361,11 @@ class FoldEngine:
             if payload.exponents is None:
                 raise FoldError("fxp32 payload without exponents")
             rec = self._recover_jit(
-                sk, wd, jnp.asarray(
-                    np.repeat(np.asarray(payload.exponents),
-                              self.blocks_per_bucket)))
+                sk, wd,
+                jnp.asarray(np.repeat(np.asarray(payload.exponents),
+                                      self.blocks_per_bucket)),
+                jnp.int32(self.block_offset))
         else:
-            rec = self._recover_jit(sk, wd)
+            rec = self._recover_jit(sk, wd, jnp.int32(self.block_offset))
         return np.asarray(rec).reshape(self.contract.n_buckets,
                                        self.contract.bucket_elems)

@@ -44,6 +44,7 @@ from repro.ft.failures import (StragglerMonitor, SwitchRetransmitPolicy,
 from .fold import FoldEngine, FoldState
 from .membership import (ClientPayload, ExponentProposal, Membership,
                          RoundContract, StaleContractError)
+from .shard import ShardedFoldService
 
 
 class QuorumNotReached(RuntimeError):
@@ -102,13 +103,23 @@ class ElasticServer:
                  policy: Optional[AdmissionPolicy] = None,
                  retransmit: Optional[SwitchRetransmitPolicy] = None,
                  monitor: Optional[StragglerMonitor] = None,
-                 window_slots: Optional[int] = None):
+                 window_slots: Optional[int] = None,
+                 n_shards: int = 1, batch_size: int = 1):
         self.cfg = cfg
         self.plan: BucketPlan = make_bucket_plan(template, cfg)
         self.policy = policy or AdmissionPolicy()
         self.retransmit = retransmit
         self.monitor = monitor
         self.window_slots = window_slots
+        # PR 10 scale-out: with either knob above 1 every round runs
+        # through the ShardedFoldService (same fold surface, identical
+        # close-out semantics — the PR 10 pins hold bit-for-bit)
+        if n_shards < 1 or batch_size < 1:
+            raise ValueError(
+                f"n_shards/batch_size must be >= 1, got "
+                f"{n_shards}/{batch_size}")
+        self.n_shards = int(n_shards)
+        self.batch_size = int(batch_size)
         self.membership = Membership(max_cohort=self.policy.max_cohort)
         self.reports: List[RoundReport] = []
         self._round_id = 0
@@ -144,8 +155,14 @@ class ElasticServer:
         self.membership.admit_queued()
         self._contract = self.membership.contract(
             self._round_id, self.plan, self.cfg)
-        self._engine = FoldEngine(self._contract, self.cfg,
-                                  window_slots=self.window_slots)
+        if self.n_shards > 1 or self.batch_size > 1:
+            self._engine = ShardedFoldService(
+                self._contract, self.cfg, n_shards=self.n_shards,
+                batch_size=self.batch_size,
+                window_slots=self.window_slots, plan=self.plan)
+        else:
+            self._engine = FoldEngine(self._contract, self.cfg,
+                                      window_slots=self.window_slots)
         self._state = self._engine.init_state()
         self._deferred = []
         self._rejected_stale = 0

@@ -1,0 +1,578 @@
+"""Sharded, batched fold pipeline (PR 10) — parameter-server-style
+scale-out for the elastic aggregation service.
+
+PR 9's :class:`~repro.elastic.fold.FoldEngine` folds one payload at a
+time through a sequential per-bucket slot-pool walk: every arrival
+costs a full pass over the bucket stream, so round latency is
+O(cohort x stream) on one host. This module is the scale-out half of
+the ROADMAP's elastic direction — the parameter-server analogue of the
+PR 3 reduce-scatter split:
+
+- **Shard.** :class:`ShardedFoldService` tiles the round's bucket range
+  into ``n_shards`` contiguous shard ranges (the
+  ``BucketPlan.group_view`` / PR 6 ``WirePlan`` tiling rule: balanced,
+  contiguous, validated at construction), one
+  :class:`~repro.elastic.fold.FoldEngine` per shard with its own
+  :class:`~repro.net.switch.SwitchModel` slot pool and its own
+  shard-view :class:`~repro.elastic.membership.RoundContract`. A
+  payload is *striped* across shards (zero-copy views of its sketch
+  blocks / bitmap words / exponent slices) and shards fold with no
+  shared state — on real deployments each shard range lives on its own
+  host, so the round's fold wall is the max over shards, not the sum.
+- **Batch.** An ingest queue accumulates striped arrivals per shard and
+  folds them as stacked microbatches through one jit-cached vectorized
+  combine — an int64-checked segment-sum over the client axis for fxp32
+  sketches, a ``lax.reduce`` OR for bitmap words — instead of the
+  per-payload eager numpy walk, amortizing dispatch to O(1) per
+  microbatch. Per-payload work at ingest is validation + straggler
+  pricing + staging views: O(1) numpy.
+- **Canonical reduction order.** f32 adds are not associative, so PR 9
+  could only pin arrival-order invariance for the integer fxp32 wire.
+  Here the f32 stack is held per cohort slot and reduced at finalize in
+  **client-id-sorted chain order** (the left-leaning canonical tree:
+  ``((0 + p_c0) + p_c1) + ...`` over ascending client ids), so an f32
+  round's folded bits are a function of the contribution *set* — any
+  arrival permutation and any microbatch partition give the same
+  stream, bit-for-bit equal to the sequential engine fed client-sorted
+  arrivals. fxp32 microbatches fold eagerly into the int32 accumulator
+  (exact in every association), with the running-partial register
+  check restated for batched partials via
+  :meth:`~repro.net.switch.SwitchModel.check_batched_partial` — a
+  microbatch of ``k`` payloads is safe iff the round still has ``k``
+  contributions of worker-budget headroom.
+- **Telemetry rollup.** Per-shard windows/occupancy/RX/retransmit
+  counters live in each shard's :class:`~repro.elastic.fold.FoldState`
+  and roll up through :class:`ShardedFoldState`'s properties, so
+  ``server.py`` close-out (quorum, deferred-residual, the loss-free
+  assertion) reads the exact fields it reads from a sequential round.
+
+Straggler pricing walks the *same* full-range window grid the
+sequential engine walks (per-client retransmit counts and RX bytes are
+bit-identical to PR 9 — the property tests pin this), with each window
+attributed to the shard owning its first bucket through
+:meth:`repro.ft.failures.SwitchRetransmitPolicy.shard_view`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Set, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.bucketing import BucketPlan
+from repro.core.config import CompressionConfig
+from repro.ft.failures import SwitchRetransmitPolicy
+from repro.net.switch import SwitchModel
+
+from .fold import FoldEngine, FoldError, FoldState
+from .membership import ClientPayload, RoundContract, StaleContractError
+
+
+# ----------------------------------------------------------------------
+# Shard tiling
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardRange:
+    """One shard's contiguous bucket range (the PR 6 ``WireGroup``
+    tiling shape, minus the wire name)."""
+
+    index: int
+    start: int                       # first bucket
+    count: int                       # buckets in this shard
+
+    @property
+    def stop(self) -> int:
+        return self.start + self.count
+
+
+def shard_ranges(n_buckets: int, n_shards: int) -> Tuple[ShardRange, ...]:
+    """Balanced contiguous tiling of ``n_buckets`` into ``n_shards``
+    ranges: the first ``n_buckets % n_shards`` shards take one extra
+    bucket, and the ranges tile ``[0, n_buckets)`` exactly — the same
+    contiguity/coverage rule ``WirePlan`` validates for wire groups."""
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    if n_shards > n_buckets:
+        raise ValueError(
+            f"cannot split {n_buckets} buckets into {n_shards} shards "
+            "(a shard needs at least one bucket)")
+    base, extra = divmod(n_buckets, n_shards)
+    ranges, start = [], 0
+    for s in range(n_shards):
+        count = base + (1 if s < extra else 0)
+        ranges.append(ShardRange(index=s, start=start, count=count))
+        start += count
+    assert start == n_buckets
+    return tuple(ranges)
+
+
+def shard_contract(contract: RoundContract, rng: ShardRange,
+                   plan: Optional[BucketPlan] = None) -> RoundContract:
+    """The shard-view round contract: same cohort / wire pricing, the
+    shard's bucket count, and ``total_elems`` truncated at the stream's
+    true length — the ``BucketPlan.group_view`` rule, so the last
+    shard's zero padding sits exactly where the full plan pads. When
+    the server's :class:`BucketPlan` is at hand, the view is derived
+    through ``group_view`` itself."""
+    if plan is not None:
+        total = plan.group_view(rng.start, rng.count).total
+    else:
+        total = min(rng.count * contract.bucket_elems,
+                    contract.total_elems - rng.start * contract.bucket_elems)
+    return dataclasses.replace(contract, n_buckets=rng.count,
+                               total_elems=total)
+
+
+# ----------------------------------------------------------------------
+# Payload striping
+# ----------------------------------------------------------------------
+
+def stripe_payload(payload: ClientPayload, contract: RoundContract,
+                   ranges: Tuple[ShardRange, ...], blocks_per_bucket: int,
+                   words_per_bucket: int) -> List[ClientPayload]:
+    """Split one full-range payload into per-shard sub-payloads —
+    zero-copy views of the sketch block rows, bitmap word rows, and
+    exponent entries covering each shard's bucket range. Striping is
+    exact because buckets align to whole sketch blocks *and* whole
+    bitmap words (``CompressionConfig.bucket_quantum``), and the
+    per-shard slice byte counts sum to ``payload.nbytes``."""
+    sk = np.asarray(payload.sketch)
+    wd = np.asarray(payload.index_words).reshape(
+        contract.n_buckets, words_per_bucket)
+    exps = None if payload.exponents is None \
+        else np.asarray(payload.exponents)
+    out = []
+    for r in ranges:
+        b0, b1 = r.start * blocks_per_bucket, r.stop * blocks_per_bucket
+        out.append(ClientPayload(
+            client=payload.client,
+            contract_id=payload.contract_id,
+            sketch=sk[b0:b1],
+            index_words=wd[r.start:r.stop].reshape(-1),
+            exponents=None if exps is None else exps[r.start:r.stop]))
+    return out
+
+
+# ----------------------------------------------------------------------
+# The jit-cached vectorized combines (one dispatch per microbatch)
+# ----------------------------------------------------------------------
+
+@jax.jit
+def _fxp_batch_fold(acc_sk, stack_sk):
+    """Batched integer fold: segment-sum of ``k`` stacked int32 payload
+    sketches into the resident accumulator. Integer adds are exact in
+    every association, so any staging order gives the same bits. The
+    running-partial register check happens on the host (true int64 —
+    JAX may run with x64 disabled, where an in-graph int64 cumsum would
+    silently truncate to int32 and *wrap past the very overflow it is
+    checking for*) and gates the commit of this sum."""
+    return acc_sk + jnp.sum(stack_sk, axis=0, dtype=jnp.int32)
+
+
+def _fxp_partial_extrema(acc_sk, stack_sk):
+    """int64 running-partial extrema of ``[accumulator; payload 1; ...;
+    payload k]`` — the operand order of the batched fold — for
+    :meth:`repro.net.switch.SwitchModel.check_batched_partial`."""
+    rows = np.concatenate(
+        [acc_sk.reshape(1, -1).astype(np.int64),
+         stack_sk.reshape(stack_sk.shape[0], -1).astype(np.int64)], axis=0)
+    partials = np.cumsum(rows, axis=0)
+    return int(partials.max()), int(partials.min())
+
+
+@jax.jit
+def _or_batch_fold(acc_wd, stack_wd):
+    """Batched bitmap fold: reduce-OR over the client axis (exact and
+    commutative — OR folds eagerly on both wires)."""
+    red = jax.lax.reduce(stack_wd, np.uint32(0),
+                         jax.lax.bitwise_or, (0,))
+    return acc_wd | red
+
+
+@jax.jit
+def _f32_sorted_chain(stack, idx, k):
+    """Canonical f32 reduction: left-fold ``stack[idx[0..k)]`` from a
+    zero accumulator — ``idx`` holds the contributing cohort slots in
+    ascending client-id order, so the association and operand order are
+    exactly the sequential engine's fold fed client-sorted arrivals."""
+    def body(i, acc):
+        return acc + stack[idx[i]]
+    return jax.lax.fori_loop(0, k, body,
+                             jnp.zeros(stack.shape[1:], jnp.float32))
+
+
+# ----------------------------------------------------------------------
+# State
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ShardedFoldState:
+    """One sharded round's state: per-shard accumulator
+    :class:`FoldState`s plus the service-level roster/telemetry the
+    server's close-out reads. The rollup properties expose the exact
+    fields a sequential :class:`FoldState` exposes, so ``server.py`` is
+    oblivious to the sharding."""
+
+    contract: RoundContract
+    shard_states: List[FoldState]
+    # staged (cohort_slot, sketch_view, words_view) per shard, drained
+    # by each microbatch flush
+    queues: List[list]
+    # f32 only: per-shard cohort-slotted payload stacks (slot = cohort
+    # position, ascending client id), reduced at finalize in canonical
+    # order; None on the fxp32 wire, which folds eagerly
+    stacks: Optional[List[np.ndarray]]
+    exponents: Optional[np.ndarray] = None   # sealed full-range vector
+    exp_acc: Optional[np.ndarray] = None     # running max during phase A
+    exp_clients: Set[int] = dataclasses.field(default_factory=set)
+    contributions: int = 0
+    clients: Set[int] = dataclasses.field(default_factory=set)
+    slots: List[int] = dataclasses.field(default_factory=list)
+    rx_bytes: Dict[int, int] = dataclasses.field(default_factory=dict)
+    retransmits: int = 0
+    priced_windows: int = 0          # straggler-pricing walk cursor
+    flushes: int = 0
+    fold_s: List[float] = dataclasses.field(default_factory=list)
+    finalize_s: List[float] = dataclasses.field(default_factory=list)
+
+    @property
+    def windows(self) -> int:
+        return sum(st.windows for st in self.shard_states)
+
+    @property
+    def occupancy_peak(self) -> int:
+        return max((st.occupancy_peak for st in self.shard_states),
+                   default=0)
+
+
+# ----------------------------------------------------------------------
+# The service
+# ----------------------------------------------------------------------
+
+class ShardedFoldService:
+    """Scale-out fold over one round: S shard engines + microbatched
+    ingest. Drop-in for :class:`FoldEngine` (same ``init_state`` /
+    ``propose_exponents`` / ``seal_exponents`` / ``fold`` / ``finalize``
+    / ``decode_payload`` surface), with identical validation, straggler
+    accounting, and — via the canonical f32 order — identical folded
+    bits for any arrival permutation and microbatch partition."""
+
+    def __init__(self, contract: RoundContract, cfg: CompressionConfig,
+                 n_shards: int = 1, batch_size: int = 8,
+                 window_slots: Optional[int] = None,
+                 plan: Optional[BucketPlan] = None):
+        if batch_size < 1:
+            raise ValueError(f"batch_size must be >= 1, got {batch_size}")
+        self.contract = contract
+        self.cfg = cfg
+        self.batch_size = int(batch_size)
+        self.ranges = shard_ranges(contract.n_buckets, n_shards)
+        self.n_shards = len(self.ranges)
+        # one engine per shard range, each with its own slot pool and a
+        # shard-view contract; the geometry-keyed recover cache means
+        # equal-sized shards share ONE compiled recover fn, peeling at
+        # their global block offsets via the traced offset argument
+        self.engines = [
+            FoldEngine(shard_contract(contract, r, plan), cfg,
+                       window_slots=window_slots,
+                       block_offset=r.start
+                       * (contract.bucket_elems // cfg.block_elems))
+            for r in self.ranges]
+        e0 = self.engines[0]
+        self.window_slots = e0.window_slots
+        self.fxp32 = e0.fxp32
+        self.blocks_per_bucket = e0.blocks_per_bucket
+        self.words_per_bucket = e0.words_per_bucket
+        # full-range geometry (payloads arrive full-range and are
+        # striped here — or pre-striped client-side, which is pinned
+        # identical)
+        self.n_blocks = contract.n_buckets * self.blocks_per_bucket
+        self.sketch_shape = (self.n_blocks, cfg.rows, cfg.lanes)
+        self.n_words = contract.n_buckets * self.words_per_bucket
+        # per-shard batched slot pools: port 0 is the resident
+        # accumulator, port 1 the (batched) ingest stream
+        self._pools = [SwitchModel(ports=2, slots=self.window_slots)
+                       for _ in self.ranges] if self.fxp32 else None
+
+    # ------------------------------------------------------------------
+
+    def init_state(self) -> ShardedFoldState:
+        shard_states = [eng.init_state() for eng in self.engines]
+        stacks = None
+        if not self.fxp32:
+            W = self.contract.workers
+            stacks = [np.zeros((W,) + st.sketch.shape, np.float32)
+                      for st in shard_states]
+        return ShardedFoldState(
+            contract=self.contract, shard_states=shard_states,
+            queues=[[] for _ in self.ranges], stacks=stacks,
+            fold_s=[0.0] * self.n_shards,
+            finalize_s=[0.0] * self.n_shards)
+
+    # ---- phase A (fxp32): exponent negotiation -----------------------
+
+    def propose_exponents(self, state: ShardedFoldState, client: int,
+                          exponents: np.ndarray,
+                          contract_id: Optional[str] = None) -> None:
+        """Max-fold one full-range exponent proposal (order-free, same
+        semantics as the sequential engine); the sealed vector is
+        striped to the shards at :meth:`seal_exponents`."""
+        if not self.fxp32:
+            raise FoldError("the f32 wire negotiates no exponents")
+        if contract_id is not None and \
+                contract_id != self.contract.contract_id:
+            raise StaleContractError(
+                f"proposal quotes {contract_id}, round is "
+                f"{self.contract.contract_id}")
+        client = int(client)
+        if client not in self.contract.cohort:
+            raise FoldError(
+                f"client {client} is not in this round's cohort")
+        if client in state.exp_clients:
+            raise FoldError(f"client {client} already proposed exponents")
+        if state.exponents is not None:
+            raise FoldError("exponents already sealed for this round")
+        e = np.asarray(exponents)
+        if e.shape != (self.contract.n_buckets,) or e.dtype != np.int32:
+            raise FoldError(
+                f"exponent proposal must be ({self.contract.n_buckets},) "
+                f"int32, got {e.shape} {e.dtype}")
+        state.exp_acc = e.copy() if state.exp_acc is None \
+            else np.maximum(state.exp_acc, e)
+        state.exp_clients.add(client)
+
+    def seal_exponents(self, state: ShardedFoldState) -> np.ndarray:
+        if not self.fxp32:
+            raise FoldError("the f32 wire negotiates no exponents")
+        if state.exp_acc is None:
+            raise FoldError("no exponent proposals to seal")
+        if state.exponents is None:
+            state.exponents = state.exp_acc.copy()
+            for r, st in zip(self.ranges, state.shard_states):
+                st.exponents = state.exponents[r.start:r.stop].copy()
+        return state.exponents
+
+    # ---- phase B: batched ingest -------------------------------------
+
+    def fold(self, state: ShardedFoldState, payload: ClientPayload,
+             arrival_s: float = 0.0,
+             policy: Optional[SwitchRetransmitPolicy] = None) -> int:
+        """Ingest one payload: validate (identically to the sequential
+        engine), price straggler retransmits over the full-range window
+        walk, then stage the striped slices on each shard's microbatch
+        queue — a queue that reaches ``batch_size`` flushes through the
+        jit-cached combine. Returns the retransmit count; raises
+        exactly what :meth:`FoldEngine.fold` raises, with state
+        untouched on a straggler timeout."""
+        if payload.contract_id != self.contract.contract_id:
+            raise StaleContractError(
+                f"payload quotes {payload.contract_id}, round is "
+                f"{self.contract.contract_id} — re-encode under the "
+                "current contract")
+        client = int(payload.client)
+        if client not in self.contract.cohort:
+            raise FoldError(
+                f"client {client} is not in this round's cohort")
+        if client in state.clients:
+            raise FoldError(
+                f"client {client} already contributed this round")
+        if state.contributions >= self.contract.workers:
+            raise FoldError(
+                f"{state.contributions} payloads already folded on a "
+                f"wire sized for {self.contract.workers} workers "
+                "(overflow bound would not hold)")
+        sk = np.asarray(payload.sketch)
+        wd = np.asarray(payload.index_words)
+        want_dt = np.int32 if self.fxp32 else np.float32
+        if sk.shape != self.sketch_shape or sk.dtype != want_dt:
+            raise FoldError(
+                f"sketch must be {self.sketch_shape} "
+                f"{np.dtype(want_dt).name}, got {sk.shape} {sk.dtype}")
+        if wd.shape != (self.n_words,) or wd.dtype != np.uint32:
+            raise FoldError(
+                f"index_words must be ({self.n_words},) uint32, got "
+                f"{wd.shape} {wd.dtype}")
+        if self.fxp32:
+            if state.exponents is None:
+                raise StaleContractError(
+                    "fxp32 payload before the shared exponents were "
+                    "sealed — nothing to verify the quantization against")
+            if payload.exponents is None or not np.array_equal(
+                    np.asarray(payload.exponents), state.exponents):
+                raise StaleContractError(
+                    f"client {client}'s payload was quantized against "
+                    "exponents that are not this round's sealed vector "
+                    "— re-encode")
+
+        nb = self.contract.n_buckets
+        wd_b = wd.reshape(nb, self.words_per_bucket)
+        # straggler pricing first (state untouched when the arrival
+        # blows the budget): the SAME full-range window walk the
+        # sequential engine prices — per-client retransmit counts and
+        # RX bytes are bit-identical to PR 9 — with each window
+        # attributed to the shard owning its first bucket
+        retries = 0
+        rx = payload.nbytes
+        if policy is not None and arrival_s > 0:
+            cohort_port = self.contract.cohort.index(client)
+            row_bytes = sk[:self.blocks_per_bucket].nbytes + wd_b[0].nbytes
+            views = [policy.shard_view(r.index) for r in self.ranges]
+            owner = np.searchsorted(
+                [r.stop for r in self.ranges],
+                np.arange(0, nb, self.window_slots), side="right")
+            for w, w0 in enumerate(range(0, nb, self.window_slots)):
+                w1 = min(w0 + self.window_slots, nb)
+                r = views[int(owner[w])].on_window(
+                    state.priced_windows + w, cohort_port,
+                    float(arrival_s), (w1 - w0) * row_bytes)
+                retries += r
+                rx += r * (w1 - w0) * row_bytes
+            state.priced_windows += w + 1
+
+        # stage: zero-copy stripes on each shard's microbatch queue
+        slot = self.contract.cohort.index(client)
+        for r, st, q in zip(self.ranges, state.shard_states,
+                            state.queues):
+            b0 = r.start * self.blocks_per_bucket
+            b1 = r.stop * self.blocks_per_bucket
+            q.append((slot, sk[b0:b1], wd_b[r.start:r.stop]))
+            st.contributions += 1
+            st.clients.add(client)
+            slice_bytes = sk[b0:b1].nbytes + wd_b[r.start:r.stop].nbytes
+            if payload.exponents is not None:
+                slice_bytes += r.count * np.asarray(
+                    payload.exponents).dtype.itemsize
+            st.rx_bytes[client] = st.rx_bytes.get(client, 0) + slice_bytes
+        state.contributions += 1
+        state.clients.add(client)
+        state.slots.append(slot)
+        state.rx_bytes[client] = state.rx_bytes.get(client, 0) + rx
+        state.retransmits += retries
+
+        for s in range(self.n_shards):
+            if len(state.queues[s]) >= self.batch_size:
+                self._flush_shard(state, s)
+        return retries
+
+    def flush(self, state: ShardedFoldState) -> None:
+        """Drain every shard's queue through the batched combine (the
+        service flushes automatically at ``batch_size`` and at
+        :meth:`finalize`; this is the explicit hook)."""
+        for s in range(self.n_shards):
+            self._flush_shard(state, s)
+
+    def _flush_shard(self, state: ShardedFoldState, s: int) -> None:
+        q = state.queues[s]
+        if not q:
+            return
+        state.queues[s] = []
+        st = state.shard_states[s]
+        rng = self.ranges[s]
+        k = len(q)
+        t0 = time.perf_counter()
+        stack_wd = np.stack([e[2] for e in q])
+        if self.fxp32:
+            stack_sk = np.stack([e[1] for e in q])
+            # the register-width check BEFORE committing anything — the
+            # switch is the authority on the int32 bound, restated for
+            # the batched partial (acc + k stacked payloads)
+            pmax, pmin = _fxp_partial_extrema(st.sketch, stack_sk)
+            pool = self._pools[s]
+            pool.reset()
+            pool.check_batched_partial(pmax, pmin,
+                                       ports=k + 1, window=st.windows)
+            st.sketch = np.asarray(_fxp_batch_fold(
+                jnp.asarray(st.sketch), jnp.asarray(stack_sk)))
+            st.index_words = np.asarray(_or_batch_fold(
+                jnp.asarray(st.index_words), jnp.asarray(stack_wd)))
+            chunk_bytes = (st.sketch[:self.blocks_per_bucket].nbytes
+                           + st.index_words[0].nbytes)
+            pool.account_batched_fold(
+                n_chunks=rng.count, k_ports=k,
+                port_bytes=rng.count * chunk_bytes,
+                chunk_bytes=chunk_bytes)
+            rep = pool.report()
+            st.windows += rep["windows"]
+            st.occupancy_peak = max(st.occupancy_peak,
+                                    rep["occupancy_peak"])
+        else:
+            # f32: bitmap OR folds eagerly (exact); the sketch stack is
+            # staged per cohort slot and reduced at finalize in the
+            # canonical client-sorted order
+            slots = np.asarray([e[0] for e in q], np.int64)
+            state.stacks[s][slots] = np.stack([e[1] for e in q])
+            st.index_words = np.asarray(_or_batch_fold(
+                jnp.asarray(st.index_words), jnp.asarray(stack_wd)))
+            for w0 in range(0, rng.count, self.window_slots):
+                w1 = min(w0 + self.window_slots, rng.count)
+                st.windows += 1
+                st.occupancy_peak = max(st.occupancy_peak, w1 - w0)
+        state.flushes += 1
+        state.fold_s[s] += time.perf_counter() - t0
+
+    # ---- recovery ----------------------------------------------------
+
+    def finalize(self, state: ShardedFoldState) -> np.ndarray:
+        """Flush the remaining microbatches, reduce the f32 stacks in
+        canonical order, recover each shard at its global block offset
+        (one jit-cached consumer call per shard — equal-sized shards
+        share one compiled fn), and reassemble the
+        ``(n_buckets, bucket_elems)`` stream."""
+        if state.contributions == 0:
+            raise FoldError("nothing folded — cannot finalize")
+        self.flush(state)
+        if not self.fxp32:
+            W = self.contract.workers
+            order = np.sort(np.asarray(state.slots, np.int64))
+            idx = np.zeros((W,), np.int32)
+            idx[:order.size] = order
+            k = np.int32(order.size)
+            for s, st in enumerate(state.shard_states):
+                t0 = time.perf_counter()
+                flat = _f32_sorted_chain(
+                    jnp.asarray(state.stacks[s].reshape(W, -1)),
+                    jnp.asarray(idx), k)
+                st.sketch = np.asarray(flat).reshape(st.sketch.shape)
+                state.fold_s[s] += time.perf_counter() - t0
+        rows = []
+        for s, (eng, st) in enumerate(zip(self.engines,
+                                          state.shard_states)):
+            t0 = time.perf_counter()
+            rows.append(eng.finalize(st))
+            state.finalize_s[s] += time.perf_counter() - t0
+        return np.concatenate(rows, axis=0)
+
+    def decode_payload(self, payload: ClientPayload) -> np.ndarray:
+        """Recover ONE payload on its own (the deferred-residual path):
+        striped per shard and peeled at each shard's global block
+        offset — bit-identical to the sequential engine's full-range
+        decode because blocks peel independently."""
+        subs = stripe_payload(payload, self.contract, self.ranges,
+                              self.blocks_per_bucket,
+                              self.words_per_bucket)
+        return np.concatenate(
+            [eng.decode_payload(sub)
+             for eng, sub in zip(self.engines, subs)], axis=0)
+
+    # ---- telemetry ---------------------------------------------------
+
+    def per_shard_report(self, state: ShardedFoldState) -> List[dict]:
+        """Per-shard rollup rows (the benchmark's per-shard throughput
+        table): bucket range, windows, occupancy, RX bytes, staged
+        fold/finalize seconds."""
+        out = []
+        for r, st, fold_s, fin_s in zip(self.ranges, state.shard_states,
+                                        state.fold_s, state.finalize_s):
+            out.append({
+                "shard": r.index, "bucket_start": r.start,
+                "buckets": r.count, "windows": st.windows,
+                "occupancy_peak": st.occupancy_peak,
+                "contributions": st.contributions,
+                "rx_bytes": sum(st.rx_bytes.values()),
+                "fold_s": fold_s, "finalize_s": fin_s})
+        return out

@@ -178,19 +178,62 @@ class SwitchRetransmitPolicy:
         return int(np.ceil(delay_s / self.timeout_s)) - 1
 
     def on_window(self, window: int, port: int, delay_s: float,
-                  chunk_bytes: int) -> int:
+                  chunk_bytes: int, shard: Optional[int] = None) -> int:
         """Account one (port, window) arrival; returns the retransmit
-        count, raising :class:`SwitchStragglerTimeout` past the budget."""
+        count, raising :class:`SwitchStragglerTimeout` past the budget.
+        ``shard``: optional shard tag recorded on the event (set by
+        :class:`ShardRetransmitView`)."""
         retries = self.retries_for(delay_s)
         if retries > self.max_retries:
             raise SwitchStragglerTimeout(port, window, delay_s,
                                          self.max_retries)
         if retries:
-            self.events.append({
+            ev = {
                 "window": window, "port": port, "delay_s": delay_s,
                 "retries": retries, "retransmit_bytes": retries * chunk_bytes,
-                "action": "timeout+retransmit"})
+                "action": "timeout+retransmit"}
+            if shard is not None:
+                ev["shard"] = shard
+            self.events.append(ev)
         return retries
+
+    def shard_view(self, shard: int,
+                   port_stride: int = 1 << 16) -> "ShardRetransmitView":
+        """A per-shard namespaced view of this (shared) policy for the
+        sharded fold pipeline: shard ``s``'s port ``p`` books as
+        ``s * port_stride + p``, so per-shard slot pools never collide
+        in the shared event log, and events carry a ``shard`` tag. The
+        retry budget and timeout stay global — a client that is late is
+        late on every shard's port."""
+        return ShardRetransmitView(policy=self, shard=int(shard),
+                                   port_stride=int(port_stride))
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardRetransmitView:
+    """Shard-scoped facade over a shared :class:`SwitchRetransmitPolicy`
+    (see :meth:`SwitchRetransmitPolicy.shard_view`)."""
+
+    policy: SwitchRetransmitPolicy
+    shard: int
+    port_stride: int = 1 << 16
+
+    @property
+    def timeout_s(self) -> float:
+        return self.policy.timeout_s
+
+    @property
+    def max_retries(self) -> int:
+        return self.policy.max_retries
+
+    def retries_for(self, delay_s: float) -> int:
+        return self.policy.retries_for(delay_s)
+
+    def on_window(self, window: int, port: int, delay_s: float,
+                  chunk_bytes: int) -> int:
+        return self.policy.on_window(
+            window, self.shard * self.port_stride + port, delay_s,
+            chunk_bytes, shard=self.shard)
 
 
 # ----------------------------------------------------------------------

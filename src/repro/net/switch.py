@@ -183,6 +183,68 @@ class SwitchModel:
         return out_sk, out_bm
 
     # ------------------------------------------------------------------
+    # Batched folds (PR 10 sharded fold pipeline)
+    # ------------------------------------------------------------------
+
+    def check_batched_partial(self, partial_max: int, partial_min: int,
+                              ports: Optional[int] = None,
+                              window: int = 0) -> None:
+        """Register-width check for a *batched* fold whose arithmetic
+        ran outside the switch (the sharded fold pipeline's jit-cached
+        combine): the caller hands the int64 running-partial extrema of
+        ``[resident accumulator; payload 1; ...; payload k]`` and this
+        raises the exact :class:`OverflowError` the streaming
+        :meth:`aggregate` raises when a port-by-port sum leaves int32.
+
+        The semantics restate the sequential proof for batched
+        partials: a microbatch of ``k`` payloads on a wire sized by
+        :class:`repro.net.fixedpoint.FixedPointWire` for ``W`` workers
+        is safe iff the round still has ``k`` contributions of
+        headroom, because every client-order prefix sum is then bounded
+        by ``W * 2^mantissa_bits <= 2^30`` — the same bound the
+        one-payload-at-a-time walk relies on.
+        """
+        ports = self.ports if ports is None else int(ports)
+        if int(partial_max) > int(_INT32_MAX) or \
+                int(partial_min) < int(_INT32_MIN):
+            raise OverflowError(
+                f"window {window}: a running {ports}-port sum "
+                "overflows a 32-bit switch register — the stream was "
+                "not sized by FixedPointWire for this port count")
+
+    def account_batched_fold(self, n_chunks: int, k_ports: int,
+                             port_bytes: int, chunk_bytes: int) -> None:
+        """Slot-pool accounting for one batched fold pass: ``k_ports``
+        arriving payload streams of ``n_chunks`` bucket chunks folded
+        into the resident accumulator through this pool's windows in a
+        single vectorized combine. Windows/occupancy walk the same
+        ``slots``-bounded grid the streaming :meth:`aggregate` does —
+        but ONCE for the whole microbatch, which is the batched
+        pipeline's amortization — and the per-port counters book each
+        arriving stream's ``port_bytes`` as RX on the ingest port plus
+        the reduced stream's TX back down.
+        """
+        if n_chunks < 1 or k_ports < 1:
+            raise ValueError(
+                f"need n_chunks >= 1 and k_ports >= 1, got "
+                f"{n_chunks}/{k_ports}")
+        up_total = 0
+        for w0 in range(0, n_chunks, self.slots):
+            w1 = min(w0 + self.slots, n_chunks)
+            self.windows += 1
+            self.occupancy_peak = max(self.occupancy_peak, w1 - w0)
+            up = (w1 - w0) * chunk_bytes
+            self.window_chunks.append(w1 - w0)
+            self.window_root_bytes.append(up)
+            up_total += up
+        ingest = self.port_counters[-1]
+        ingest.rx_bytes += k_ports * port_bytes
+        ingest.rx_chunks += k_ports * n_chunks
+        ingest.tx_bytes += up_total
+        self.root_tx_bytes += up_total
+        self.root_rx_bytes += up_total
+
+    # ------------------------------------------------------------------
 
     def report(self) -> Dict[str, object]:
         return {

@@ -813,7 +813,7 @@ for k in ("w1", "w2", "scale"):
           f"maxerr={np.abs(np.asarray(got_rs[k]) - mean_ref[k]).max():.2e}")
     assert ok, k
 
-# ---- 13. elastic aggregation service (PR 9) vs the in-mesh strategies
+# ---- 13. elastic aggregation service (PR 9/10) vs the in-mesh strategies
 # Fold-equivalence gate: a fixed-membership elastic round is the same
 # aggregate as the synchronous collective. Per EF step, every client
 # contributes the same dyadic gradient its in-mesh worker saw and the
@@ -821,7 +821,11 @@ for k in ("w1", "w2", "scale"):
 # stream must match the `compressed` strategy's psum+OR output (f32)
 # and both the `compressed_innet` output and section 8's host replay of
 # FixedPointWire.roundtrip_reference (fxp32) — bit-for-bit, residuals
-# included.
+# included. The PR 10 arm replays the same schedule through the
+# sharded+batched fold pipeline (2 shard engines, microbatches of 3):
+# f32 matches via the canonical client-sorted reduction order, fxp32 in
+# any arrival order — the scale-out path changes nothing the wire can
+# observe.
 from repro.elastic import ElasticClient, ElasticServer
 
 el_template = {k: np.zeros(sh, np.float32) for k, sh in ef_shapes.items()}
@@ -829,42 +833,52 @@ perm_rng = np.random.default_rng(13)
 for wire_name, el_cfg, refs in (
         ("f32", cfg_ef, [(got_ef[s][0], got_ef[s][1]) for s in range(3)]),
         ("fxp32", cfg_fx, [(got_fx[s][0], got_fx[s][1]) for s in range(3)])):
-    srv = ElasticServer(el_template, el_cfg)
-    clients = [ElasticClient(w, el_cfg) for w in range(n_workers)]
-    for w in range(n_workers):
-        srv.join(w)
-    for step in range(3):
-        contract = srv.open_round()
-        trees = [jax.tree.map(jnp.asarray,
-                              dyadic_tree(100 + 10 * step + w))
-                 for w in range(n_workers)]
-        if wire_name == "fxp32":
-            for w in range(n_workers):
-                srv.submit_exponents(clients[w].propose(contract, trees[w]))
-            shared = srv.seal_exponents()
-            payloads = [clients[w].payload(contract, shared)
-                        for w in range(n_workers)]
-        else:
-            payloads = [clients[w].contribute(contract, trees[w])
-                        for w in range(n_workers)]
-        for w in perm_rng.permutation(n_workers):
-            assert srv.submit(payloads[w]) == "folded"
-        stream, rep = srv.close_round()
-        assert rep.close_reason == "complete" and rep.folded == n_workers
-        out_tree = jax.tree.map(np.asarray,
-                                srv.plan.unpack(stream / n_workers))
-        want_out, want_res = refs[step]
-        for k in ef_shapes:
-            assert np.array_equal(out_tree[k], want_out[k]), \
-                f"elastic {wire_name} != in-mesh, step {step} leaf {k}"
+    for arm, srv_kwargs in (("sequential", {}),
+                            ("sharded S=2 b=3",
+                             {"n_shards": 2, "batch_size": 3})):
+        srv = ElasticServer(el_template, el_cfg, **srv_kwargs)
+        clients = [ElasticClient(w, el_cfg) for w in range(n_workers)]
+        for w in range(n_workers):
+            srv.join(w)
+        for step in range(3):
+            contract = srv.open_round()
+            trees = [jax.tree.map(jnp.asarray,
+                                  dyadic_tree(100 + 10 * step + w))
+                     for w in range(n_workers)]
             if wire_name == "fxp32":
-                assert np.array_equal(out_tree[k], fx_replay_refs[step][k]), \
-                    f"elastic fxp32 != codec replay, step {step} leaf {k}"
-            for w in range(n_workers):
-                assert np.array_equal(
-                    np.asarray(clients[w].residual[k]), want_res[k][w]), \
-                    (f"elastic {wire_name} EF residual drift, step {step} "
-                     f"leaf {k} client {w}")
-    print(f"OK elastic {wire_name} rounds == in-mesh aggregate, 3 EF steps")
+                for w in range(n_workers):
+                    srv.submit_exponents(
+                        clients[w].propose(contract, trees[w]))
+                shared = srv.seal_exponents()
+                payloads = [clients[w].payload(contract, shared)
+                            for w in range(n_workers)]
+            else:
+                payloads = [clients[w].contribute(contract, trees[w])
+                            for w in range(n_workers)]
+            for w in perm_rng.permutation(n_workers):
+                assert srv.submit(payloads[w]) == "folded"
+            stream, rep = srv.close_round()
+            assert rep.close_reason == "complete" and \
+                rep.folded == n_workers
+            out_tree = jax.tree.map(np.asarray,
+                                    srv.plan.unpack(stream / n_workers))
+            want_out, want_res = refs[step]
+            for k in ef_shapes:
+                assert np.array_equal(out_tree[k], want_out[k]), \
+                    (f"elastic {wire_name} [{arm}] != in-mesh, "
+                     f"step {step} leaf {k}")
+                if wire_name == "fxp32":
+                    assert np.array_equal(out_tree[k],
+                                          fx_replay_refs[step][k]), \
+                        (f"elastic fxp32 [{arm}] != codec replay, "
+                         f"step {step} leaf {k}")
+                for w in range(n_workers):
+                    assert np.array_equal(
+                        np.asarray(clients[w].residual[k]),
+                        want_res[k][w]), \
+                        (f"elastic {wire_name} [{arm}] EF residual "
+                         f"drift, step {step} leaf {k} client {w}")
+        print(f"OK elastic {wire_name} [{arm}] rounds == in-mesh "
+              "aggregate, 3 EF steps")
 
 print("ALL OK")

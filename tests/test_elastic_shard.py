@@ -1,0 +1,477 @@
+"""Sharded, batched fold pipeline (PR 10): tiling, striping, and the
+bit-for-bit parity pins against the PR 9 sequential fold.
+
+The core claims under test:
+
+- sharded+batched fold == sequential fold **bit-for-bit** — outputs AND
+  per-client RX/retransmit accounting — for any shard count, microbatch
+  size, and arrival permutation (fxp32 in any order; f32 against the
+  sequential engine fed client-id-sorted arrivals, which is exactly the
+  canonical order the batched pipeline reduces in);
+- the batched f32 fold is arrival-order invariant bit-for-bit — the
+  property PR 9 could only pin for the integer wire;
+- a microbatch whose running partial exceeds the fxp32
+  ``mantissa_bits = 30 - ceil_log2(W)`` budget raises through the
+  ``SwitchModel`` register check exactly as the sequential fold does
+  (the PR 9 dynamic-W gate scenario, batched);
+- the recover pass is cached by contract geometry: same-geometry rounds
+  share one compiled fn, renegotiated geometry gets its own (the PR 10
+  stale-shape bugfix).
+"""
+
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.bucketing import make_bucket_plan
+from repro.core.config import CompressionConfig
+from repro.elastic import (AdmissionPolicy, ClientPayload, ElasticClient,
+                           ElasticServer, FoldEngine, ShardedFoldService,
+                           negotiate_contract, shard_contract, shard_ranges,
+                           stripe_payload)
+from repro.elastic.fold import _recover_fn
+from repro.ft.failures import FailureSimulator, SwitchRetransmitPolicy
+from repro.net.fixedpoint import FixedPointWire
+from repro.net.switch import SwitchModel
+
+CFG = CompressionConfig(ratio=1.0, lanes=128, rows=6, rounds=10,
+                        chunk_blocks=8, topk_ratio=0.1, topk_exact=True,
+                        error_feedback=True, bucket_bytes=2 * 768 * 4)
+CFG_FX = dataclasses.replace(CFG, wire_dtype="fxp32")
+# 9000 elems -> 6 buckets of 1536: enough range for real shard sweeps
+SHAPES = {"a": (7000,), "b": (50, 40)}
+TEMPLATE = {k: np.zeros(sh, np.float32) for k, sh in SHAPES.items()}
+
+
+def dyadic_tree(seed):
+    """sign * 2^e values: every summation order is exact, so bitwise
+    equality isolates the fold math (same trick as test_elastic.py)."""
+    r = np.random.default_rng(seed)
+    out = {}
+    for k, sh in SHAPES.items():
+        n = int(np.prod(sh))
+        g = np.zeros(n, np.float32)
+        idx = r.choice(n, size=max(1, n // 3), replace=False)
+        g[idx] = (r.choice([-1.0, 1.0], size=idx.size)
+                  * np.exp2(r.integers(-2, 3, size=idx.size))
+                  ).astype(np.float32)
+        out[k] = jnp.asarray(g.reshape(sh))
+    return out
+
+
+def _plan(cfg=CFG):
+    return make_bucket_plan(TEMPLATE, cfg)
+
+
+# ----------------------------------------------------------------------
+# Tiling + striping
+# ----------------------------------------------------------------------
+
+def test_shard_ranges_balanced_contiguous_tiling():
+    rs = shard_ranges(10, 3)
+    assert [(r.start, r.count) for r in rs] == [(0, 4), (4, 3), (7, 3)]
+    assert rs[0].stop == rs[1].start and rs[1].stop == rs[2].start
+    assert rs[-1].stop == 10
+    assert shard_ranges(4, 4) == shard_ranges(4, 4)    # frozen/hashable
+    with pytest.raises(ValueError, match=">= 1"):
+        shard_ranges(4, 0)
+    with pytest.raises(ValueError, match="at least one bucket"):
+        shard_ranges(3, 4)
+
+
+def test_shard_contract_truncates_like_group_view():
+    plan = _plan()
+    contract = negotiate_contract(0, range(3), plan, CFG)
+    rs = shard_ranges(contract.n_buckets, 3)
+    # with and without the plan, the shard-view geometry is identical
+    for r in rs:
+        a = shard_contract(contract, r, plan)
+        b = shard_contract(contract, r)
+        assert (a.n_buckets, a.total_elems) == (b.n_buckets, b.total_elems)
+        assert a.total_elems == plan.group_view(r.start, r.count).total
+    # the last shard carries the stream's padding truncation
+    assert sum(shard_contract(contract, r).total_elems for r in rs) \
+        == contract.total_elems
+
+
+def test_stripe_payload_is_exact_and_lossless():
+    plan = _plan()
+    contract = negotiate_contract(0, range(2), plan, CFG)
+    payload = ElasticClient(0, CFG).contribute(contract, dyadic_tree(7))
+    bpb = contract.bucket_elems // CFG.block_elems
+    wpb = contract.bucket_elems // 32
+    for S in (1, 2, 3, contract.n_buckets):
+        rs = shard_ranges(contract.n_buckets, S)
+        subs = stripe_payload(payload, contract, rs, bpb, wpb)
+        assert len(subs) == S
+        # stripes reassemble the full payload exactly and their byte
+        # counts sum to the wire total
+        assert np.array_equal(
+            np.concatenate([np.asarray(s.sketch) for s in subs]),
+            np.asarray(payload.sketch))
+        assert np.array_equal(
+            np.concatenate([np.asarray(s.index_words) for s in subs]),
+            np.asarray(payload.index_words))
+        assert sum(s.nbytes for s in subs) == payload.nbytes
+
+
+def test_client_side_striping_matches_server_striping():
+    plan = _plan()
+    contract = negotiate_contract(0, range(2), plan, CFG)
+    client = ElasticClient(0, CFG)
+    client.propose(contract, dyadic_tree(9))
+    full = client.payload(contract)
+    stripes = client.payload_stripes(contract, 3)
+    server_side = stripe_payload(
+        full, contract, shard_ranges(contract.n_buckets, 3),
+        contract.bucket_elems // CFG.block_elems,
+        contract.bucket_elems // 32)
+    for a, b in zip(stripes, server_side):
+        assert a.client == b.client and a.contract_id == b.contract_id
+        assert np.array_equal(np.asarray(a.sketch), np.asarray(b.sketch))
+        assert np.array_equal(np.asarray(a.index_words),
+                              np.asarray(b.index_words))
+
+
+# ----------------------------------------------------------------------
+# The parity pin: sharded+batched == sequential, bit-for-bit
+# ----------------------------------------------------------------------
+
+def _run_pair(wire_cfg, cohort, n_shards, batch_size, perm, delays,
+              seed0=100):
+    """Fold one round through both paths; returns (sequential state,
+    sharded state, sequential out, sharded out, both engines)."""
+    plan = _plan(wire_cfg)
+    contract = negotiate_contract(0, cohort, plan, wire_cfg)
+    clients = {c: ElasticClient(c, wire_cfg) for c in cohort}
+    seq = FoldEngine(contract, wire_cfg)
+    svc = ShardedFoldService(contract, wire_cfg, n_shards=n_shards,
+                             batch_size=batch_size, plan=plan)
+    st_seq, st_sh = seq.init_state(), svc.init_state()
+    if wire_cfg.wire_dtype == "fxp32":
+        for i, c in enumerate(cohort):
+            p = clients[c].propose(contract, dyadic_tree(seed0 + i))
+            seq.propose_exponents(st_seq, c, p.exponents)
+            svc.propose_exponents(st_sh, c, p.exponents)
+        sealed = seq.seal_exponents(st_seq)
+        assert np.array_equal(sealed, svc.seal_exponents(st_sh))
+        payloads = {c: clients[c].payload(contract, sealed)
+                    for c in cohort}
+    else:
+        payloads = {c: clients[c].contribute(
+            contract, dyadic_tree(seed0 + i))
+            for i, c in enumerate(cohort)}
+    pol_seq = SwitchRetransmitPolicy(timeout_s=0.05, max_retries=64)
+    pol_sh = SwitchRetransmitPolicy(timeout_s=0.05, max_retries=64)
+    # the sequential reference folds in client-id-sorted order — the
+    # canonical order; fxp32 would match in ANY order (integer adds)
+    for c in sorted(cohort):
+        seq.fold(st_seq, payloads[c], arrival_s=delays[c], policy=pol_seq)
+    for c in perm:
+        svc.fold(st_sh, payloads[c], arrival_s=delays[c], policy=pol_sh)
+    return seq, svc, st_seq, st_sh, payloads
+
+
+@pytest.mark.parametrize("wire", ["f32", "fxp32"])
+@pytest.mark.parametrize("n_shards,batch_size", [(2, 3), (3, 1), (6, 2)])
+def test_sharded_batched_fold_matches_sequential(wire, n_shards,
+                                                 batch_size):
+    cfg = CFG if wire == "f32" else CFG_FX
+    cohort = (3, 7, 11, 20, 21)       # non-contiguous client ids
+    r = np.random.default_rng(n_shards * 10 + batch_size)
+    perm = list(r.permutation(list(cohort)))
+    delays = {c: float(d) for c, d in
+              zip(cohort, r.choice([0.0, 0.08, 0.17], size=len(cohort)))}
+    seq, svc, st_seq, st_sh, payloads = _run_pair(
+        cfg, cohort, n_shards, batch_size, perm, delays)
+    out_seq, out_sh = seq.finalize(st_seq), svc.finalize(st_sh)
+    assert np.array_equal(out_seq, out_sh)            # bit-for-bit
+    # per-client accounting parity: RX bytes and retransmit totals
+    assert st_seq.rx_bytes == st_sh.rx_bytes
+    assert st_seq.retransmits == st_sh.retransmits
+    assert st_seq.contributions == st_sh.contributions
+    assert st_sh.occupancy_peak <= svc.window_slots
+    # the deferred-residual path decodes identically too
+    c0 = cohort[0]
+    assert np.array_equal(seq.decode_payload(payloads[c0]),
+                          svc.decode_payload(payloads[c0]))
+
+
+def test_randomized_parity_sweep():
+    """Seeded randomized version of the hypothesis property (see
+    test_elastic_shard_property.py, which needs the 'test' extra):
+    random cohort sizes, shard counts, microbatch sizes, and arrival
+    permutations, both wires — outputs and accounting bit-identical."""
+    r = np.random.default_rng(2026)
+    for trial in range(6):
+        wire_cfg = CFG if trial % 2 == 0 else CFG_FX
+        n_clients = int(r.integers(2, 8))
+        cohort = tuple(sorted(r.choice(64, size=n_clients,
+                                       replace=False).tolist()))
+        plan = _plan(wire_cfg)
+        n_shards = int(r.integers(1, plan.n_buckets + 1))
+        batch_size = int(r.integers(1, n_clients + 2))
+        perm = list(r.permutation(list(cohort)))
+        delays = {c: float(r.choice([0.0, 0.06, 0.13])) for c in cohort}
+        seq, svc, st_seq, st_sh, _ = _run_pair(
+            wire_cfg, cohort, n_shards, batch_size, perm, delays,
+            seed0=300 + 20 * trial)
+        assert np.array_equal(seq.finalize(st_seq), svc.finalize(st_sh))
+        assert st_seq.rx_bytes == st_sh.rx_bytes
+        assert st_seq.retransmits == st_sh.retransmits
+
+
+def test_sharded_f32_fold_is_arrival_order_invariant():
+    """The new PR 10 property: batched f32 folds reduce in canonical
+    client-sorted order, so ANY arrival permutation and ANY microbatch
+    partition give the same f32 bits — PR 9 could only pin this for the
+    integer fxp32 wire."""
+    plan = _plan()
+    cohort = tuple(range(5))
+    contract = negotiate_contract(0, cohort, plan, CFG)
+    clients = {c: ElasticClient(c, CFG) for c in cohort}
+    # non-dyadic gradients: f32 rounding IS live, ordering matters
+    r = np.random.default_rng(5)
+    payloads = {}
+    for c in cohort:
+        g = {k: jnp.asarray(r.normal(size=sh).astype(np.float32) * np.pi)
+             for k, sh in SHAPES.items()}
+        payloads[c] = clients[c].contribute(contract, g)
+    outs = []
+    for (perm, bs) in [((0, 1, 2, 3, 4), 1), ((4, 2, 0, 3, 1), 2),
+                       ((1, 3, 0, 4, 2), 5), ((2, 4, 1, 0, 3), 3)]:
+        svc = ShardedFoldService(contract, CFG, n_shards=2,
+                                 batch_size=bs, plan=plan)
+        st = svc.init_state()
+        for c in perm:
+            svc.fold(st, payloads[c])
+        outs.append(svc.finalize(st))
+    for o in outs[1:]:
+        assert np.array_equal(outs[0], o)
+
+
+# ----------------------------------------------------------------------
+# fxp32 batched-partial overflow: the PR 9 dynamic-W gate, batched
+# ----------------------------------------------------------------------
+
+def _overflow_round(q_cell, batch_size):
+    """A 9-client fxp32 round whose payload cells all hold ``q_cell``,
+    folded as microbatches of ``batch_size``; returns the finalize-ready
+    (service, state)."""
+    plan = _plan(CFG_FX)
+    cohort = tuple(range(9))
+    contract = negotiate_contract(0, cohort, plan, CFG_FX)
+    svc = ShardedFoldService(contract, CFG_FX, n_shards=3,
+                             batch_size=batch_size, plan=plan)
+    st = svc.init_state()
+    exps = np.full((contract.n_buckets,), 10, np.int32)
+    for c in cohort:
+        svc.propose_exponents(st, c, exps)
+    sealed = svc.seal_exponents(st)
+    e0 = svc.engines[0]
+    sk = np.full((plan.n_buckets * e0.blocks_per_bucket,
+                  CFG_FX.rows, CFG_FX.lanes), q_cell, np.int32)
+    wd = np.zeros((plan.padded // 32,), np.uint32)
+    for c in cohort:
+        svc.fold(st, ClientPayload(
+            client=c, contract_id=contract.contract_id, sketch=sk,
+            index_words=wd, exponents=sealed))
+    return svc, st
+
+
+def test_fxp32_batched_partial_overflow_matches_sequential_gate():
+    """The PR 9 dynamic-W scenario (W grows 4 -> 9), restated for
+    batched partials: nine stale-budget (M=28) worst-case payloads
+    overflow int32 — the microbatched fold raises the SwitchModel's
+    register-check OverflowError exactly as the sequential per-payload
+    walk does — while the renegotiated budget (M=26) folds clean."""
+    w4, w9 = FixedPointWire(4), FixedPointWire(4).with_workers(9)
+    assert (w4.mantissa_bits, w9.mantissa_bits) == (28, 26)
+    q_stale = 2**28 - 2**4            # worst-case stale-budget cell
+    assert 9 * q_stale > 2**31 - 1
+    q_new = 2**26 - 2**2              # same cell under the new budget
+    assert 9 * q_new <= 2**30
+
+    # direct check-surface pin: the batched extrema raise the exact
+    # error the streaming aggregate raises
+    with pytest.raises(OverflowError, match="32-bit switch register"):
+        SwitchModel(ports=9, slots=4).check_batched_partial(
+            9 * q_stale, 0, ports=9)
+    SwitchModel(ports=9, slots=4).check_batched_partial(9 * q_new, 0)
+
+    # through the batched pipeline: the flush whose running partial
+    # crosses int32 raises (batch_size=9 folds all nine in ONE
+    # microbatch — k <= headroom in count, but the stale budget breaks
+    # the magnitude bound the contract's mantissa budget guarantees)
+    with pytest.raises(OverflowError, match="32-bit switch register"):
+        _overflow_round(q_stale, batch_size=9)
+    # and the sequential engine raises the same error on the same data
+    plan = _plan(CFG_FX)
+    contract = negotiate_contract(0, range(9), plan, CFG_FX)
+    seq = FoldEngine(contract, CFG_FX)
+    st = seq.init_state()
+    exps = np.full((contract.n_buckets,), 10, np.int32)
+    for c in range(9):
+        seq.propose_exponents(st, c, exps)
+    sealed = seq.seal_exponents(st)
+    sk = np.full(seq.sketch_shape, q_stale, np.int32)
+    wd = np.zeros((seq.n_words,), np.uint32)
+    with pytest.raises(OverflowError, match="32-bit switch register"):
+        for c in range(9):
+            seq.fold(st, ClientPayload(
+                client=c, contract_id=contract.contract_id, sketch=sk,
+                index_words=wd, exponents=sealed))
+
+    # renegotiated budget: the same nine-payload microbatch is provably
+    # safe and the fold completes
+    svc, st = _overflow_round(q_new, batch_size=9)
+    assert st.contributions == 9
+    assert int(st.shard_states[0].sketch[0, 0, 0]) == 9 * q_new
+
+
+def test_batched_fold_accounting_rolls_up_through_switch_pools():
+    svc, st = _overflow_round(2**20, batch_size=4)
+    out = svc.finalize(st)
+    assert out.shape == (st.contract.n_buckets, st.contract.bucket_elems)
+    # every shard walked its slots-bounded window grid at least once
+    # per flush, and the rollup exposes the sequential FoldState surface
+    assert st.windows > 0
+    assert 0 < st.occupancy_peak <= svc.window_slots
+    per_shard = svc.per_shard_report(st)
+    assert len(per_shard) == 3
+    assert sum(row["buckets"] for row in per_shard) \
+        == st.contract.n_buckets
+    assert all(row["contributions"] == 9 for row in per_shard)
+    assert sum(row["windows"] for row in per_shard) == st.windows
+
+
+# ----------------------------------------------------------------------
+# Recover-fn cache: keyed by contract geometry (the PR 10 bugfix)
+# ----------------------------------------------------------------------
+
+def test_recover_cache_shared_across_same_geometry_rounds():
+    plan = _plan()
+    c0 = negotiate_contract(0, range(3), plan, CFG)
+    c1 = negotiate_contract(1, range(3), plan, CFG)
+    e0, e1 = FoldEngine(c0, CFG), FoldEngine(c1, CFG)
+    # same geometry -> the SAME compiled fn object (no per-round retrace)
+    assert e0._recover_jit is e1._recover_jit
+    # every equal-sized shard of a sharded round shares ONE compiled fn
+    # too (block_offset is traced, so different offsets don't retrace) —
+    # but NOT the full-range engine's, whose padded length differs
+    svc = ShardedFoldService(c0, CFG, n_shards=2, plan=plan)
+    assert svc.engines[0]._recover_jit is svc.engines[1]._recover_jit
+    assert svc.engines[0]._recover_jit is not e0._recover_jit
+
+
+def test_recover_cache_distinct_across_renegotiated_geometry():
+    """Regression for the stale-shape hazard: consecutive rounds whose
+    bucket geometry renegotiates must not reuse a stale-shaped compiled
+    fn — and both rounds must recover correct values."""
+    plan_a = _plan()
+    small = {"a": np.zeros((900,), np.float32)}
+    plan_b = make_bucket_plan(small, CFG)
+    assert plan_a.n_buckets != plan_b.n_buckets
+    ca = negotiate_contract(0, range(2), plan_a, CFG)
+    cb = negotiate_contract(1, range(2), plan_b, CFG)
+    ea, eb = FoldEngine(ca, CFG), FoldEngine(cb, CFG)
+    assert ea._recover_jit is not eb._recover_jit
+    # geometry A round, then geometry B round, back-to-back: both exact
+    for contract, engine, tree in (
+            (ca, ea, None),
+            (cb, eb, {"a": np.ones((900,), np.float32)})):
+        st = engine.init_state()
+        ref = np.zeros((contract.n_buckets * contract.bucket_elems,),
+                       np.float32)
+        for w in range(2):
+            cl = ElasticClient(w, CFG)
+            g = tree if tree is not None else dyadic_tree(500 + w)
+            p = cl.contribute(contract, g)
+            engine.fold(st, p)
+            dec = np.asarray(engine.decode_payload(p)).reshape(-1)
+            # the compiled fn in use matches THIS round's geometry
+            assert dec.shape == ref.shape
+        out = engine.finalize(st)
+        assert out.shape == (contract.n_buckets, contract.bucket_elems)
+        assert np.isfinite(out).all()
+    # wire dtype and mantissa budget are part of the key
+    plan_fx = _plan(CFG_FX)
+    f4 = FoldEngine(negotiate_contract(0, range(4), plan_fx, CFG_FX),
+                    CFG_FX)
+    f9 = FoldEngine(negotiate_contract(1, range(9), plan_fx, CFG_FX),
+                    CFG_FX)
+    assert f4._recover_jit is not f9._recover_jit      # mantissa differs
+    assert f4._recover_jit is not ea._recover_jit      # wire differs
+    # and the cache key is exactly (cfg, padded, wire, mantissa)
+    assert _recover_fn(CFG, ca.n_buckets * ca.bucket_elems, "f32",
+                       None) is ea._recover_jit
+
+
+# ----------------------------------------------------------------------
+# Server integration: sharded rounds close out identically
+# ----------------------------------------------------------------------
+
+def test_sharded_server_matches_unsharded_server_with_deferrals():
+    """Two servers — sequential and sharded+batched — replay the same
+    two-round schedule with a straggler deferral: outputs, reports, and
+    the loss-free residual carry are bit-identical."""
+    sim = FailureSimulator(straggle_at=((0, 2, 5.0),))
+    servers = [
+        ElasticServer(TEMPLATE, CFG,
+                      policy=AdmissionPolicy(max_cohort=8, quorum=0.5,
+                                             deadline_s=1.0)),
+        ElasticServer(TEMPLATE, CFG,
+                      policy=AdmissionPolicy(max_cohort=8, quorum=0.5,
+                                             deadline_s=1.0),
+                      n_shards=2, batch_size=2),
+    ]
+    outs = []
+    for srv in servers:
+        clients = [ElasticClient(w, CFG) for w in range(4)]
+        for w in range(4):
+            srv.join(w)
+        round_outs = []
+        for rnd in range(2):
+            contract = srv.open_round()
+            for w in sorted(range(4)):     # canonical arrival order
+                p = clients[w].contribute(contract,
+                                          dyadic_tree(700 + 10 * rnd + w))
+                srv.submit(p, arrival_s=sim.client_delay(rnd, w))
+            out, rep = srv.close_round(now_s=1.5)
+            round_outs.append((out, rep))
+        outs.append(round_outs)
+    for (o_a, r_a), (o_b, r_b) in zip(*outs):
+        assert np.array_equal(o_a, o_b)               # bit-for-bit
+        assert r_a.folded == r_b.folded
+        assert r_a.deferred == r_b.deferred
+        assert r_a.close_reason == r_b.close_reason
+        assert r_a.rx_bytes_total == r_b.rx_bytes_total
+        assert r_a.residual_carried_in == r_b.residual_carried_in
+    # round 0 deferred the straggler, round 1 carried it back in
+    assert outs[0][0][1].deferred == 1
+    assert outs[0][1][1].residual_carried_in
+
+
+def test_sharded_service_validation_mirrors_sequential():
+    plan = _plan()
+    contract = negotiate_contract(0, (0, 1), plan, CFG)
+    svc = ShardedFoldService(contract, CFG, n_shards=2, batch_size=2,
+                             plan=plan)
+    st = svc.init_state()
+    p = ElasticClient(0, CFG).contribute(contract, dyadic_tree(1))
+    svc.fold(st, p)
+    from repro.elastic import FoldError, StaleContractError
+    with pytest.raises(FoldError, match="already contributed"):
+        svc.fold(st, p)
+    with pytest.raises(FoldError, match="not in this round's cohort"):
+        svc.fold(st, ElasticClient(9, CFG).contribute(
+            contract, dyadic_tree(2)))
+    with pytest.raises(StaleContractError, match="re-encode"):
+        stale = dataclasses.replace(p, contract_id="r9:bogus")
+        svc.fold(st, stale)
+    with pytest.raises(FoldError, match="nothing folded"):
+        svc.finalize(svc.init_state())
+    with pytest.raises(ValueError, match="batch_size"):
+        ShardedFoldService(contract, CFG, n_shards=2, batch_size=0)

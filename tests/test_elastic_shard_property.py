@@ -1,0 +1,85 @@
+"""Hypothesis property test (PR 10): sharded+batched fold == PR 9
+sequential fold bit-for-bit — outputs AND per-client RX/retransmit
+accounting — over random cohort sizes, shard counts, microbatch sizes,
+and arrival permutations, for both wires.
+
+``tests/test_elastic_shard.py::test_randomized_parity_sweep`` is the
+seeded fallback that runs without the 'test' extra; this module is the
+generative version.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need the 'test' extra (pip install -e .[test])")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bucketing import make_bucket_plan
+from repro.core.config import CompressionConfig
+from repro.elastic import (ElasticClient, FoldEngine, ShardedFoldService,
+                           negotiate_contract)
+from repro.ft.failures import SwitchRetransmitPolicy
+
+CFG = CompressionConfig(ratio=1.0, lanes=128, rows=6, rounds=10,
+                        chunk_blocks=8, topk_ratio=0.1, topk_exact=True,
+                        error_feedback=True, bucket_bytes=2 * 768 * 4)
+CFG_FX = dataclasses.replace(CFG, wire_dtype="fxp32")
+SHAPES = {"a": (7000,), "b": (50, 40)}
+
+
+def _tree(seed):
+    r = np.random.default_rng(seed)
+    return {k: (r.normal(size=sh) * np.pi).astype(np.float32)
+            for k, sh in SHAPES.items()}
+
+
+@settings(max_examples=12, deadline=None)
+@given(data=st.data(),
+       wire=st.sampled_from(["f32", "fxp32"]),
+       n_clients=st.integers(2, 7),
+       batch_size=st.integers(1, 8),
+       seed=st.integers(0, 2**31))
+def test_sharded_batched_fold_is_bitwise_equal_to_sequential(
+        data, wire, n_clients, batch_size, seed):
+    cfg = CFG if wire == "f32" else CFG_FX
+    r = np.random.default_rng(seed)
+    cohort = tuple(sorted(r.choice(128, size=n_clients,
+                                   replace=False).tolist()))
+    plan = make_bucket_plan(
+        {k: np.zeros(sh, np.float32) for k, sh in SHAPES.items()}, cfg)
+    n_shards = data.draw(st.integers(1, plan.n_buckets))
+    contract = negotiate_contract(0, cohort, plan, cfg)
+    clients = {c: ElasticClient(c, cfg) for c in cohort}
+    seq = FoldEngine(contract, cfg)
+    svc = ShardedFoldService(contract, cfg, n_shards=n_shards,
+                             batch_size=batch_size, plan=plan)
+    st_seq, st_sh = seq.init_state(), svc.init_state()
+    if wire == "fxp32":
+        for i, c in enumerate(cohort):
+            p = clients[c].propose(contract, _tree(seed + i))
+            seq.propose_exponents(st_seq, c, p.exponents)
+            svc.propose_exponents(st_sh, c, p.exponents)
+        sealed = seq.seal_exponents(st_seq)
+        svc.seal_exponents(st_sh)
+        payloads = {c: clients[c].payload(contract, sealed)
+                    for c in cohort}
+    else:
+        payloads = {c: clients[c].contribute(contract, _tree(seed + i))
+                    for i, c in enumerate(cohort)}
+    delays = {c: float(r.choice([0.0, 0.07, 0.16])) for c in cohort}
+    pol_a = SwitchRetransmitPolicy(timeout_s=0.05, max_retries=64)
+    pol_b = SwitchRetransmitPolicy(timeout_s=0.05, max_retries=64)
+    # sequential reference in canonical (client-sorted) order; the
+    # sharded service in a drawn arrival permutation
+    perm = list(r.permutation(list(cohort)))
+    for c in sorted(cohort):
+        seq.fold(st_seq, payloads[c], arrival_s=delays[c], policy=pol_a)
+    for c in perm:
+        svc.fold(st_sh, payloads[c], arrival_s=delays[c], policy=pol_b)
+    assert np.array_equal(seq.finalize(st_seq), svc.finalize(st_sh))
+    assert st_seq.rx_bytes == st_sh.rx_bytes
+    assert st_seq.retransmits == st_sh.retransmits
